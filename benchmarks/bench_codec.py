@@ -1,0 +1,49 @@
+"""Codec throughput (software paths).  The paper's §VII-B area/power/
+throughput numbers are 65nm-ASIC facts with no TPU analogue; what matters
+for the TPU adaptation is that the lane-vectorized codec keeps up with HBM
+when replicated (DESIGN.md §2) — here we measure the CPU software paths
+(jnp ref codec, golden) for regression tracking, and the per-value step
+counts that map to TPU cycles.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ac_golden, distributions, format as fmt, tables
+from repro.kernels import ref
+
+
+def main(emit) -> None:
+    n = 1 << 21
+    v = distributions.gaussian_weights(n)
+    table = tables.table_for(v[:1 << 18])
+    ta = ref.TableArrays.from_table(table)
+    streams, _ = fmt.split_streams(v.astype(np.int64), 512)
+    sj = jnp.asarray(streams)
+
+    sp, op, sb, ob, st = ref.encode(sj, ta, 512)          # compile
+    t0 = time.perf_counter()
+    sp, op, sb, ob, st = ref.encode(sj, ta, 512)
+    sp.block_until_ready()
+    enc_dt = time.perf_counter() - t0
+
+    out = ref.decode(sp.astype(jnp.uint32), op.astype(jnp.uint32), st, ta, 512)
+    out.block_until_ready()
+    t0 = time.perf_counter()
+    out = ref.decode(sp.astype(jnp.uint32), op.astype(jnp.uint32), st, ta, 512)
+    out.block_until_ready()
+    dec_dt = time.perf_counter() - t0
+
+    emit("codec/ref_encode", enc_dt * 1e6,
+         f"{n / enc_dt / 1e6:.1f} Mvals/s ({streams.shape[0]} streams)")
+    emit("codec/ref_decode", dec_dt * 1e6,
+         f"{n / dec_dt / 1e6:.1f} Mvals/s")
+
+    # golden (pure python) on a small slice, for scale
+    t0 = time.perf_counter()
+    ac_golden.encode_stream(v[:8192].astype(np.int64), table)
+    g_dt = time.perf_counter() - t0
+    emit("codec/golden_encode", g_dt * 1e6, f"{8192 / g_dt / 1e3:.1f} Kvals/s")

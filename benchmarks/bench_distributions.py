@@ -1,0 +1,18 @@
+"""Paper Fig. 2: cumulative value distributions of int8 weights and
+activations — verifies the bimodal (near-0 / near-255) shape APack exploits.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import distributions
+
+
+def main(emit) -> None:
+    for name, gen in distributions.PAPER_LIKE.items():
+        v = np.sort(gen(1 << 18).astype(np.int64))
+        q = {p: int(v[int(p / 100 * (v.size - 1))]) for p in (10, 25, 50, 75, 90)}
+        lo = float(np.mean(v <= 16) * 100)
+        hi = float(np.mean(v >= 240) * 100)
+        emit(f"distributions/{name}", 0.0,
+             f"p10..p90={list(q.values())} low16={lo:.0f}% high240={hi:.0f}%")

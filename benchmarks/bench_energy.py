@@ -1,0 +1,50 @@
+"""Paper Fig. 6: normalized off-chip energy.
+
+Methodology mirror: the paper runs compressed traffic volumes through
+Micron's DDR4 power model and adds the codec engines' power (4.7% of the
+DRAM system at 90% utilization).  We use energy-per-bit constants
+(DDR4-3200 ~20 pJ/bit end-to-end; HBM2e/TPU ~3.5 pJ/bit) times measured
+compression ratios, plus the same fractional codec overhead.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import distributions, tables
+from repro.kernels import fastpath
+
+DDR4_PJ_PER_BIT = 20.0
+HBM_PJ_PER_BIT = 3.5
+CODEC_OVERHEAD = 0.047        # paper: 64 engines = 4.7% of DRAM power
+
+
+def energy_row(name: str, v: np.ndarray, is_act: bool) -> dict:
+    table = tables.table_for(np.asarray(v).reshape(-1)[:1 << 20],
+                             is_activation=is_act)
+    ct = fastpath.compress_np(v, table)
+    ratio = v.size * 8 / max(ct.total_bits, 1)
+    base_e = v.size * 8 * DDR4_PJ_PER_BIT
+    apack_e = (v.size * 8 / ratio) * DDR4_PJ_PER_BIT * (1 + CODEC_OVERHEAD)
+    return {"tensor": name, "ratio": ratio,
+            "normalized_energy": apack_e / base_e,
+            "savings_pct": 100 * (1 - apack_e / base_e)}
+
+
+def main(emit) -> None:
+    n = 1 << 20
+    cases = {
+        "pruned_weights (AlexNet-Eyeriss-like)": (
+            distributions.pruned_weights(n, sparsity=0.89), False),
+        "pruned_weights (GoogLeNet-Eyeriss-like)": (
+            distributions.pruned_weights(n, sparsity=0.7), False),
+        "gaussian_weights": (distributions.gaussian_weights(n), False),
+        "noisy_weights (NCF-like)": (distributions.noisy_weights(n), False),
+        "relu_activations": (distributions.relu_activations(n), True),
+    }
+    for name, (v, is_act) in cases.items():
+        r = energy_row(name, v, is_act)
+        emit(f"energy/{name}", 0.0,
+             f"normalized={r['normalized_energy']:.3f} "
+             f"savings={r['savings_pct']:.1f}%")
+    # paper anchors: AlexNet-Eyeriss 91% / GoogLeNet-Eyeriss 72% weight
+    # energy savings; NCF ~13%; activations ~53% (NCF)

@@ -1,0 +1,46 @@
+"""§Roofline: read the dry-run JSONs and print the per-cell roofline table
+(compute / memory / collective seconds per device, dominant term, useful-
+FLOPs ratio).  Run the sweep first:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN_DIR = Path("runs/dryrun2")
+
+
+def load_cells(mesh: str | None = None) -> list[dict]:
+    cells = []
+    if not DRYRUN_DIR.exists():
+        return cells
+    for p in sorted(DRYRUN_DIR.glob("*.json")):
+        with open(p) as f:
+            c = json.load(f)
+        if mesh and c.get("mesh") != mesh:
+            continue
+        cells.append(c)
+    return cells
+
+
+def main(emit) -> None:
+    cells = load_cells()
+    if not cells:
+        emit("roofline/missing", 0.0, "run launch.dryrun first")
+        return
+    for c in cells:
+        key = f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}"
+        if c["status"] != "ok":
+            emit(key, 0.0, f"SKIP: {c.get('reason')}")
+            continue
+        r = c["roofline"]
+        step = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        emit(key, step * 1e6,
+             f"compute={r['compute_s']*1e3:.2f}ms "
+             f"memory={r['memory_s']*1e3:.2f}ms "
+             f"coll={r['collective_s']*1e3:.2f}ms "
+             f"dominant={r['dominant']} "
+             f"useful={r['useful_flops_ratio']:.2f} "
+             f"peak_mem={c['memory']['peak_bytes']/2**30:.1f}GiB")

@@ -1,0 +1,71 @@
+"""Shared benchmark utilities: model-zoo tensor sources + timing."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import quant
+from repro.models import model as M
+
+
+def timed(fn, *args, repeat: int = 3, **kw):
+    fn(*args, **kw)                      # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out) if hasattr(out, "block_until_ready") else None
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt
+
+
+def zoo_weight_samples(max_vals: int = 1 << 20, seed: int = 0
+                       ) -> dict[str, np.ndarray]:
+    """Per-arch int8 (uint view) weight samples from full-width single-block
+    inits.  Random inits are gaussian (trained-weight distributions are more
+    skewed — see bench_traffic's trained-model rows for that case)."""
+    out = {}
+    for arch in configs.all_arch_ids():
+        cfg = configs.get_smoke_config(arch)   # full-width not needed: init
+        params = M.init_params(cfg, jax.random.PRNGKey(seed))
+        leaves = [np.asarray(x) for x in jax.tree.leaves(params)
+                  if hasattr(x, "ndim") and x.ndim >= 2 and x.size > 4096]
+        flat = np.concatenate([l.reshape(-1)[:max_vals // max(len(leaves), 1)]
+                               for l in leaves])[:max_vals]
+        q, _ = quant.quantize_symmetric(jnp.asarray(flat, jnp.float32))
+        out[arch] = quant.to_unsigned(np.asarray(q))
+    return out
+
+
+def zoo_activation_samples(max_vals: int = 1 << 19, seed: int = 0
+                           ) -> dict[str, np.ndarray]:
+    """uint8 activation samples: residual-stream + post-nonlinearity values
+    from a forward pass of each smoke model on synthetic tokens."""
+    out = {}
+    rng = np.random.default_rng(seed)
+    for arch in configs.all_arch_ids():
+        cfg = configs.get_smoke_config(arch)
+        params = M.init_params(cfg, jax.random.PRNGKey(seed))
+        b, s = 4, 128
+        batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)))}
+        if cfg.frontend == "audio":
+            batch = {"frame_embeds": jnp.asarray(
+                rng.normal(0, 1, (b, s, cfg.d_model)), jnp.float32)}
+        elif cfg.frontend == "vision":
+            batch["patch_embeds"] = jnp.asarray(
+                rng.normal(0, 1, (b, 16, cfg.d_model)), jnp.float32)
+        # capture the residual stream after each block (the inter-layer
+        # tensors the paper compresses off-chip)
+        h = M.embed_inputs(cfg, params, batch)
+        acts = [np.asarray(h, np.float32)]
+        for i, kind in enumerate(cfg.cycle):
+            p0 = jax.tree.map(lambda x: x[0], params["blocks"][i])
+            h, _, _ = M.block_full(cfg, kind, p0, h)
+            acts.append(np.asarray(h, np.float32))
+        flat = np.concatenate([a.reshape(-1) for a in acts])[:max_vals]
+        q, _ = quant.quantize_affine(jnp.asarray(flat), bits=8)
+        out[arch] = np.asarray(q)
+    return out

@@ -1,0 +1,45 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from . import (bench_distributions, bench_tablegen, bench_traffic,
+                   bench_energy, bench_speedup, bench_codec, bench_roofline,
+                   bench_trained)
+    mods = [
+        ("distributions(Fig2)", bench_distributions),
+        ("tablegen(TableI)", bench_tablegen),
+        ("traffic(Fig5)", bench_traffic),
+        ("energy(Fig6)", bench_energy),
+        ("speedup(Fig7/8)", bench_speedup),
+        ("codec(§VII-B)", bench_codec),
+        ("trained(§VII-A)", bench_trained),
+        ("roofline(§Roofline)", bench_roofline),
+    ]
+    print("name,us_per_call,derived")
+
+    def emit(name: str, us: float, derived: str) -> None:
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    failed = 0
+    for label, mod in mods:
+        t0 = time.time()
+        try:
+            mod.main(emit)
+            emit(f"_section/{label}", (time.time() - t0) * 1e6, "ok")
+        except Exception as e:
+            failed += 1
+            traceback.print_exc(file=sys.stderr)
+            emit(f"_section/{label}", (time.time() - t0) * 1e6, f"FAILED: {e}")
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

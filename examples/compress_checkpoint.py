@@ -1,0 +1,49 @@
+"""Lossless APack byteplane compression of a training checkpoint
+(beyond-paper: cuts checkpoint storage + restore traffic ~1.2-2x, bit-exact).
+
+    PYTHONPATH=src python examples/compress_checkpoint.py
+"""
+import tempfile
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.ckpt import checkpoint as ckpt
+from repro.models import model as M
+
+
+def main() -> None:
+    cfg = configs.get_smoke_config("qwen3-1.7b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    # make the weights trained-like (small magnitudes, skewed exponents)
+    params = jax.tree.map(
+        lambda x: (x * 0.02).astype(x.dtype) if x.ndim >= 2 else x, params)
+    with tempfile.TemporaryDirectory() as d:
+        t0 = time.time()
+        ckpt.save(Path(d) / "raw", 1, params, compress=False)
+        t_raw = time.time() - t0
+        t0 = time.time()
+        ckpt.save(Path(d) / "apack", 1, params, compress=True)
+        t_comp = time.time() - t0
+
+        def dir_bytes(p):
+            return sum(f.stat().st_size for f in Path(p).rglob("*")
+                       if f.is_file())
+
+        raw = dir_bytes(Path(d) / "raw")
+        comp = dir_bytes(Path(d) / "apack")
+        print(f"raw checkpoint:    {raw / 1e6:8.2f} MB ({t_raw:.1f}s)")
+        print(f"apack checkpoint:  {comp / 1e6:8.2f} MB ({t_comp:.1f}s) "
+              f"-> {raw / comp:.2f}x smaller")
+        restored, _, _ = ckpt.restore(Path(d) / "apack")
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+            assert np.array_equal(np.asarray(a).view(np.uint8),
+                                  np.asarray(b).view(np.uint8))
+        print("restore: bit-exact OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Serve a small model with batched requests from APack-compressed weights
+(paper Fig. 1 integration at the serving layer).
+
+    PYTHONPATH=src python examples/serve_compressed.py
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+if __name__ == "__main__":
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    raise SystemExit(subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "qwen3-1.7b",
+         "--smoke", "--requests", "12", "--prompt-len", "16",
+         "--max-new", "12", "--max-batch", "4"] + sys.argv[1:],
+        env=env).returncode)

@@ -1,0 +1,188 @@
+"""Checkpointing: per-leaf files, atomic commit, async save, optional
+lossless APack compression, and elastic (reshard-on-restore) loading.
+
+Layout::
+
+    <dir>/step_0000123/
+        manifest.json      # tree structure, dtypes, shapes, codec per leaf
+        leaf_00000.bin     # raw bytes or APack byteplane container
+        ...
+        extra.json         # user state (data-pipeline cursors, rng, ...)
+    <dir>/LATEST           # atomically updated pointer
+
+APack compression (beyond paper — see core/byteplane.py): float leaves are
+split into byte planes and each plane is losslessly coded; exponent planes
+of trained weights compress 1.3-2x, mantissa planes fall back to stored
+mode.  Restore is bit-exact.  On a real cluster this directly cuts
+checkpoint-restore network time — the fault-tolerance path's main cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pickle
+import shutil
+import threading
+from pathlib import Path
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import byteplane
+from repro.core import format as fmt
+
+_BF16 = "bfloat16"
+
+
+def _leaf_to_numpy(x) -> np.ndarray:
+    return np.asarray(jax.device_get(x))
+
+
+def _save_leaf(path: Path, arr: np.ndarray, compress: bool) -> dict:
+    info: dict[str, Any] = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+    if compress and arr.dtype.kind == "f" and arr.size >= 4096:
+        cp = byteplane.compress_float(arr)
+        if cp.total_bits < arr.nbytes * 8 * 0.98:
+            with open(path, "wb") as f:
+                pickle.dump(cp, f)
+            info["codec"] = "apack_byteplane"
+            info["stored_bits"] = cp.total_bits
+            return info
+        # compression would not pay (container overhead) -> fall through
+    raw = arr.view(np.uint16) if str(arr.dtype) == _BF16 else arr
+    with open(path, "wb") as f:
+        np.save(f, raw, allow_pickle=False)
+    info["codec"] = "raw"
+    info["stored_bits"] = int(arr.nbytes * 8)
+    return info
+
+
+def _load_leaf(path: Path, info: dict) -> np.ndarray:
+    if info["codec"] == "apack_byteplane":
+        with open(path, "rb") as f:
+            cp = pickle.load(f)
+        return byteplane.decompress_float(cp)
+    with open(path, "rb") as f:
+        raw = np.load(f, allow_pickle=False)
+    if info["dtype"] == _BF16:
+        raw = raw.view(jnp.bfloat16)
+    return raw.reshape(info["shape"])
+
+
+def save(ckpt_dir: str | Path, step: int, tree: Any,
+         extra: dict | None = None, compress: bool = False,
+         keep: int = 3) -> Path:
+    """Atomic checkpoint write.  ``tree`` may be any pytree of arrays."""
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f".tmp_step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    leaves, treedef = jax.tree.flatten(tree)
+    manifest = {"step": step, "treedef": str(treedef), "leaves": []}
+    for i, leaf in enumerate(leaves):
+        arr = _leaf_to_numpy(leaf)
+        name = f"leaf_{i:05d}"
+        info = _save_leaf(tmp / name, arr, compress)
+        info["name"] = name
+        manifest["leaves"].append(info)
+    with open(tmp / "treedef.pkl", "wb") as f:
+        pickle.dump(treedef, f)
+    with open(tmp / "manifest.json", "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(tmp / "extra.json", "w") as f:
+        json.dump(extra or {}, f)
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)                               # atomic commit
+    latest = ckpt_dir / "LATEST"
+    tmp_latest = ckpt_dir / ".LATEST.tmp"
+    tmp_latest.write_text(final.name)
+    tmp_latest.rename(latest)
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: Path, keep: int) -> None:
+    steps = sorted(p for p in ckpt_dir.iterdir()
+                   if p.is_dir() and p.name.startswith("step_"))
+    for p in steps[:-keep]:
+        shutil.rmtree(p, ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str | Path) -> int | None:
+    ckpt_dir = Path(ckpt_dir)
+    pointer = ckpt_dir / "LATEST"
+    if not pointer.exists():
+        return None
+    name = pointer.read_text().strip()
+    if not (ckpt_dir / name / "manifest.json").exists():
+        return None
+    return int(name.split("_")[1])
+
+
+def restore(ckpt_dir: str | Path, step: int | None = None,
+            shardings: Any = None) -> tuple[Any, dict, int]:
+    """Load a checkpoint; if ``shardings`` is given, leaves are device_put
+    with those shardings — this is the elastic-rescale path: the same
+    checkpoint restores onto any mesh shape."""
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:08d}"
+    with open(d / "manifest.json") as f:
+        manifest = json.load(f)
+    with open(d / "treedef.pkl", "rb") as f:
+        treedef = pickle.load(f)
+    leaves = []
+    for info in manifest["leaves"]:
+        arr = _load_leaf(d / info["name"], info)
+        if info["dtype"] == _BF16:
+            arr = arr.astype(jnp.bfloat16) if arr.dtype != jnp.bfloat16 else arr
+        leaves.append(arr)
+    tree = jax.tree.unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+    with open(d / "extra.json") as f:
+        extra = json.load(f)
+    return tree, extra, step
+
+
+class AsyncCheckpointer:
+    """Snapshot-on-main-thread, write-in-background checkpointer."""
+
+    def __init__(self, ckpt_dir: str | Path, compress: bool = False,
+                 keep: int = 3):
+        self.ckpt_dir = Path(ckpt_dir)
+        self.compress = compress
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self.last_error: Exception | None = None
+
+    def save(self, step: int, tree: Any, extra: dict | None = None) -> None:
+        self.wait()
+        snapshot = jax.tree.map(_leaf_to_numpy, tree)   # sync device->host
+
+        def work():
+            try:
+                save(self.ckpt_dir, step, snapshot, extra,
+                     compress=self.compress, keep=self.keep)
+            except Exception as e:                        # pragma: no cover
+                self.last_error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            raise err

@@ -1,0 +1,41 @@
+"""Architecture registry: ``get_config(name)`` / ``get_smoke_config(name)``."""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "qwen3_1_7b", "minitron_4b", "minitron_8b", "command_r_plus_104b",
+    "hubert_xlarge", "paligemma_3b", "dbrx_132b", "kimi_k2_1t_a32b",
+    "xlstm_125m", "recurrentgemma_9b",
+]
+
+# assignment ids -> module names
+ALIASES = {
+    "qwen3-1.7b": "qwen3_1_7b",
+    "minitron-4b": "minitron_4b",
+    "minitron-8b": "minitron_8b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "hubert-xlarge": "hubert_xlarge",
+    "paligemma-3b": "paligemma_3b",
+    "dbrx-132b": "dbrx_132b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "xlstm-125m": "xlstm_125m",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+}
+
+
+def _module(name: str):
+    mod = ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(name: str):
+    return _module(name).CONFIG
+
+
+def get_smoke_config(name: str):
+    return _module(name).SMOKE
+
+
+def all_arch_ids() -> list[str]:
+    return list(ALIASES)

@@ -1,0 +1,10 @@
+"""APack core: the paper's contribution as a composable library."""
+from .tables import ApackTable, find_table, histogram, table_for, uniform_table
+from .format import CompressedTensor, compress, decompress, estimate_bits
+from . import ac_golden, baselines, byteplane, distributions, quant
+
+__all__ = [
+    "ApackTable", "find_table", "histogram", "table_for", "uniform_table",
+    "CompressedTensor", "compress", "decompress", "estimate_bits",
+    "ac_golden", "baselines", "byteplane", "distributions", "quant",
+]

@@ -1,0 +1,104 @@
+"""Lossless APack compression of floating-point tensors via byte planes.
+
+Beyond-paper extension used for checkpoint + optimizer-state compression:
+bf16/fp32 tensors split into byte planes; the exponent-carrying plane of
+trained weights is highly skewed (few distinct exponents), so APack's
+16-range coder compresses it well, while mantissa planes are near-uniform
+and fall back to stored mode automatically.  Exactly lossless — bits in,
+bits out.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from . import format as fmt
+from .tables import table_for
+
+
+@dataclasses.dataclass
+class CompressedPlanes:
+    shape: tuple[int, ...]
+    dtype: str
+    planes: list[fmt.CompressedTensor]
+
+    @property
+    def total_bits(self) -> int:
+        return sum(p.total_bits for p in self.planes)
+
+    @property
+    def original_bits(self) -> int:
+        return sum(p.original_bits for p in self.planes)
+
+    def ratio(self) -> float:
+        return self.original_bits / max(self.total_bits, 1)
+
+
+def _codec(backend: str):
+    """'golden' = pure-Python reference; 'jnp' = vectorized ref codec
+    (bit-identical, ~1000x faster — used for checkpoint-sized leaves)."""
+    if backend == "golden":
+        return fmt.compress, fmt.decompress
+    from repro.kernels import fastpath          # late import: no core->kernels cycle
+    return fastpath.compress_np, fastpath.decompress_np
+
+
+def _plane_entropy(plane: np.ndarray) -> float:
+    h = np.bincount(plane[:2 ** 20], minlength=256).astype(np.float64)
+    p = h[h > 0] / h[h > 0].sum()
+    return float(-(p * np.log2(p)).sum())
+
+
+def compress_float(x: np.ndarray,
+                   elems_per_stream: int = fmt.DEFAULT_ELEMS_PER_STREAM,
+                   backend: str = "jnp") -> CompressedPlanes:
+    arr = np.asarray(x)
+    comp, _ = _codec(backend)
+    raw = arr.view(np.uint8).reshape(arr.size, arr.dtype.itemsize)
+    planes = []
+    for b in range(arr.dtype.itemsize):
+        plane = np.ascontiguousarray(raw[:, b])
+        if _plane_entropy(plane) > 7.5:
+            # near-uniform (mantissa) plane: skip the coder, store verbatim
+            planes.append(_stored_plane(plane, elems_per_stream))
+            continue
+        # profile on a bounded sample; stealing keeps unseen bytes encodable
+        table = table_for(plane[:2 ** 20], bits=8, is_activation=True)
+        planes.append(comp(plane, table, bits=8,
+                           elems_per_stream=elems_per_stream))
+    return CompressedPlanes(shape=tuple(arr.shape), dtype=str(arr.dtype),
+                            planes=planes)
+
+
+def _stored_plane(plane: np.ndarray,
+                  elems_per_stream: int) -> fmt.CompressedTensor:
+    """All-streams-stored container (verbatim bit-pack, no AC)."""
+    import jax.numpy as jnp
+    from repro.kernels import ref as _ref
+    from repro.core.tables import uniform_table
+    flat = plane.reshape(-1).astype(np.int64)
+    streams, n_valid = fmt.split_streams(flat, elems_per_stream)
+    packed = np.asarray(_ref.pack_raw(jnp.asarray(streams),
+                                      streams.shape[1], 8)).astype(np.uint32)
+    s, e = streams.shape
+    return fmt.CompressedTensor(
+        shape=tuple(plane.shape), bits=8, table=uniform_table(),
+        elems_per_stream=elems_per_stream, n_valid=n_valid,
+        sym_plane=np.zeros((0, s), np.uint32), ofs_plane=packed,
+        sym_bits=np.zeros(s, np.int32), ofs_bits=np.full(s, e * 8, np.int32),
+        stored=np.ones(s, bool))
+
+
+def decompress_float(cp: CompressedPlanes, backend: str = "jnp") -> np.ndarray:
+    _, decomp = _codec(backend)
+    cols = [decomp(p).reshape(-1, 1) for p in cp.planes]
+    raw = np.concatenate(cols, axis=1)
+    return raw.reshape(-1).view(jnp_like_dtype(cp.dtype)).reshape(cp.shape)
+
+
+def jnp_like_dtype(name: str):
+    if name == "bfloat16":
+        import ml_dtypes
+        return np.dtype(ml_dtypes.bfloat16)
+    return np.dtype(name)

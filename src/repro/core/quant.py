@@ -1,0 +1,111 @@
+"""Fixed-point quantization utilities.
+
+APack (the paper) operates on fixed-point quantized tensors: the value space
+is ``[0, 2^B - 1]`` (uint view).  Signed int8 tensors are handled through a
+bias-by-128 view so that small negative values land near 255 and small
+positive values near 0 — exactly the bimodal CDF shape of paper Fig. 2.
+
+Everything here is pure JAX/numpy and differentiability is not required
+(inference-side quantization, gradient compression uses straight
+quant/dequant with error feedback implemented in ``train/compress_grads``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "QuantParams",
+    "quantize_symmetric",
+    "dequantize_symmetric",
+    "quantize_affine",
+    "dequantize_affine",
+    "to_unsigned",
+    "from_unsigned",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantParams:
+    """Metadata needed to invert a quantization."""
+
+    scale: jax.Array          # broadcastable against the tensor
+    zero_point: jax.Array     # same; 0 for symmetric
+    bits: int = 8
+    signed: bool = True
+    axis: int | None = None   # per-channel axis, None = per-tensor
+
+
+def _absmax(x: jax.Array, axis: int | None) -> jax.Array:
+    if axis is None:
+        return jnp.max(jnp.abs(x))
+    red = tuple(i for i in range(x.ndim) if i != axis % x.ndim)
+    return jnp.max(jnp.abs(x), axis=red, keepdims=True)
+
+
+def quantize_symmetric(x: jax.Array, bits: int = 8, axis: int | None = None):
+    """Symmetric signed quantization to ``bits`` (stored in int8/int16)."""
+    qmax = 2 ** (bits - 1) - 1
+    amax = _absmax(x, axis)
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax)
+    dtype = jnp.int8 if bits <= 8 else jnp.int16
+    return q.astype(dtype), QuantParams(scale=scale, zero_point=jnp.zeros_like(scale),
+                                        bits=bits, signed=True, axis=axis)
+
+
+def dequantize_symmetric(q: jax.Array, params: QuantParams) -> jax.Array:
+    return q.astype(jnp.float32) * params.scale
+
+
+def quantize_affine(x: jax.Array, bits: int = 8, axis: int | None = None):
+    """Affine (asymmetric) quantization to unsigned ``bits``."""
+    qmax = 2 ** bits - 1
+    if axis is None:
+        lo, hi = jnp.min(x), jnp.max(x)
+    else:
+        red = tuple(i for i in range(x.ndim) if i != axis % x.ndim)
+        lo = jnp.min(x, axis=red, keepdims=True)
+        hi = jnp.max(x, axis=red, keepdims=True)
+    scale = jnp.maximum(hi - lo, 1e-12) / qmax
+    zp = jnp.round(-lo / scale)
+    q = jnp.clip(jnp.round(x / scale) + zp, 0, qmax)
+    dtype = jnp.uint8 if bits <= 8 else jnp.uint16
+    return q.astype(dtype), QuantParams(scale=scale, zero_point=zp, bits=bits,
+                                        signed=False, axis=axis)
+
+
+def dequantize_affine(q: jax.Array, params: QuantParams) -> jax.Array:
+    return (q.astype(jnp.float32) - params.zero_point) * params.scale
+
+
+def to_unsigned(q, bits: int = 8):
+    """Two's-complement reinterpretation: signed ``q`` -> uint value space.
+
+    int8 ``v`` maps to ``v & 0xFF``: small positives stay near 0, small
+    negatives land near 2^bits - 1 (paper Fig. 2's bimodal shape).  Works for
+    numpy and jax arrays.
+    """
+    mask = (1 << bits) - 1
+    if isinstance(q, np.ndarray):
+        return (q.astype(np.int64) & mask).astype(np.uint16 if bits > 8 else np.uint8)
+    return (q.astype(jnp.int32) & mask).astype(jnp.uint16 if bits > 8 else jnp.uint8)
+
+
+def from_unsigned(u, bits: int = 8, signed: bool = True):
+    """Inverse of :func:`to_unsigned`."""
+    if isinstance(u, np.ndarray):
+        v = u.astype(np.int64)
+        if signed:
+            half = 1 << (bits - 1)
+            v = np.where(v >= half, v - (1 << bits), v)
+        return v.astype(np.int8 if bits <= 8 else np.int16) if signed else u
+    v = u.astype(jnp.int32)
+    if signed:
+        half = 1 << (bits - 1)
+        v = jnp.where(v >= half, v - (1 << bits), v)
+        return v.astype(jnp.int8 if bits <= 8 else jnp.int16)
+    return u

@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, SyntheticLM, BinTokenDataset, Prefetcher, write_bin

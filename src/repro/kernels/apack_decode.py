@@ -1,0 +1,134 @@
+"""Pallas TPU decoder kernel for APack streams.
+
+TPU mapping of the paper's decoder array (§V-A): one *grid program* decodes a
+block of ``BLOCK_STREAMS`` substreams, one stream per vector lane, stepping
+``fori_loop`` over symbols — the lane dimension plays the role of the paper's
+replicated decoder engines, the loop plays the per-cycle step.  BlockSpecs
+tile the word-interleaved planes so each program's working set (compressed
+words in + decoded block out) sits in VMEM; on real hardware the HBM->VMEM
+DMA moves only compressed words, which is exactly where the paper's off-chip
+traffic saving materializes.
+
+Per-step state (HI/LO/CODE registers, bit cursors) is a handful of
+[BLOCK_STREAMS] i32 vectors — the Pallas analogue of the paper's "3 16b and
+1 8b registers" per engine.  The per-lane dynamic word fetch
+(``take_along_axis`` on the VMEM-resident plane) lowers to a TPU vector
+gather along the sublane dimension; validated bit-exact in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.ac_golden import HALF, MAX_RENORM, PCOUNT_BITS, QUARTER, THREEQ, TOP
+from .ref import read_bits
+
+I32 = jnp.int32
+U32 = jnp.uint32
+BLOCK_STREAMS = 128
+
+
+def decode_block(sym_plane, ofs_plane, stored, v_min, ol, cum,
+                 *, n_steps: int, bits: int):
+    """Decode a [*, NS] stream block to values i32[NS, n_steps].
+
+    Pure-jnp body shared by the standalone decoder kernel and the fused
+    decompress+matmul kernel."""
+    ns = sym_plane.shape[1]
+    zeros = jnp.zeros((ns,), I32)
+
+    def load_code(i, st):
+        code, spos = st
+        b = read_bits(sym_plane, spos, jnp.ones_like(spos)).astype(I32)
+        return code * 2 + b, spos + 1
+
+    code0, spos0 = jax.lax.fori_loop(0, 16, load_code, (zeros, zeros))
+
+    def step(i, carry):
+        low, high, code, spos, opos, out = carry
+        rng = high - low + 1
+        cum_val = ((code - low + 1) * (1 << PCOUNT_BITS) - 1) // rng
+        s_idx = jnp.sum((cum_val[:, None] >= cum[None, :-1]).astype(I32),
+                        axis=1) - 1
+        ol_s = jnp.take(ol, s_idx)
+        clo = jnp.take(cum, s_idx)
+        chi = jnp.take(cum, s_idx + 1)
+        off_val = read_bits(ofs_plane, opos, ol_s).astype(I32)
+        value_ac = jnp.take(v_min, s_idx) + off_val
+        value_st = read_bits(ofs_plane, opos,
+                             jnp.full_like(opos, bits)).astype(I32)
+        value = jnp.where(stored, value_st, value_ac)
+        opos = opos + jnp.where(stored, bits, ol_s)
+        high2 = low + ((rng * chi) >> PCOUNT_BITS) - 1
+        low2 = low + ((rng * clo) >> PCOUNT_BITS)
+
+        def renorm(j, st):
+            lo, hi, cd, sp, act = st
+            c1 = hi < HALF
+            c2 = lo >= HALF
+            c3 = (lo >= QUARTER) & (hi < THREEQ)
+            do = act & (c1 | c2 | c3)
+            sub = jnp.where(c1, 0, jnp.where(c2, HALF, QUARTER))
+            bit = read_bits(sym_plane, sp, jnp.ones_like(sp)).astype(I32)
+            lo_n = (lo - sub) * 2
+            hi_n = (hi - sub) * 2 + 1
+            cd_n = (cd - sub) * 2 + bit
+            return (jnp.where(do, lo_n, lo), jnp.where(do, hi_n, hi),
+                    jnp.where(do, cd_n, cd), sp + do.astype(I32), do)
+
+        low3, high3, code3, spos3, _ = jax.lax.fori_loop(
+            0, MAX_RENORM, renorm,
+            (low2, high2, code, spos, jnp.logical_not(stored)))
+        low3 = jnp.where(stored, low, low3)
+        high3 = jnp.where(stored, high, high3)
+        out = jax.lax.dynamic_update_slice(out, value[:, None], (0, i))
+        return (low3, high3, code3, spos3, opos, out)
+
+    init = (zeros, jnp.full((ns,), TOP, I32), code0, spos0, zeros,
+            jnp.zeros((ns, n_steps), I32))
+    carry = jax.lax.fori_loop(0, n_steps, step, init)
+    return carry[-1]
+
+
+def _decode_kernel(sym_ref, ofs_ref, stored_ref, vmin_ref, ol_ref, cum_ref,
+                   out_ref, *, n_steps: int, bits: int):
+    out_ref[...] = decode_block(
+        sym_ref[...].astype(U32), ofs_ref[...].astype(U32),
+        stored_ref[...] != 0, vmin_ref[...], ol_ref[...], cum_ref[...],
+        n_steps=n_steps, bits=bits)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_steps", "bits", "block_streams",
+                                    "interpret"))
+def decode_pallas(sym_plane: jax.Array, ofs_plane: jax.Array,
+                  stored: jax.Array, v_min: jax.Array, ol: jax.Array,
+                  cum: jax.Array, *, n_steps: int, bits: int = 8,
+                  block_streams: int = BLOCK_STREAMS,
+                  interpret: bool = True) -> jax.Array:
+    """Decode S streams (S must be a multiple of ``block_streams``;
+    ``ops.apack_decode`` handles padding).  Returns i32[S, n_steps]."""
+    ws, s = sym_plane.shape
+    wo = ofs_plane.shape[0]
+    assert s % block_streams == 0, "pad streams before calling the kernel"
+    grid = (s // block_streams,)
+    kernel = functools.partial(_decode_kernel, n_steps=n_steps, bits=bits)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ws, block_streams), lambda j: (0, j)),
+            pl.BlockSpec((wo, block_streams), lambda j: (0, j)),
+            pl.BlockSpec((block_streams,), lambda j: (j,)),
+            pl.BlockSpec((17,), lambda j: (0,)),
+            pl.BlockSpec((16,), lambda j: (0,)),
+            pl.BlockSpec((17,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_streams, n_steps), lambda j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, n_steps), I32),
+        interpret=interpret,
+    )(sym_plane.astype(U32), ofs_plane.astype(U32), stored.astype(I32),
+      v_min.astype(I32), ol.astype(I32), cum.astype(I32))

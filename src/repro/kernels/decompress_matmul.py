@@ -1,0 +1,173 @@
+"""Fused APack-decompress + matmul Pallas kernel.
+
+This is the TPU materialization of the paper's Figure 1: the accelerator's
+compute units (here: the MXU ``jnp.dot``) consume *decompressed* values that
+never exist in off-chip memory.  The weight matrix lives in HBM as
+word-interleaved APack planes; each grid step DMAs one compressed tile's
+slot into VMEM (BlockSpec), lane-decodes it (``decode_block``), dequantizes,
+and feeds the MXU — so HBM traffic for weights is the compressed footprint,
+exactly the saving the paper's memory-controller codec achieves.
+
+Weight layout: W[K, N] is tiled into (K // E) x (N // NS) tiles; stream
+``c`` of tile (k, j) holds column ``j*NS + c`` over rows ``k*E..(k+1)*E``.
+Streams of one tile are adjacent columns of the planes, so the BlockSpec
+slice [*, NS] is one tile's slot.  Fixed-size slots (global max words) keep
+the layout BlockSpec-indexable; on real hardware the per-stream directory
+enables dynamic-length DMA instead (documented trade-off: the *slotted*
+ratio vs the *payload* ratio of ``CompressedTensor``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import format as fmt
+from repro.core.tables import ApackTable, find_table, histogram
+from .apack_decode import decode_block
+from . import ref as _ref
+
+I32 = jnp.int32
+U32 = jnp.uint32
+TILE_N = 128      # streams per tile == lane count
+DEFAULT_TILE_K = 512
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CompressedLinear:
+    """An APack-compressed [K, N] weight matrix + dequant metadata."""
+
+    sym_plane: jax.Array     # u32[Ws, S_total]
+    ofs_plane: jax.Array     # u32[Wo, S_total]
+    stored: jax.Array        # i32[S_total]
+    v_min: jax.Array
+    ol: jax.Array
+    cum: jax.Array
+    scale: jax.Array         # f32[N_pad] per-output-channel dequant scale
+    k: int                   # original K
+    n: int                   # original N
+    tile_k: int
+    payload_bits: int        # actual compressed payload (for traffic models)
+
+    def tree_flatten(self):
+        return ((self.sym_plane, self.ofs_plane, self.stored, self.v_min,
+                 self.ol, self.cum, self.scale),
+                (self.k, self.n, self.tile_k, self.payload_bits))
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, *aux)
+
+    @property
+    def k_pad(self) -> int:
+        return -(-self.k // self.tile_k) * self.tile_k
+
+    @property
+    def n_pad(self) -> int:
+        return -(-self.n // TILE_N) * TILE_N
+
+
+def compress_linear(w: np.ndarray, tile_k: int = DEFAULT_TILE_K,
+                    table: ApackTable | None = None) -> CompressedLinear:
+    """Quantize (symmetric int8 per-channel) + APack-compress a weight matrix."""
+    w = np.asarray(w, np.float32)
+    k, n = w.shape
+    amax = np.maximum(np.abs(w).max(axis=0), 1e-12)      # per column
+    scale = amax / 127.0
+    q = np.clip(np.round(w / scale[None, :]), -127, 127).astype(np.int64)
+    u = (q & 0xFF).astype(np.uint8)                      # two's complement view
+    k_pad = -(-k // tile_k) * tile_k
+    n_pad = -(-n // TILE_N) * TILE_N
+    up = np.zeros((k_pad, n_pad), np.uint8)              # pad with 0 == q 0
+    up[:k, :n] = u
+    if table is None:
+        table = find_table(histogram(up), bits=8, is_activation=False)
+    # stream layout: tile (kt, jt), stream c -> column of planes
+    nk, nn = k_pad // tile_k, n_pad // TILE_N
+    streams = (up.reshape(nk, tile_k, nn, TILE_N)
+                 .transpose(0, 2, 3, 1)                  # [nk, nn, NS, E]
+                 .reshape(nk * nn * TILE_N, tile_k))
+    ta = _ref.TableArrays.from_table(table)
+    sp, op, sb, ob, stored = _ref.encode(jnp.asarray(streams.astype(np.int64)),
+                                         ta, tile_k, 8)
+    payload = int(np.asarray(sb).sum() + np.asarray(ob).sum())
+    scale_pad = np.zeros(n_pad, np.float32)
+    scale_pad[:n] = scale
+    return CompressedLinear(sym_plane=sp, ofs_plane=op,
+                            stored=stored.astype(I32), v_min=ta.v_min,
+                            ol=ta.ol, cum=ta.cum,
+                            scale=jnp.asarray(scale_pad), k=k, n=n,
+                            tile_k=tile_k, payload_bits=payload)
+
+
+def _fused_kernel(x_ref, sym_ref, ofs_ref, stored_ref, vmin_ref, ol_ref,
+                  cum_ref, scale_ref, out_ref, *, tile_k: int, nk: int):
+    kt = pl.program_id(2)
+    vals = decode_block(sym_ref[...].astype(U32), ofs_ref[...].astype(U32),
+                        stored_ref[...] != 0, vmin_ref[...], ol_ref[...],
+                        cum_ref[...], n_steps=tile_k, bits=8)   # [NS, E]
+    # two's-complement reinterpret + per-channel dequant
+    signed = jnp.where(vals >= 128, vals - 256, vals).astype(jnp.float32)
+    w_tile = signed.T * scale_ref[...][None, :]          # [E, NS] f32
+    acc = jnp.dot(x_ref[...].astype(jnp.float32), w_tile,
+                  preferred_element_type=jnp.float32)
+
+    @pl.when(kt == 0)
+    def _init():
+        out_ref[...] = acc
+
+    @pl.when(kt > 0)
+    def _accum():
+        out_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_m"))
+def compressed_matmul(x: jax.Array, cw: CompressedLinear,
+                      interpret: bool = True, block_m: int = 256) -> jax.Array:
+    """``x @ W`` where W is APack-compressed; x: f32/bf16 [M, K]."""
+    m, k = x.shape
+    assert k == cw.k, f"K mismatch: {k} vs {cw.k}"
+    k_pad, n_pad = cw.k_pad, cw.n_pad
+    nk, nn = k_pad // cw.tile_k, n_pad // TILE_N
+    m_pad = -(-m // block_m) * block_m
+    xp = jnp.pad(x, ((0, m_pad - m), (0, k_pad - k)))
+    ws, wo = cw.sym_plane.shape[0], cw.ofs_plane.shape[0]
+    grid = (m_pad // block_m, nn, nk)
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, tile_k=cw.tile_k, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, cw.tile_k), lambda i, j, kt: (i, kt)),
+            pl.BlockSpec((ws, TILE_N), lambda i, j, kt: (0, kt * nn + j)),
+            pl.BlockSpec((wo, TILE_N), lambda i, j, kt: (0, kt * nn + j)),
+            pl.BlockSpec((TILE_N,), lambda i, j, kt: (kt * nn + j,)),
+            pl.BlockSpec((17,), lambda i, j, kt: (0,)),
+            pl.BlockSpec((16,), lambda i, j, kt: (0,)),
+            pl.BlockSpec((17,), lambda i, j, kt: (0,)),
+            pl.BlockSpec((TILE_N,), lambda i, j, kt: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, TILE_N), lambda i, j, kt: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n_pad), jnp.float32),
+        interpret=interpret,
+    )(xp, cw.sym_plane, cw.ofs_plane, cw.stored, cw.v_min, cw.ol, cw.cum,
+      cw.scale)
+    return out[:m, :cw.n]
+
+
+def reference_matmul(x: jax.Array, cw: CompressedLinear) -> jax.Array:
+    """Oracle: decode with the jnp reference, dequant, dense matmul."""
+    e = cw.tile_k
+    table = _ref.TableArrays(cw.v_min, cw.ol, cw.cum)
+    vals = _ref.decode(cw.sym_plane, cw.ofs_plane, cw.stored.astype(bool),
+                       table, e, 8)
+    nk, nn = cw.k_pad // e, cw.n_pad // TILE_N
+    w = (vals.reshape(nk, nn, TILE_N, e).transpose(0, 3, 1, 2)
+             .reshape(cw.k_pad, cw.n_pad))
+    signed = jnp.where(w >= 128, w - 256, w).astype(jnp.float32)
+    wf = signed * cw.scale[None, :]
+    return (x.astype(jnp.float32) @ wf[:cw.k])[:, :cw.n]

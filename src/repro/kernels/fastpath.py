@@ -1,0 +1,57 @@
+"""numpy-in/numpy-out fast codec path (vectorized jnp ref under the hood).
+
+Produces/consumes ``core.format.CompressedTensor`` bit-identically to the
+golden compressor — used by checkpoint compression and benchmarks where the
+pure-Python golden codec would be too slow.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import format as fmt
+from repro.core.tables import ApackTable
+from . import ref as _ref
+
+
+def compress_np(values: np.ndarray, table: ApackTable | None = None,
+                bits: int = 8, is_activation: bool = False,
+                elems_per_stream: int = fmt.DEFAULT_ELEMS_PER_STREAM
+                ) -> fmt.CompressedTensor:
+    arr = np.asarray(values)
+    flat = arr.reshape(-1).astype(np.int64)
+    if table is None:
+        table = fmt.table_for(flat, bits, is_activation)
+    streams, n_valid = fmt.split_streams(flat, elems_per_stream)
+    pad = fmt._pad_value(table)
+    if n_valid < streams.size:
+        streams.reshape(-1)[n_valid:] = pad
+    ta = _ref.TableArrays.from_table(table)
+    e = streams.shape[1]
+    sp, op, sb, ob, stored = _ref.encode(jnp.asarray(streams), ta, e, bits)
+    sb = np.asarray(sb, np.int32)
+    ob = np.asarray(ob, np.int32)
+    stored = np.asarray(stored, bool)
+    # trim planes to the golden container's width (max actual words)
+    ws = int(np.max(np.where(stored, 0, (sb + 31) // 32), initial=0))
+    wo = int(np.max((ob + 31) // 32, initial=0))
+    return fmt.CompressedTensor(
+        shape=tuple(arr.shape), bits=bits, table=table,
+        elems_per_stream=elems_per_stream, n_valid=n_valid,
+        sym_plane=np.asarray(sp)[:ws].astype(np.uint32),
+        ofs_plane=np.asarray(op)[:wo].astype(np.uint32),
+        sym_bits=sb, ofs_bits=ob, stored=stored)
+
+
+def decompress_np(ct: fmt.CompressedTensor) -> np.ndarray:
+    ta = _ref.TableArrays.from_table(ct.table)
+    s = ct.n_streams
+    sym = ct.sym_plane if ct.sym_plane.shape[0] else np.zeros((1, s), np.uint32)
+    ofs = ct.ofs_plane if ct.ofs_plane.shape[0] else np.zeros((1, s), np.uint32)
+    vals = _ref.decode(jnp.asarray(sym.astype(np.uint32)),
+                       jnp.asarray(ofs.astype(np.uint32)),
+                       jnp.asarray(ct.stored), ta, ct.elems_per_stream,
+                       ct.bits)
+    flat = np.asarray(vals).reshape(-1)[:ct.n_valid]
+    dtype = np.uint8 if ct.bits <= 8 else np.uint16
+    return flat.astype(dtype).reshape(ct.shape)

@@ -1,0 +1,341 @@
+"""Vectorized pure-jnp multi-stream APack codec — the kernel oracle.
+
+This is the paper's §V-B replication strategy in TPU-native form: instead of
+64 discrete encoder/decoder engines, S independent substreams are coded in
+lockstep, one stream per vector lane, with ``lax.scan`` playing the role of
+the hardware's per-cycle step.  The arithmetic is the *identical*
+finite-precision coder as ``core/ac_golden.py`` (16-bit HI/LO windows,
+10-bit counts, WNC renormalization) and is asserted bit-exact against it.
+
+The Pallas kernels in ``apack_decode.py`` / ``apack_encode.py`` mirror this
+file operation-for-operation; this module doubles as the production software
+path on CPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ac_golden import (HALF, MAX_PENDING, MAX_RENORM, PCOUNT_BITS,
+                                  QUARTER, THREEQ, TOP)
+from repro.core.tables import ApackTable
+
+U32 = jnp.uint32
+I32 = jnp.int32
+
+
+class TableArrays(NamedTuple):
+    """jnp view of an ApackTable (17/16/17-entry vectors)."""
+    v_min: jax.Array   # i32[17]
+    ol: jax.Array      # i32[16]
+    cum: jax.Array     # i32[17]
+
+    @classmethod
+    def from_table(cls, t: ApackTable) -> "TableArrays":
+        return cls(jnp.asarray(t.v_min, I32), jnp.asarray(t.ol, I32),
+                   jnp.asarray(t.cum, I32))
+
+
+# --------------------------------------------------------------- bit helpers
+def shr32(x: jax.Array, k: jax.Array) -> jax.Array:
+    """Logical right shift, correct for k in [0, 32]."""
+    kc = jnp.minimum(k, 31).astype(U32)
+    return jnp.where(k >= 32, U32(0), (x.astype(U32) >> kc))
+
+
+def shl32(x: jax.Array, k: jax.Array) -> jax.Array:
+    """Left shift, correct for k in [0, 32]."""
+    kc = jnp.minimum(k, 31).astype(U32)
+    return jnp.where(k >= 32, U32(0), (x.astype(U32) << kc))
+
+
+def gather_word(plane: jax.Array, w: jax.Array) -> jax.Array:
+    """plane[w[s], s] for each stream s.  plane: u32[W, S], w: i32[S]."""
+    wc = jnp.clip(w, 0, plane.shape[0] - 1)
+    return jnp.take_along_axis(plane, wc[None, :], axis=0)[0]
+
+
+def read_bits(plane: jax.Array, pos: jax.Array, k: jax.Array) -> jax.Array:
+    """Read k (<=16) bits LSB-first at bit position pos, per stream.
+
+    Reads past the padded plane return zero bits (the decoder legitimately
+    over-reads its CODE window by up to 16 bits near stream end)."""
+    w = pos >> 5
+    off = (pos & 31).astype(U32)
+    r0 = gather_word(plane, w)
+    r1 = gather_word(plane, w + 1)
+    in0 = w < plane.shape[0]
+    in1 = (w + 1) < plane.shape[0]
+    r0 = jnp.where(in0, r0, U32(0))
+    r1 = jnp.where(in1, r1, U32(0))
+    window = shr32(r0, off) | shl32(r1, 32 - off.astype(I32))
+    mask = shl32(jnp.ones_like(window), k) - U32(1)
+    return window & mask
+
+
+# ------------------------------------------------------------------- decode
+@partial(jax.jit, static_argnames=("n_steps", "bits"))
+def decode(sym_plane: jax.Array, ofs_plane: jax.Array, stored: jax.Array,
+           table: TableArrays, n_steps: int, bits: int = 8) -> jax.Array:
+    """Decode S streams of ``n_steps`` values each.
+
+    Args:
+      sym_plane: u32[W_s, S] word-interleaved symbol bitstreams.
+      ofs_plane: u32[W_o, S] word-interleaved offset bitstreams.
+      stored:    bool[S] verbatim-mode flags.
+      table:     TableArrays.
+      n_steps:   values per stream (E).
+      bits:      value bit width.
+
+    Returns: i32[S, n_steps] decoded values.
+    """
+    S = sym_plane.shape[1]
+    sym_plane = sym_plane.astype(U32)
+    ofs_plane = ofs_plane.astype(U32)
+    cum = table.cum
+    v_min = table.v_min
+    ol = table.ol
+
+    # initial CODE register: 16 bits, stream order = MSB first
+    def load_code(i, st):
+        code, spos = st
+        b = read_bits(sym_plane, spos, jnp.ones_like(spos)).astype(I32)
+        return code * 2 + b, spos + 1
+
+    zeros = jnp.zeros((S,), I32)
+    code0, spos0 = jax.lax.fori_loop(0, 16, load_code, (zeros, zeros))
+
+    def step(carry, _):
+        low, high, code, spos, opos = carry
+        rng = high - low + 1
+        cum_val = ((code - low + 1) * (1 << PCOUNT_BITS) - 1) // rng
+        # largest s with cum[s] <= cum_val  (the HW comparator array)
+        s_idx = jnp.sum((cum_val[:, None] >= cum[None, :-1]).astype(I32),
+                        axis=1) - 1
+        ol_s = jnp.take(ol, s_idx)
+        clo = jnp.take(cum, s_idx)
+        chi = jnp.take(cum, s_idx + 1)
+        off_val = read_bits(ofs_plane, opos, ol_s).astype(I32)
+        value_ac = jnp.take(v_min, s_idx) + off_val
+        # stored-mode bypass
+        value_st = read_bits(ofs_plane, opos, jnp.full_like(opos, bits)).astype(I32)
+        value = jnp.where(stored, value_st, value_ac)
+        opos = opos + jnp.where(stored, bits, ol_s)
+        high2 = low + ((rng * chi) >> PCOUNT_BITS) - 1
+        low2 = low + ((rng * clo) >> PCOUNT_BITS)
+
+        def renorm(i, st):
+            lo, hi, cd, sp, act = st
+            c1 = hi < HALF
+            c2 = lo >= HALF
+            c3 = (lo >= QUARTER) & (hi < THREEQ)
+            do = act & (c1 | c2 | c3)
+            sub = jnp.where(c1, 0, jnp.where(c2, HALF, QUARTER))
+            bit = read_bits(sym_plane, sp, jnp.ones_like(sp)).astype(I32)
+            lo_n = (lo - sub) * 2
+            hi_n = (hi - sub) * 2 + 1
+            cd_n = (cd - sub) * 2 + bit
+            return (jnp.where(do, lo_n, lo), jnp.where(do, hi_n, hi),
+                    jnp.where(do, cd_n, cd), sp + do.astype(I32), do)
+
+        low3, high3, code3, spos3, _ = jax.lax.fori_loop(
+            0, MAX_RENORM, renorm,
+            (low2, high2, code, spos, jnp.logical_not(stored)))
+        # stored streams keep AC state frozen
+        low3 = jnp.where(stored, low, low3)
+        high3 = jnp.where(stored, high, high3)
+        return (low3, high3, code3, spos3, opos), value
+
+    init = (zeros, jnp.full((S,), TOP, I32), code0, spos0, zeros)
+    _, values = jax.lax.scan(step, init, None, length=n_steps)
+    return values.T   # [S, n_steps]
+
+
+# ------------------------------------------------------------------- encode
+def _append(buf_lo, buf_hi, buflen, val, k):
+    """Append k (<=25) bits of val into the 64-bit stream buffer."""
+    buf_lo = buf_lo | shl32(val, buflen)
+    buf_hi = buf_hi | shr32(val, 32 - buflen)
+    return buf_lo, buf_hi, buflen + k
+
+
+def _flush(plane, widx, sidx, buf_lo, buf_hi, buflen):
+    """Write one full word where buflen >= 32."""
+    do = buflen >= 32
+    cur = gather_word(plane, widx)
+    new = jnp.where(do, buf_lo, cur)
+    plane = plane.at[jnp.clip(widx, 0, plane.shape[0] - 1), sidx].set(new)
+    buf_lo = jnp.where(do, buf_hi, buf_lo)
+    buf_hi = jnp.where(do, U32(0), buf_hi)
+    buflen = jnp.where(do, buflen - 32, buflen)
+    widx = widx + do.astype(I32)
+    return plane, widx, buf_lo, buf_hi, buflen
+
+
+def sym_capacity_words(n_steps: int) -> int:
+    # <= MAX_RENORM bits/step sustained + termination & slack
+    return (n_steps * (MAX_RENORM + 2) + MAX_PENDING + 64 + 31) // 32
+
+
+def ofs_capacity_words(n_steps: int, bits: int) -> int:
+    return (n_steps * bits + 63) // 32
+
+
+@partial(jax.jit, static_argnames=("n_steps", "bits"))
+def encode_ac(values: jax.Array, table: TableArrays, n_steps: int,
+              bits: int = 8):
+    """Arithmetic-encode S streams (no stored-mode selection — see encode()).
+
+    Args:
+      values: i32[S, n_steps] uint values.
+
+    Returns: (sym_plane u32[Ws,S], ofs_plane u32[Wo,S],
+              sym_bits i32[S], ofs_bits i32[S], overflow bool[S])
+    """
+    S = values.shape[0]
+    cum, v_min, ol = table.cum, table.v_min, table.ol
+    Ws = sym_capacity_words(n_steps)
+    Wo = ofs_capacity_words(n_steps, bits)
+    sidx = jnp.arange(S)
+
+    def step(carry, v):
+        (low, high, pending, overflow,
+         s_plane, s_widx, s_lo, s_hi, s_len, s_bits,
+         o_plane, o_widx, o_lo, o_hi, o_len, o_bits) = carry
+        # symbol lookup (largest s with v_min[s] <= v)
+        s_idx = jnp.sum((v[:, None] >= v_min[None, :-1]).astype(I32), axis=1) - 1
+        ol_s = jnp.take(ol, s_idx)
+        # offset emission
+        off = (v - jnp.take(v_min, s_idx)).astype(U32)
+        o_lo, o_hi, o_len = _append(o_lo, o_hi, o_len, off, ol_s)
+        o_bits = o_bits + ol_s
+        o_plane, o_widx, o_lo, o_hi, o_len = _flush(o_plane, o_widx, sidx,
+                                                    o_lo, o_hi, o_len)
+        # range update
+        rng = high - low + 1
+        chi = jnp.take(cum, s_idx + 1)
+        clo = jnp.take(cum, s_idx)
+        high = low + ((rng * chi) >> PCOUNT_BITS) - 1
+        low = low + ((rng * clo) >> PCOUNT_BITS)
+
+        def renorm(i, st):
+            (lo, hi, pend, ovf, plane, widx, blo, bhi, blen, bits_out, act) = st
+            c1 = hi < HALF
+            c2 = lo >= HALF
+            c3 = (lo >= QUARTER) & (hi < THREEQ)
+            do = act & (c1 | c2 | c3)
+            emit = do & (c1 | c2)
+            b = c2.astype(U32)                         # emitted bit
+            # bit + pending inverted bits, LSB-first: b | (~b)*pending << 1
+            inv_run = (shl32(jnp.ones_like(b), pend) - U32(1)) * (U32(1) - b)
+            pattern = b | (inv_run << 1)
+            k = jnp.where(emit, 1 + pend, 0)
+            blo, bhi, blen = _append(blo, bhi, blen,
+                                     jnp.where(emit, pattern, U32(0)), k)
+            bits_out = bits_out + k
+            pend_n = jnp.where(emit, 0, jnp.where(do, pend + 1, pend))
+            ovf = ovf | (pend_n > MAX_PENDING)
+            sub = jnp.where(c1, 0, jnp.where(c2, HALF, QUARTER))
+            lo_n = (lo - sub) * 2
+            hi_n = (hi - sub) * 2 + 1
+            lo = jnp.where(do, lo_n, lo)
+            hi = jnp.where(do, hi_n, hi)
+            plane, widx, blo, bhi, blen = _flush(plane, widx, sidx,
+                                                 blo, bhi, blen)
+            return (lo, hi, pend_n, ovf, plane, widx, blo, bhi, blen,
+                    bits_out, do)
+
+        (low, high, pending, overflow, s_plane, s_widx, s_lo, s_hi, s_len,
+         s_bits, _) = jax.lax.fori_loop(
+            0, MAX_RENORM, renorm,
+            (low, high, pending, overflow, s_plane, s_widx, s_lo, s_hi,
+             s_len, s_bits, jnp.ones((S,), bool)))
+        return (low, high, pending, overflow,
+                s_plane, s_widx, s_lo, s_hi, s_len, s_bits,
+                o_plane, o_widx, o_lo, o_hi, o_len, o_bits), None
+
+    zeros = jnp.zeros((S,), I32)
+    zerosu = jnp.zeros((S,), U32)
+    init = (zeros, jnp.full((S,), TOP, I32), zeros, jnp.zeros((S,), bool),
+            jnp.zeros((Ws, S), U32), zeros, zerosu, zerosu, zeros, zeros,
+            jnp.zeros((Wo, S), U32), zeros, zerosu, zerosu, zeros, zeros)
+    carry, _ = jax.lax.scan(step, init, values.T.astype(I32))
+    (low, high, pending, overflow,
+     s_plane, s_widx, s_lo, s_hi, s_len, s_bits,
+     o_plane, o_widx, o_lo, o_hi, o_len, o_bits) = carry
+
+    # termination: disambiguate the final quarter (golden encode_stream)
+    pending = pending + 1
+    b = (low >= QUARTER).astype(U32)
+    inv_run = (shl32(jnp.ones_like(b), pending) - U32(1)) * (U32(1) - b)
+    pattern = b | (inv_run << 1)
+    k = 1 + pending
+    s_lo, s_hi, s_len = _append(s_lo, s_hi, s_len, pattern, k)
+    s_bits = s_bits + k
+    for _ in range(3):      # drain buffer (<= 56 + 25 bits)
+        s_plane, s_widx, s_lo, s_hi, s_len = _flush(
+            s_plane, s_widx, sidx, s_lo, s_hi, s_len)
+    # final partial words
+    def drain(plane, widx, blo, blen):
+        do = blen > 0
+        cur = gather_word(plane, widx)
+        new = jnp.where(do, blo, cur)
+        return plane.at[jnp.clip(widx, 0, plane.shape[0] - 1), sidx].set(new)
+    s_plane = drain(s_plane, s_widx, s_lo, s_len)
+    o_plane = drain(o_plane, o_widx, o_lo, o_len)
+    return s_plane, o_plane, s_bits, o_bits, overflow
+
+
+@partial(jax.jit, static_argnames=("n_steps", "bits"))
+def pack_raw(values: jax.Array, n_steps: int, bits: int = 8):
+    """Verbatim bit-pack (stored mode): i32[S, E] -> u32[Wo, S]."""
+    S = values.shape[0]
+    Wo = ofs_capacity_words(n_steps, bits)
+    sidx = jnp.arange(S)
+    zeros = jnp.zeros((S,), I32)
+    zerosu = jnp.zeros((S,), U32)
+
+    def step(carry, v):
+        plane, widx, blo, bhi, blen = carry
+        blo, bhi, blen = _append(blo, bhi, blen, v.astype(U32),
+                                 jnp.full((S,), bits, I32))
+        plane, widx, blo, bhi, blen = _flush(plane, widx, sidx, blo, bhi, blen)
+        return (plane, widx, blo, bhi, blen), None
+
+    init = (jnp.zeros((Wo, S), U32), zeros, zerosu, zerosu, zeros)
+    (plane, widx, blo, bhi, blen), _ = jax.lax.scan(step, init,
+                                                    values.T.astype(I32))
+    do = blen > 0
+    cur = gather_word(plane, widx)
+    plane = plane.at[jnp.clip(widx, 0, plane.shape[0] - 1), sidx].set(
+        jnp.where(do, blo, cur))
+    return plane
+
+
+def encode(values: jax.Array, table: TableArrays, n_steps: int,
+           bits: int = 8):
+    """Full encoder: AC encode + per-stream stored-mode selection.
+
+    Returns (sym_plane, ofs_plane, sym_bits, ofs_bits, stored).
+    Stored streams hold verbatim values in the offset plane; their symbol
+    column is zeroed.  Bit-identical to ``core.format.compress``.
+    """
+    s_plane, o_plane, s_bits, o_bits, overflow = encode_ac(
+        values, table, n_steps, bits)
+    raw_plane = pack_raw(values, n_steps, bits)
+    stored = overflow | ((s_bits + o_bits) >= n_steps * bits)
+    Wo = max(o_plane.shape[0], raw_plane.shape[0])
+
+    def pad_to(p, w):
+        return jnp.pad(p, ((0, w - p.shape[0]), (0, 0)))
+
+    o_plane = jnp.where(stored[None, :], pad_to(raw_plane, Wo),
+                        pad_to(o_plane, Wo))
+    s_plane = jnp.where(stored[None, :], U32(0), s_plane)
+    s_bits = jnp.where(stored, 0, s_bits)
+    o_bits = jnp.where(stored, n_steps * bits, o_bits)
+    return s_plane, o_plane, s_bits, o_bits, stored

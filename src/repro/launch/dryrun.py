@@ -1,0 +1,172 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes, record memory/cost/collective analysis.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init).  Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+        --shape train_4k --mesh pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+        --out runs/dryrun
+"""
+import argparse          # noqa: E402
+import json              # noqa: E402
+import sys               # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from pathlib import Path # noqa: E402
+
+import jax               # noqa: E402
+import zstandard         # noqa: E402
+
+from repro.launch import hlo_costs, specs  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.config import ALL_SHAPES  # noqa: E402
+
+# TPU v5e per-chip constants (assignment-specified)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link
+
+
+def shape_by_name(name: str):
+    for s in ALL_SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: Path | None, save_hlo: bool = True,
+             variant: dict | None = None) -> dict:
+    variant = variant or {}
+    shape = shape_by_name(shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    result: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                    "variant": {k: v for k, v in variant.items() if v}}
+    reason = specs.skip_reason(arch, shape)
+    if reason:
+        result["status"] = "skip"
+        result["reason"] = reason
+        return result
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    from repro.models import sharding as _shd
+    with mesh, _shd.mesh_context(mesh, seq_shard=variant.get("seq_shard", False),
+                                 moe_ep=variant.get("moe_ep", False)):
+        # build INSIDE the context: param shardings read the moe_ep flag
+        cell = specs.build_cell(arch, shape, mesh,
+                                kv_int8=variant.get("kv_int8", False),
+                                ga=variant.get("ga"),
+                                moe_ep=variant.get("moe_ep", False))
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings,
+                         donate_argnums=cell.donate)
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    ma = compiled.memory_analysis()
+    print(compiled.memory_analysis())        # proves it fits
+    ca = compiled.cost_analysis()
+    print({k: ca.get(k) for k in ("flops", "bytes accessed")})
+    hlo = compiled.as_text()
+    parsed = hlo_costs.analyze(hlo, cell.trips_by_depth)
+    n_chips = 512 if multi_pod else 256
+
+    n_active = cell.cfg.active_param_count()
+    if shape.kind == "train":
+        model_flops = 6 * n_active * shape.global_batch * shape.seq_len
+    elif shape.kind == "prefill":
+        model_flops = 2 * n_active * shape.global_batch * shape.seq_len
+    else:
+        model_flops = 2 * n_active * shape.global_batch          # 1 token
+
+    # Per-device terms: parsed costs are for the per-device SPMD module.
+    compute_s = parsed["flops"] / PEAK_FLOPS
+    memory_s = parsed["bytes"] / HBM_BW
+    collective_s = parsed["collective_wire_bytes"] / ICI_BW
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", collective_s), key=lambda kv: kv[1])[0]
+    result.update(
+        status="ok",
+        n_chips=n_chips,
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        memory=dict(
+            argument_bytes=ma.argument_size_in_bytes,
+            output_bytes=ma.output_size_in_bytes,
+            temp_bytes=ma.temp_size_in_bytes,
+            alias_bytes=ma.alias_size_in_bytes,
+            peak_bytes=(ma.argument_size_in_bytes + ma.output_size_in_bytes
+                        + ma.temp_size_in_bytes - ma.alias_size_in_bytes),
+        ),
+        xla_cost=dict(flops=ca.get("flops"),
+                      bytes_accessed=ca.get("bytes accessed")),
+        parsed=parsed,
+        trips=cell.trips_by_depth,
+        model_flops_total=model_flops,
+        model_flops_per_chip=model_flops / n_chips,
+        roofline=dict(compute_s=compute_s, memory_s=memory_s,
+                      collective_s=collective_s, dominant=dominant,
+                      useful_flops_ratio=(model_flops / n_chips)
+                      / max(parsed["flops"], 1.0)),
+    )
+    if out_dir is not None:
+        out_dir.mkdir(parents=True, exist_ok=True)
+        stem = f"{arch}__{shape_name}__{mesh_name}"
+        with open(out_dir / f"{stem}.json", "w") as f:
+            json.dump(result, f, indent=1)
+        if save_hlo:
+            cctx = zstandard.ZstdCompressor(level=6)
+            (out_dir / f"{stem}.hlo.zst").write_bytes(
+                cctx.compress(hlo.encode()))
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "pod", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="runs/dryrun")
+    ap.add_argument("--no-hlo", action="store_true")
+    ap.add_argument("--kv-int8", action="store_true")
+    ap.add_argument("--moe-ep", action="store_true")
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--ga", type=int, default=None)
+    args = ap.parse_args()
+    variant = {"kv_int8": args.kv_int8, "moe_ep": args.moe_ep,
+               "seq_shard": args.seq_shard, "ga": args.ga}
+    out = Path(args.out)
+    meshes = {"single": [False], "pod": [True], "both": [False, True]}[args.mesh]
+    from repro import configs as _configs
+    cells = (specs.all_cells() if args.all
+             else [(args.arch, shape_by_name(args.shape))])
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                r = run_cell(arch, shape.name if hasattr(shape, "name")
+                             else shape, mp, out, save_hlo=not args.no_hlo,
+                             variant=variant)
+                status = r["status"]
+                extra = (f" dominant={r['roofline']['dominant']}"
+                         if status == "ok" else f" ({r.get('reason', '')})")
+                print(f"[{arch} x {shape.name if hasattr(shape, 'name') else shape}"
+                      f" x {'2x16x16' if mp else '16x16'}] {status}{extra}",
+                      flush=True)
+            except Exception:
+                failures += 1
+                traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

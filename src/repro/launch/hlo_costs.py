@@ -1,0 +1,333 @@
+"""Post-optimization HLO cost walker for the roofline analysis.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE (measured — see
+EXPERIMENTS.md §Dry-run), so a scanned-transformer's per-layer costs need
+multiplying by trip count.  XLA doesn't expose per-computation costs, so we
+parse ``compiled.as_text()`` ourselves:
+
+  * FLOPs: 2*numel(result)*prod(contracted dims) per ``dot`` (found inside
+    fusions too), numel for elementwise/reduce/transcendental ops.
+  * Bytes: operand+result bytes at every instruction boundary, fusions
+    counted at their boundary only (= XLA's "bytes accessed" convention).
+  * Collective bytes: operand sums per op kind, plus a wire-traffic model
+    (ring terms) used for the roofline's collective term.
+  * While trips by nesting depth — the codebase's loop convention
+    (models/config.py CHUNK) makes depth->trip unambiguous:
+    depth 0 = layer-stack scans (fwd/bwd; trip = n_cycles),
+    depth 1 = time-axis chunk scans (trip = S/CHUNK),
+    depth 2 = sLSTM in-chunk steps (trip = CHUNK).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1, "token": 0,
+    "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\](?:\{[^}]*\})?")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        numel = 1
+        if dims:
+            for d in dims.split(","):
+                numel *= int(d)
+        total += numel * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_numel(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        if m.group(1) not in _DTYPE_BYTES or _DTYPE_BYTES[m.group(1)] == 0:
+            continue
+        numel = 1
+        if m.group(2):
+            for d in m.group(2).split(","):
+                numel *= int(d)
+        total += numel
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_type: str
+    operands: list[str]
+    raw: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list[Instr]
+    shapes: dict          # instr name -> result type str
+
+
+_INSTR_RE = re.compile(
+    r"^\s+(?:ROOT )?%?([\w\.\-]+) = (\(.*?\)|\S+) ([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+)\s+\(.*?\)\s*->\s*.*\{\s*$")
+
+
+def parse_hlo(text: str) -> tuple[dict[str, Computation], str]:
+    """Returns ({name: Computation}, entry_name)."""
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m:
+                cur = Computation(m.group(1), [], {})
+                if line.startswith("ENTRY"):
+                    entry = m.group(1)
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rtype, opcode, rest = m.groups()
+        ops = re.findall(r"%([\w\.\-]+)", rest.split("),", 1)[0])
+        instr = Instr(name=name, opcode=opcode, result_type=rtype,
+                      operands=ops, raw=line)
+        cur.instrs.append(instr)
+        cur.shapes[name] = rtype
+    if cur is not None:
+        comps[cur.name] = cur
+    if entry is None:
+        # fall back: the computation named like main
+        entry = next((n for n in comps if "main" in n), next(iter(comps)))
+    return comps, entry
+
+
+_CALLED_RE = {
+    "while": re.compile(r"condition=%?([\w\.\-]+), body=%?([\w\.\-]+)"),
+    "fusion": re.compile(r"calls=%?([\w\.\-]+)"),
+    "call": re.compile(r"to_apply=%?([\w\.\-]+)"),
+    "conditional": re.compile(r"(?:branch_computations=\{([^}]*)\}|"
+                              r"true_computation=%?([\w\.\-]+), "
+                              r"false_computation=%?([\w\.\-]+))"),
+    "custom-call": re.compile(r"called_computations=\{([^}]*)\}"),
+}
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "copy", "copy-start", "copy-done", "after-all", "partition-id",
+    "replica-id", "iota", "while", "call", "conditional",
+    # convert/broadcast always fuse into their consumers on TPU; XLA:CPU's
+    # float-normalization inserts bf16<->f32 converts around every op,
+    # which would double-count every dtype boundary as HBM traffic (and
+    # mask dtype-narrowing optimizations like int8 KV caches)
+    "convert", "broadcast",
+}
+
+
+def _dot_flops(instr: Instr, shapes: dict) -> int:
+    out_numel = _shape_numel(instr.result_type)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.raw)
+    if not m or not instr.operands:
+        return 2 * out_numel
+    lhs_type = shapes.get(instr.operands[0])
+    if lhs_type is None:
+        return 2 * out_numel
+    dims = _shape_dims(lhs_type)
+    k = 1
+    if m.group(1):
+        for d in m.group(1).split(","):
+            if int(d) < len(dims):
+                k *= dims[int(d)]
+    return 2 * out_numel * k
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_operand_bytes: float = 0.0
+    collective_wire_bytes: float = 0.0
+    by_kind: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+
+    def add(self, other: "Costs", mult: float = 1.0) -> None:
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        self.collective_operand_bytes += mult * other.collective_operand_bytes
+        self.collective_wire_bytes += mult * other.collective_wire_bytes
+        for k, v in other.by_kind.items():
+            self.by_kind[k] += mult * v
+
+
+def _collective_bytes(instr: Instr, kind: str, shapes: dict) -> tuple[float, float]:
+    """(operand bytes, wire-model bytes per device)."""
+    op_bytes = sum(_shape_bytes(shapes.get(o, "")) for o in instr.operands)
+    res_bytes = _shape_bytes(instr.result_type)
+    # ring-model wire traffic per device (n-1)/n ~ 1
+    if kind == "all-gather":
+        wire = max(res_bytes - op_bytes, 0)
+    elif kind == "all-reduce":
+        wire = 2 * op_bytes
+    elif kind == "reduce-scatter":
+        wire = op_bytes
+    elif kind == "all-to-all":
+        wire = op_bytes
+    else:                                  # collective-permute
+        wire = op_bytes
+    return op_bytes, wire
+
+
+def walk(comps: dict[str, Computation], entry: str,
+         trips_by_depth: dict[int, int]) -> Costs:
+    """Aggregate costs from the entry computation, multiplying while bodies
+    by ``trips_by_depth[depth]`` (default 1)."""
+    memo: dict[tuple[str, int], Costs] = {}
+
+    def comp_cost(name: str, depth: int) -> Costs:
+        key = (name, depth)
+        if key in memo:
+            return memo[key]
+        c = Costs()
+        comp = comps.get(name)
+        if comp is None:
+            memo[key] = c
+            return c
+        for ins in comp.instrs:
+            base = ins.opcode.replace("-start", "")
+            if base in _COLLECTIVES:
+                ob, wb = _collective_bytes(ins, base, comp.shapes)
+                c.collective_operand_bytes += ob
+                c.collective_wire_bytes += wb
+                c.by_kind[base] += wb
+                c.bytes += ob + _shape_bytes(ins.result_type)
+                continue
+            if ins.opcode == "while":
+                m = _CALLED_RE["while"].search(ins.raw)
+                if m:
+                    body = comp_cost(m.group(2), depth + 1)
+                    trip = trips_by_depth.get(depth, 1)
+                    c.add(body, trip)
+                    cond = comp_cost(m.group(1), depth + 1)
+                    c.add(cond, trip)
+                continue
+            if ins.opcode == "fusion":
+                m = _CALLED_RE["fusion"].search(ins.raw)
+                inner_comp = comps.get(m.group(1)) if m else None
+                if m:
+                    inner = comp_cost(m.group(1), depth)
+                    # fusions: flops from inside, bytes at the boundary
+                    c.flops += inner.flops
+                    c.collective_operand_bytes += inner.collective_operand_bytes
+                    c.collective_wire_bytes += inner.collective_wire_bytes
+                ob = sum(_shape_bytes(comp.shapes.get(o, ""))
+                         for o in ins.operands)
+                bytes_ = ob + _shape_bytes(ins.result_type)
+                # in-place fusions (KV-cache updates etc.): a DUS/scatter
+                # inside + an operand type that reappears in the result
+                # means the buffer is aliased on TPU — the fusion touches
+                # only the updated region, not the whole buffer.
+                if inner_comp is not None:
+                    upd_bytes = 0
+                    for fi in inner_comp.instrs:
+                        if (fi.opcode == "dynamic-update-slice"
+                                and len(fi.operands) > 1):
+                            upd_bytes += _shape_bytes(
+                                inner_comp.shapes.get(fi.operands[1], ""))
+                        elif fi.opcode == "scatter" and len(fi.operands) > 1:
+                            upd_bytes += sum(_shape_bytes(
+                                inner_comp.shapes.get(o, ""))
+                                for o in fi.operands[1:])
+                    if upd_bytes:
+                        res_parts = [mm.group(0) for mm in
+                                     _SHAPE_RE.finditer(ins.result_type)]
+                        for o in ins.operands:
+                            om = _SHAPE_RE.search(comp.shapes.get(o, ""))
+                            if om and om.group(0) in res_parts:
+                                res_parts.remove(om.group(0))
+                                bytes_ -= 2 * _shape_bytes(om.group(0))
+                        bytes_ = max(bytes_, 0) + 2 * upd_bytes
+                c.bytes += bytes_
+                continue
+            if ins.opcode in ("call", "conditional", "async-start"):
+                for mname in re.findall(r"(?:to_apply|true_computation|"
+                                        r"false_computation)=%?([\w\.\-]+)",
+                                        ins.raw):
+                    c.add(comp_cost(mname, depth))
+                m = re.search(r"branch_computations=\{([^}]*)\}", ins.raw)
+                if m:
+                    branches = re.findall(r"%?([\w\.\-]+)", m.group(1))
+                    if branches:          # max over branches would be exact;
+                        c.add(comp_cost(branches[0], depth))
+                continue
+            if ins.opcode == "dynamic-slice":
+                # reads only the slice (result) on TPU, not the full operand
+                c.bytes += 2 * _shape_bytes(ins.result_type)
+                c.flops += 0
+                continue
+            if ins.opcode == "dynamic-update-slice":
+                # in-place on TPU (donated/aliased buffers): touches the
+                # written region twice (read-modify-write), not the buffer
+                upd = (_shape_bytes(comp.shapes.get(ins.operands[1], ""))
+                       if len(ins.operands) > 1 else 0)
+                c.bytes += 2 * upd
+                continue
+            if ins.opcode == "scatter":
+                # in-place update: touches indices + updates twice
+                upd = sum(_shape_bytes(comp.shapes.get(o, ""))
+                          for o in ins.operands[1:])
+                c.bytes += 2 * upd
+                continue
+            if ins.opcode == "gather":
+                # reads the gathered elements (result), not the operand
+                c.bytes += 2 * _shape_bytes(ins.result_type)
+                continue
+            if ins.opcode == "dot":
+                c.flops += _dot_flops(ins, comp.shapes)
+            elif ins.opcode == "convolution":
+                # rough: 2 * out_numel * prod(kernel spatial dims) — models
+                # here lower no convolutions, this is a safety net
+                c.flops += 2 * _shape_numel(ins.result_type)
+            elif ins.opcode not in _SKIP_BYTES_OPS:
+                c.flops += _shape_numel(ins.result_type)
+            if ins.opcode not in _SKIP_BYTES_OPS and ins.opcode != "fusion":
+                ob = sum(_shape_bytes(comp.shapes.get(o, ""))
+                         for o in ins.operands)
+                c.bytes += ob + _shape_bytes(ins.result_type)
+        memo[key] = c
+        return c
+
+    return comp_cost(entry, 0)
+
+
+def analyze(hlo_text: str, trips_by_depth: dict[int, int]) -> dict:
+    comps, entry = parse_hlo(hlo_text)
+    costs = walk(comps, entry, trips_by_depth)
+    return {
+        "flops": costs.flops,
+        "bytes": costs.bytes,
+        "collective_operand_bytes": costs.collective_operand_bytes,
+        "collective_wire_bytes": costs.collective_wire_bytes,
+        "collective_by_kind": dict(costs.by_kind),
+    }

@@ -1,0 +1,53 @@
+"""Re-run the HLO cost walker over saved dry-run artifacts (no recompile).
+
+    PYTHONPATH=src python -m repro.launch.reanalyze --dir runs/dryrun2
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import zstandard
+
+from repro.launch import hlo_costs
+from repro.launch.dryrun import HBM_BW, ICI_BW, PEAK_FLOPS
+
+
+def reanalyze(dir_: Path) -> None:
+    dctx = zstandard.ZstdDecompressor()
+    for jpath in sorted(dir_.glob("*.json")):
+        with open(jpath) as f:
+            cell = json.load(f)
+        if cell.get("status") != "ok":
+            continue
+        hpath = jpath.with_suffix("").with_suffix("")  # strip .json
+        hpath = dir_ / (jpath.stem + ".hlo.zst")
+        if not hpath.exists():
+            continue
+        hlo = dctx.decompress(hpath.read_bytes()).decode()
+        trips = {int(k): v for k, v in cell["trips"].items()}
+        parsed = hlo_costs.analyze(hlo, trips)
+        compute_s = parsed["flops"] / PEAK_FLOPS
+        memory_s = parsed["bytes"] / HBM_BW
+        collective_s = parsed["collective_wire_bytes"] / ICI_BW
+        dominant = max(("compute", compute_s), ("memory", memory_s),
+                       ("collective", collective_s), key=lambda kv: kv[1])[0]
+        cell["parsed"] = parsed
+        cell["roofline"] = dict(
+            compute_s=compute_s, memory_s=memory_s,
+            collective_s=collective_s, dominant=dominant,
+            useful_flops_ratio=cell["model_flops_per_chip"]
+            / max(parsed["flops"], 1.0))
+        with open(jpath, "w") as f:
+            json.dump(cell, f, indent=1)
+        print(f"{jpath.stem}: dominant={dominant} "
+              f"mem={memory_s*1e3:.1f}ms comp={compute_s*1e3:.1f}ms "
+              f"coll={collective_s*1e3:.1f}ms")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="runs/dryrun2")
+    args = ap.parse_args()
+    reanalyze(Path(args.dir))

@@ -1,0 +1,64 @@
+"""Generate BASELINE_TABLE.md from dry-run JSONs.
+
+    PYTHONPATH=src python -m repro.launch.report --dir runs/dryrun2
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.models.config import ALL_SHAPES
+from repro import configs
+
+HEADER = ("| arch | shape | mesh | dominant | compute_ms | memory_ms | "
+          "collective_ms | useful_flops | peak_GiB | compile_s |\n"
+          "|---|---|---|---|---|---|---|---|---|---|")
+
+
+def rows(dir_: Path, mesh: str | None = None) -> list[str]:
+    out = []
+    order = {s.name: i for i, s in enumerate(ALL_SHAPES)}
+    cells = []
+    for p in sorted(dir_.glob("*.json")):
+        c = json.load(open(p))
+        cells.append(c)
+    arch_order = {a: i for i, a in enumerate(configs.all_arch_ids())}
+    cells.sort(key=lambda c: (arch_order.get(c["arch"], 99),
+                              order.get(c["shape"], 9), c["mesh"]))
+    for c in cells:
+        if mesh and c["mesh"] != mesh:
+            continue
+        if c["status"] != "ok":
+            out.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+                       f"SKIP: {c['reason']} | | | | | | |")
+            continue
+        r = c["roofline"]
+        out.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | {r['dominant']} | "
+            f"{r['compute_s']*1e3:.2f} | {r['memory_s']*1e3:.2f} | "
+            f"{r['collective_s']*1e3:.2f} | {r['useful_flops_ratio']:.2f} | "
+            f"{c['memory']['peak_bytes']/2**30:.1f} | {c['compile_s']:.0f} |")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="runs/dryrun2")
+    ap.add_argument("--out", default="BASELINE_TABLE.md")
+    args = ap.parse_args()
+    lines = [
+        "# Baseline roofline table — every (arch x shape x mesh) cell",
+        "",
+        "Generated from the dry-run artifacts by `repro.launch.report`.",
+        "Terms are per-device seconds-equivalents (ms shown); see",
+        "EXPERIMENTS.md §Roofline for methodology and caveats.",
+        "", HEADER,
+    ]
+    lines += rows(Path(args.dir))
+    Path(args.out).write_text("\n".join(lines) + "\n")
+    print(f"wrote {args.out} ({len(lines)} lines)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,183 @@
+"""Per-(arch x shape) dry-run cell definitions: abstract input specs,
+applicability (skips), lowering target (train/prefill/decode), shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.models import model as M
+from repro.models import sharding as sh
+from repro.models.config import (ALL_SHAPES, CHUNK, ModelConfig, ShapeConfig)
+from repro.train import AdamWConfig, optimizer
+from repro.train.train_step import make_train_step
+
+N_PATCH = 256          # vlm image-token prefix inside the sequence budget
+
+# archs whose parameter volume needs int8 optimizer state to fit (DESIGN §4)
+INT8_OPT = {"command-r-plus-104b", "dbrx-132b", "kimi-k2-1t-a32b"}
+
+# microbatch counts for train_4k (bounds the remat residual stack to one
+# microbatch; production config per arch) and grad-accumulator dtypes
+GRAD_ACCUM = {"command-r-plus-104b": 16, "kimi-k2-1t-a32b": 8,
+              "dbrx-132b": 8, "minitron-8b": 4, "minitron-4b": 4,
+              "recurrentgemma-9b": 4, "paligemma-3b": 2, "qwen3-1.7b": 2}
+BF16_ACCUM = {"command-r-plus-104b", "kimi-k2-1t-a32b"}
+
+FULL_ATTENTION_ARCHS = {
+    "qwen3-1.7b", "minitron-4b", "minitron-8b", "command-r-plus-104b",
+    "paligemma-3b", "dbrx-132b", "kimi-k2-1t-a32b",
+}
+
+
+def skip_reason(arch: str, shape: ShapeConfig) -> str | None:
+    cfg = configs.get_config(arch)
+    if cfg.is_encoder and shape.kind == "decode":
+        return "encoder-only: no decode step"
+    if shape.name == "long_500k" and arch in FULL_ATTENTION_ARCHS:
+        return "pure full attention: 500k decode needs sub-quadratic arch"
+    if shape.name == "long_500k" and cfg.is_encoder:
+        return "encoder-only"
+    return None
+
+
+def opt_config(arch: str) -> AdamWConfig:
+    return AdamWConfig(state_dtype="int8" if arch in INT8_OPT else "float32")
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract (ShapeDtypeStruct) model inputs for a cell."""
+    gb, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((gb, 1), i32)}
+    if cfg.frontend == "audio":
+        return {"frame_embeds": jax.ShapeDtypeStruct((gb, s, cfg.d_model),
+                                                     jnp.bfloat16),
+                "labels": jax.ShapeDtypeStruct((gb, s), i32)}
+    batch = {"tokens": jax.ShapeDtypeStruct(
+        (gb, s - (N_PATCH if cfg.frontend == "vision" else 0)), i32)}
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = jax.ShapeDtypeStruct(
+            (gb, N_PATCH, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def abstract_opt_state(ocfg: AdamWConfig, params):
+    return jax.eval_shape(lambda p: optimizer.init_state(ocfg, p), params)
+
+
+def opt_shardings(mesh: Mesh, opt_state, param_shardings) -> Any:
+    """Moments inherit the param shardings exactly (ZeRO via FSDP).  Q8
+    moments: q has the param's shape -> same sharding; the per-block scale
+    drops the last (blocked) axis's entry."""
+
+    def map_moment(ps_tree, m_tree):
+        def one(ps, leaf):
+            if isinstance(leaf, optimizer.Q8):
+                spec = ps.spec
+                # scale has the param's rank (last axis = blocks) — reuse
+                # the param spec, dropping entries that no longer divide
+                return optimizer.Q8(
+                    q=NamedSharding(mesh, sh.fit_spec(spec, leaf.q.shape,
+                                                      mesh)),
+                    scale=NamedSharding(mesh, sh.fit_spec(
+                        spec, leaf.scale.shape, mesh)))
+            return ps
+        return jax.tree.map(one, ps_tree, m_tree,
+                            is_leaf=lambda x: isinstance(x, optimizer.Q8))
+
+    return {
+        "step": NamedSharding(mesh, P()),
+        "m": map_moment(param_shardings, opt_state["m"]),
+        "v": map_moment(param_shardings, opt_state["v"]),
+    }
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeConfig
+    cfg: ModelConfig
+    fn: Any                    # function to lower
+    args: tuple                # abstract args
+    in_shardings: tuple
+    donate: tuple
+    trips_by_depth: dict
+    out_shardings: Any = None
+
+
+def build_cell(arch: str, shape: ShapeConfig, mesh: Mesh,
+               kv_int8: bool = False, ga: int | None = None,
+               moe_ep: bool = False) -> Cell:
+    cfg = configs.get_config(arch)
+    if kv_int8:
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    params = abstract_params(cfg)
+    p_sh = sh.param_shardings(mesh, params)
+    b_spec = batch_specs(cfg, shape)
+    b_sh = sh.batch_shardings(mesh, b_spec)
+    chunks = max(1, shape.seq_len // CHUNK)
+
+    if shape.kind == "train":
+        import jax.numpy as _jnp
+        ocfg = opt_config(arch)
+        opt_state = abstract_opt_state(ocfg, params)
+        o_sh = opt_shardings(mesh, opt_state, p_sh)
+        ga = ga if ga is not None else GRAD_ACCUM.get(arch, 1)
+        step = make_train_step(
+            cfg, ocfg, grad_accum=ga,
+            accum_dtype=_jnp.bfloat16 if arch in BF16_ACCUM else _jnp.float32)
+        if ga == 1:
+            trips = {0: cfg.n_cycles, 1: chunks, 2: CHUNK}
+        else:
+            # microbatch scan shifts every loop one depth down
+            trips = {0: ga, 1: cfg.n_cycles, 2: chunks, 3: CHUNK}
+        return Cell(arch, shape, cfg, step,
+                    (params, opt_state, b_spec),
+                    (p_sh, o_sh, b_sh), donate=(0, 1),
+                    trips_by_depth=trips)
+
+    if shape.kind == "prefill":
+        def fn(p, b):
+            return M.prefill(cfg, p, b)
+        # NOTE: forcing cache out_shardings (seq-sharded for kv-head counts
+        # that don't divide the model axis) trips GSPMD's replicate-fallback
+        # resharding INSIDE the layer scan (measured: command-r collective
+        # term 29.6s -> 1011s).  The natural layout (batch-sharded,
+        # kv-heads replicated when indivisible) is kept; the int8-KV config
+        # (§Perf) halves its footprint where it matters.
+        return Cell(arch, shape, cfg, fn, (params, b_spec), (p_sh, b_sh),
+                    donate=(),
+                    trips_by_depth={0: cfg.n_cycles, 1: chunks, 2: CHUNK})
+
+    # decode: one new token against a seq_len-deep cache
+    cache = jax.eval_shape(
+        lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len))
+    c_sh = sh.cache_shardings(mesh, cache)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def fn(p, c, b, pos):
+        return M.decode_step(cfg, p, c, b["tokens"], pos)
+
+    return Cell(arch, shape, cfg, fn, (params, cache, b_spec, pos),
+                (p_sh, c_sh, b_sh, NamedSharding(mesh, P())), donate=(1,),
+                trips_by_depth={0: cfg.n_cycles, 1: 1, 2: 1})
+
+
+def all_cells() -> list[tuple[str, ShapeConfig]]:
+    out = []
+    for arch in configs.all_arch_ids():
+        for shape in ALL_SHAPES:
+            out.append((arch, shape))
+    return out

@@ -1,0 +1,81 @@
+"""Training driver (CPU-runnable at reduced scale; pjit-sharded on real
+meshes).
+
+    PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m \
+        --smoke --steps 50 --batch 8 --seq 256 --ckpt-dir runs/train
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.ckpt import checkpoint as ckpt
+from repro.data import DataConfig, Prefetcher, SyntheticLM
+from repro.models import model as M
+from repro.runtime import Supervisor, SupervisorConfig
+from repro.train import AdamWConfig, init_state
+from repro.train.train_step import make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--ckpt-dir", default="runs/train")
+    ap.add_argument("--compress-ckpt", action="store_true")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = (configs.get_smoke_config(args.arch) if args.smoke
+           else configs.get_config(args.arch))
+    ocfg = AdamWConfig(lr=args.lr, warmup_steps=max(10, args.steps // 20),
+                       total_steps=args.steps)
+    data = SyntheticLM(DataConfig(batch_size=args.batch, seq_len=args.seq,
+                                  vocab_size=cfg.vocab_size))
+    step_fn = jax.jit(make_train_step(cfg, ocfg, grad_accum=args.grad_accum),
+                      donate_argnums=(0, 1))
+
+    def make_state():
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        opt = init_state(ocfg, params)
+        return {"params": params, "opt": opt}, {}
+
+    def train_one(state, step_idx):
+        batch = data.next_batch()
+        b = {"tokens": jnp.asarray(batch["tokens"])}
+        params, opt, metrics = step_fn(state["params"], state["opt"], b)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        return {"params": params, "opt": opt}, metrics
+
+    sup = Supervisor(
+        SupervisorConfig(ckpt_dir=args.ckpt_dir, save_every=args.save_every,
+                         max_steps=args.steps,
+                         compress_ckpt=args.compress_ckpt),
+        make_state=make_state, step_fn=train_one,
+        data_state=data.state_dict, restore_data=data.load_state_dict)
+    state, history = sup.run()
+    for h in history[::max(1, args.log_every)]:
+        print(json.dumps({k: round(v, 4) if isinstance(v, float) else v
+                          for k, v in h.items()}))
+    if history:
+        print(f"final loss: {history[-1]['loss']:.4f} "
+              f"(first: {history[0]['loss']:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,356 @@
+"""Family assembly: embeddings -> scanned block stack -> head.
+
+All families share one forward skeleton; the per-layer ``block_pattern``
+cycle selects block kinds (attention global/local, RG-LRU recurrent, mLSTM,
+sLSTM).  Layers are stacked and driven by ``lax.scan`` over pattern cycles so
+the HLO is O(one cycle) regardless of depth — required for fast 512-device
+dry-run compiles and for the roofline's while-body accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import modules as m
+from . import sharding as shd
+from .config import ModelConfig
+
+F32 = jnp.float32
+
+
+# ------------------------------------------------------------------- init
+def _init_block(cfg: ModelConfig, kind: str, key) -> dict:
+    ks = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.param_dtype)
+    p: dict[str, Any] = {"norm1": jnp.zeros((cfg.d_model,), dt)}
+    if kind in ("global", "local"):
+        p["inner"] = m.init_attention(cfg, ks[0])
+    elif kind == "recurrent":
+        p["inner"] = m.init_recurrent(cfg, ks[0])
+    elif kind == "mlstm":
+        p["inner"] = m.init_mlstm(cfg, ks[0])
+    elif kind == "slstm":
+        p["inner"] = m.init_slstm(cfg, ks[0])
+    else:
+        raise ValueError(kind)
+    if kind in ("global", "local", "recurrent"):
+        p["norm2"] = jnp.zeros((cfg.d_model,), dt)
+        if cfg.num_experts > 0:
+            p["ffn"] = m.init_moe(cfg, ks[1])
+        elif cfg.d_ff > 0:
+            p["ffn"] = m.init_mlp(cfg, ks[1])
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    keys = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.param_dtype)
+    params: dict[str, Any] = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model))
+                  * cfg.d_model ** -0.5).astype(dt),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = (jax.random.normal(
+            keys[1], (cfg.d_model, cfg.vocab_size)) * cfg.d_model ** -0.5
+        ).astype(dt)
+    # unscanned leading layers (kimi's dense-FFN first layer, griffin's
+    # leading recurrent pair); prefix blocks always use the dense MLP
+    if cfg.prefix_pattern:
+        dense_cfg = dataclasses.replace(cfg, num_experts=0)
+        params["prefix"] = [
+            _init_block(dense_cfg, kind, k)
+            for kind, k in zip(cfg.prefix_pattern,
+                               jax.random.split(keys[2],
+                                                len(cfg.prefix_pattern)))]
+    # scanned stack: one stacked tree per position in the cycle
+    n = _n_cycles(cfg)
+    stacked = []
+    for i, kind in enumerate(cfg.cycle):
+        ks = jax.random.split(keys[3 + (i % 5)], n)
+        stacked.append(jax.vmap(lambda k, kind=kind: _init_block(cfg, kind, k))(ks))
+    params["blocks"] = tuple(stacked)
+    return params
+
+
+def _n_cycles(cfg: ModelConfig) -> int:
+    return cfg.n_cycles
+
+
+def exact_param_count(cfg: ModelConfig) -> int:
+    """Parameter count from the abstract init tree (no allocation).
+
+    ``cfg.param_count()`` is analytic and exact for attention families but
+    approximates xLSTM internals; the roofline uses this exact version."""
+    import numpy as np
+    shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+
+
+# ------------------------------------------------------------------ block
+def _ffn(cfg: ModelConfig, p: dict, h: jax.Array):
+    if cfg.num_experts > 0 and "router" in p["ffn"]:
+        return m.moe(p["ffn"], h, cfg)
+    return m.mlp(p["ffn"], h, cfg), {}
+
+
+def block_full(cfg: ModelConfig, kind: str, p: dict, h: jax.Array,
+               collect_cache: bool = True):
+    """Full-sequence (train / prefill) block.  Returns (h, cache, aux)."""
+    aux: dict = {}
+    hn = m.rms_norm(h, p["norm1"], cfg.norm_eps)
+    if kind in ("global", "local"):
+        inner, cache = m.attention_full(p["inner"], hn, cfg,
+                                        local=(kind == "local"))
+    elif kind == "recurrent":
+        inner, cache = m.recurrent_full(p["inner"], hn, cfg)
+    elif kind == "mlstm":
+        inner, cache = m.mlstm_full(p["inner"], hn, cfg)
+    elif kind == "slstm":
+        inner, cache = m.slstm_full(p["inner"], hn, cfg)
+    else:
+        raise ValueError(kind)
+    if not collect_cache:
+        cache = ()        # keep the train scan free of stacked cache ys
+    if "ffn" in p:
+        if cfg.parallel_block:
+            f, aux = _ffn(cfg, p, hn)
+            h = h + inner + f
+        else:
+            h = h + inner
+            f, aux = _ffn(cfg, p, m.rms_norm(h, p["norm2"], cfg.norm_eps))
+            h = h + f
+    else:
+        h = h + inner
+    return h, cache, aux
+
+
+def block_step(cfg: ModelConfig, kind: str, p: dict, h: jax.Array,
+               cache, pos):
+    """Single-token decode block.  Returns (h, new_cache)."""
+    hn = m.rms_norm(h, p["norm1"], cfg.norm_eps)
+    if kind in ("global", "local"):
+        inner, cache = m.attention_step(p["inner"], hn, cache, pos, cfg,
+                                        local=(kind == "local"))
+    elif kind == "recurrent":
+        inner, cache = m.recurrent_step(p["inner"], hn, cache, cfg)
+    elif kind == "mlstm":
+        inner, cache = m.mlstm_step(p["inner"], hn, cache, cfg)
+    elif kind == "slstm":
+        inner, cache = m.slstm_step(p["inner"], hn, cache, cfg)
+    else:
+        raise ValueError(kind)
+    if "ffn" in p:
+        if cfg.parallel_block:
+            f, _ = _ffn(cfg, p, hn)
+            h = h + inner + f
+        else:
+            h = h + inner
+            f, _ = _ffn(cfg, p, m.rms_norm(h, p["norm2"], cfg.norm_eps))
+            h = h + f
+    else:
+        h = h + inner
+    return h, cache
+
+
+# ---------------------------------------------------------------- forward
+def embed_inputs(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    """tokens (+ frontend embeddings) -> [B, S, D] hidden states.
+
+    Modality frontends are stubs per the assignment: ``patch_embeds`` /
+    ``frame_embeds`` arrive precomputed."""
+    parts = []
+    if cfg.frontend == "vision" and "patch_embeds" in batch:
+        parts.append(batch["patch_embeds"])
+    if cfg.frontend == "audio":
+        h = batch["frame_embeds"]
+        return h.astype(jnp.bfloat16)
+    tok = params["embed"][batch["tokens"]].astype(jnp.bfloat16)
+    if cfg.frontend == "vision":
+        tok = tok * jnp.asarray(cfg.d_model ** 0.5, tok.dtype)  # gemma scale
+    parts.append(tok)
+    if len(parts) == 1:
+        return parts[0]
+    return jnp.concatenate([p.astype(jnp.bfloat16) for p in parts], axis=1)
+
+
+def _scan_blocks(cfg: ModelConfig, params: dict, h: jax.Array, *,
+                 remat: bool = True, collect_cache: bool = True):
+    """Scan the stacked cycle over the sequence hiddens (full mode)."""
+    def cycle_fn(carry, p_cycle):
+        h, lb, rz = carry
+        # barrier: stops XLA from hoisting the body's bf16->f32 convert out
+        # of the loop, which would store the stacked per-layer residuals in
+        # fp32 (measured 2x memory on the backward stack)
+        h = jax.lax.optimization_barrier(h)
+        h = shd.constrain(h, "residual")
+        caches = []
+        for i, kind in enumerate(cfg.cycle):
+            h, cache, aux = block_full(cfg, kind, p_cycle[i], h,
+                                       collect_cache)
+            h = shd.constrain(h, "residual")
+            caches.append(cache)
+            lb = lb + aux.get("load_balance", 0.0)
+            rz = rz + aux.get("router_z", 0.0)
+        return (h, lb, rz), tuple(caches)
+
+    fn = jax.checkpoint(cycle_fn,
+                        policy=jax.checkpoint_policies.nothing_saveable) \
+        if remat else cycle_fn
+    (h, lb, rz), caches = jax.lax.scan(fn, (h, 0.0, 0.0), params["blocks"])
+    return h, caches, {"load_balance": lb, "router_z": rz}
+
+
+def forward(cfg: ModelConfig, params: dict, batch: dict, *,
+            remat: bool = True, collect_cache: bool = False,
+            last_only: bool = False):
+    """Full forward.  Returns (logits, caches, aux).  ``collect_cache``
+    is for prefill only — training must not stack per-layer caches.
+    ``last_only`` computes the LM head for the final position only
+    (prefill: the all-position full-vocab logits would otherwise
+    materialize tens of GB per device)."""
+    h = shd.constrain(embed_inputs(cfg, params, batch), "residual")
+    prefix_caches = []
+    for kind, p in zip(cfg.prefix_pattern, params.get("prefix", [])):
+        h, cache, _ = block_full(cfg, kind, p, h, collect_cache)
+        h = shd.constrain(h, "residual")
+        prefix_caches.append(cache)
+    h, caches, aux = _scan_blocks(cfg, params, h, remat=remat,
+                                  collect_cache=collect_cache)
+    if last_only:
+        h = h[:, -1:]
+    h = m.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = _head(cfg, params, h)
+    return logits, {"prefix": prefix_caches, "blocks": caches}, aux
+
+
+def _head(cfg: ModelConfig, params: dict, h: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", h,
+                            params["embed"].astype(h.dtype))
+    else:
+        logits = h @ params["unembed"].astype(h.dtype)
+    return shd.constrain(logits.astype(F32), "logits")
+
+
+def loss_fn(cfg: ModelConfig, logits: jax.Array, batch: dict,
+            aux: dict | None = None) -> jax.Array:
+    """Next-token CE (causal LM) or per-frame CE (encoder), fp32, masked."""
+    labels = batch.get("labels")
+    if cfg.is_encoder:
+        targets, mask = labels, jnp.ones(labels.shape, F32)
+    else:
+        tok = batch["tokens"]
+        targets = tok[:, 1:]
+        mask = batch.get("loss_mask", jnp.ones_like(tok, F32))[:, 1:].astype(F32)
+        n_img = logits.shape[1] - tok.shape[1]
+        if n_img > 0:                       # vlm: image prefix predicts nothing
+            logits = logits[:, n_img:]
+        logits = logits[:, :-1]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # one-hot contraction instead of take_along_axis: keeps the vocab dim
+    # sharded (a sharded-dim gather would force a full fp32 logits
+    # all-gather — tens of GB/device at 152k-256k vocabs)
+    ll = jnp.sum(logits * jax.nn.one_hot(targets, logits.shape[-1],
+                                         dtype=logits.dtype), axis=-1)
+    nll = jnp.sum((lse - ll) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    z_loss = 1e-4 * jnp.sum((lse * mask) ** 2) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = nll + z_loss
+    if aux:
+        total = total + 0.01 * aux.get("load_balance", 0.0) \
+            + 0.001 * aux.get("router_z", 0.0)
+    return total
+
+
+# ------------------------------------------------------------------ cache
+def _init_block_cache(cfg: ModelConfig, kind: str, batch: int, seq_len: int,
+                      dtype=jnp.bfloat16):
+    if kind in ("global", "local"):
+        return m.init_attention_cache(cfg, batch, seq_len,
+                                      local=(kind == "local"), dtype=dtype)
+    if kind == "recurrent":
+        return m.init_recurrent_cache(cfg, batch)
+    if kind == "mlstm":
+        return m.init_mlstm_cache(cfg, batch)
+    if kind == "slstm":
+        return m.init_slstm_cache(cfg, batch)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    """Decode cache pytree: per cycle position, leaves stacked [n_cycles,...]."""
+    n = _n_cycles(cfg)
+    stacked = []
+    for kind in cfg.cycle:
+        one = _init_block_cache(cfg, kind, batch, seq_len, dtype)
+        stacked.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n, *x.shape)), one))
+    prefix = [_init_block_cache(cfg, kind, batch, seq_len, dtype)
+              for kind in cfg.prefix_pattern]
+    return {"prefix": prefix, "blocks": tuple(stacked)}
+
+
+def decode_step(cfg: ModelConfig, params: dict, caches: dict,
+                tokens: jax.Array, pos: jax.Array):
+    """One decode step.  tokens: [B, 1] -> (logits [B, 1, V], new caches)."""
+    h = params["embed"][tokens].astype(jnp.bfloat16)
+    if cfg.frontend == "vision":
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    new_prefix = []
+    for kind, p, c in zip(cfg.prefix_pattern, params.get("prefix", []),
+                          caches["prefix"]):
+        h, c = block_step(cfg, kind, p, h, c, pos)
+        new_prefix.append(c)
+
+    def cycle_fn(h, xs):
+        p_cycle, c_cycle = xs
+        new_c = []
+        for i, kind in enumerate(cfg.cycle):
+            h, c = block_step(cfg, kind, p_cycle[i], h, c_cycle[i], pos)
+            new_c.append(c)
+        return h, tuple(new_c)
+
+    h, new_caches = jax.lax.scan(cycle_fn, h,
+                                 (params["blocks"], caches["blocks"]))
+    h = m.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = _head(cfg, params, h)
+    return logits, {"prefix": new_prefix, "blocks": new_caches}
+
+
+def extend_caches(cfg: ModelConfig, caches: dict, max_len: int) -> dict:
+    """Pad prefill caches (global-attention k/v of length S) to decode
+    capacity ``max_len``.  Rolling/local and recurrent caches are already
+    fixed-size."""
+    def pad(kind, cache):
+        if kind == "global":
+            s = cache["k"].shape[-3]
+            if s < max_len:
+                def pad_one(name, v):
+                    # seq axis: ndim-3 for k/v, ndim-2 for per-head scales
+                    ax = v.ndim - (2 if name.endswith("_scale") else 3)
+                    widths = [(0, 0)] * v.ndim
+                    widths[ax] = (0, max_len - s)
+                    return jnp.pad(v, widths)
+                return {k: pad_one(k, v) for k, v in cache.items()}
+        return cache
+
+    blocks = tuple(pad(kind, c)
+                   for kind, c in zip(cfg.cycle, caches["blocks"]))
+    prefix = [pad(kind, c)
+              for kind, c in zip(cfg.prefix_pattern, caches["prefix"])]
+    return {"prefix": prefix, "blocks": blocks}
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict,
+            max_len: int | None = None):
+    """Process a prompt, returning (last-position logits, decode caches)."""
+    logits, caches, _ = forward(cfg, params, batch, remat=False,
+                                collect_cache=True, last_only=True)
+    if max_len is not None:
+        caches = extend_caches(cfg, caches, max_len)
+    return logits, caches

@@ -1,0 +1,633 @@
+"""Model building blocks — pure JAX, pure functions, params as pytrees.
+
+Every time-axis loop (attention q-chunks, mLSTM/sLSTM chunkwise scans) uses
+``config.CHUNK``-sized chunks via ``lax.scan`` so the lowered HLO has a
+uniform depth->trip-count structure (see launch/roofline.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import sharding as shd
+from .config import CHUNK, ModelConfig
+
+F32 = jnp.float32
+BF16 = jnp.bfloat16
+
+
+# ------------------------------------------------------------------ basics
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(F32))).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, dh]; positions: broadcastable to [..., S]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=F32) / half))
+    ang = positions[..., None].astype(F32) * freqs            # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]                          # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(F32), x[..., half:].astype(F32)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def _kv_quantize(x: jax.Array):
+    """Per-(position, head) absmax int8 quantization of K/V.
+
+    x: [..., H, dh] -> (int8 same shape, f32 scale [..., H])."""
+    amax = jnp.max(jnp.abs(x.astype(F32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(F32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _kv_dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(F32) * scale[..., None].astype(F32)
+
+
+def _chunk_of(s: int) -> int:
+    """Largest chunk <= CHUNK dividing s (smoke tests use tiny sequences)."""
+    c = min(CHUNK, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+# --------------------------------------------------------------- attention
+def init_attention(cfg: ModelConfig, key) -> dict:
+    d, h, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {
+        "wq": (jax.random.normal(k1, (d, h, dh)) * s).astype(dt),
+        "wk": (jax.random.normal(k2, (d, hkv, dh)) * s).astype(dt),
+        "wv": (jax.random.normal(k3, (d, hkv, dh)) * s).astype(dt),
+        "wo": (jax.random.normal(k4, (h, dh, d)) * s).astype(dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((dh,), dt)
+        p["k_norm"] = jnp.zeros((dh,), dt)
+    return p
+
+
+def _mask(qpos, kpos, *, causal: bool, window: int) -> jax.Array:
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        m &= kpos[None, :] > qpos[:, None] - window
+    return m
+
+
+def attention_full(p: dict, x: jax.Array, cfg: ModelConfig, *,
+                   local: bool) -> tuple[jax.Array, dict]:
+    """Training/prefill attention, chunked over queries.
+
+    Returns (out [B,S,D], cache {k, v}) — cache is the rolling window for
+    local layers, the full sequence otherwise."""
+    b, s, d = x.shape
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // hkv
+    q = shd.constrain(jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype)),
+                      "heads")
+    k = shd.constrain(jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype)),
+                      "heads")
+    v = shd.constrain(jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype)),
+                      "heads")
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    pos = jnp.arange(s)
+    q = rope(q, pos[None, :], cfg.rope_theta)
+    k = rope(k, pos[None, :], cfg.rope_theta)
+    window = cfg.window_size if local else 0
+
+    chunk = _chunk_of(s)
+    n_chunks = s // chunk
+    qc = q.reshape(b, n_chunks, chunk, hkv, g, dh).transpose(1, 0, 2, 3, 4, 5)
+    starts = jnp.arange(n_chunks) * chunk
+    scale = dh ** -0.5
+
+    @jax.checkpoint
+    def body(_, xs):
+        # rematerialized per-chunk: the scan backward would otherwise stack
+        # every chunk's [B,H,C,S] score matrix (= full S^2 memory)
+        qch, start = xs                                   # [B,C,Hkv,G,dh]
+        scores = jnp.einsum("bckgd,bskd->bkgcs", qch.astype(F32),
+                            k.astype(F32)) * scale
+        qpos = start + jnp.arange(chunk)
+        m = _mask(qpos, pos, causal=cfg.causal, window=window)
+        scores = jnp.where(m[None, None, None], scores, -1e30)
+        if cfg.logit_softcap > 0:
+            cap = cfg.logit_softcap
+            scores = cap * jnp.tanh(scores / cap)
+        w = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgcs,bskd->bckgd", w, v.astype(F32))
+        return (), out.astype(x.dtype)
+
+    _, oc = jax.lax.scan(body, (), (qc, starts))
+    out = shd.constrain(
+        oc.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, dh), "heads")
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    if local:
+        w_sz = cfg.window_size
+        if s >= w_sz:
+            # rolling cache: slot j holds the latest position with pos%w == j
+            tail_k = jax.lax.dynamic_slice_in_dim(k, s - w_sz, w_sz, axis=1)
+            tail_v = jax.lax.dynamic_slice_in_dim(v, s - w_sz, w_sz, axis=1)
+            shift = s % w_sz
+            kcache = jnp.roll(tail_k, shift, axis=1)
+            vcache = jnp.roll(tail_v, shift, axis=1)
+        else:
+            kcache = jnp.pad(k, ((0, 0), (0, w_sz - s), (0, 0), (0, 0)))
+            vcache = jnp.pad(v, ((0, 0), (0, w_sz - s), (0, 0), (0, 0)))
+        cache = {"k": kcache, "v": vcache}
+    else:
+        cache = {"k": k, "v": v}
+    if cfg.kv_cache_dtype == "int8":
+        qk, sk = _kv_quantize(cache["k"])
+        qv, sv = _kv_quantize(cache["v"])
+        cache = {"k": qk, "v": qv, "k_scale": sk, "v_scale": sv}
+    return y, cache
+
+
+def attention_step(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
+                   cfg: ModelConfig, *, local: bool) -> tuple[jax.Array, dict]:
+    """Single-token decode step.  x: [B, 1, D]; cache k/v: [B, Sc, Hkv, dh].
+
+    ``pos`` may be a scalar or a per-sequence [B] vector (continuous
+    batching: each slot advances independently).  Global layers write cache
+    slot ``pos``; local layers write the rolling slot ``pos % window``."""
+    b = x.shape[0]
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // hkv
+    pos = jnp.broadcast_to(jnp.asarray(pos), (b,))
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    posb = pos[:, None]
+    q = rope(q, posb, cfg.rope_theta)
+    k = rope(k, posb, cfg.rope_theta)
+    sc = cache["k"].shape[1]
+    slot = (pos % sc) if local else pos
+    barange = jnp.arange(b)
+    int8_kv = "k_scale" in cache
+    if int8_kv:
+        qk, sk = _kv_quantize(k[:, 0])
+        qv, sv = _kv_quantize(v[:, 0])
+        cache = {"k": cache["k"].at[barange, slot].set(qk),
+                 "v": cache["v"].at[barange, slot].set(qv),
+                 "k_scale": cache["k_scale"].at[barange, slot].set(sk),
+                 "v_scale": cache["v_scale"].at[barange, slot].set(sv)}
+        kc = _kv_dequantize(cache["k"], cache["k_scale"])
+        vc = _kv_dequantize(cache["v"], cache["v_scale"])
+    else:
+        kc = cache["k"].at[barange, slot].set(k[:, 0].astype(cache["k"].dtype))
+        vc = cache["v"].at[barange, slot].set(v[:, 0].astype(cache["v"].dtype))
+    idx = jnp.arange(sc)[None, :]
+    if local:
+        # slot j currently holds absolute position p - ((p - j) mod Sc)
+        abs_pos = pos[:, None] - jnp.mod(pos[:, None] - idx, sc)
+        valid = (abs_pos >= 0) & (abs_pos <= pos[:, None])
+    else:
+        valid = idx <= pos[:, None]
+    scores = jnp.einsum(
+        "bkgd,bskd->bkgs",
+        q.reshape(b, hkv, g, dh).astype(F32), kc.astype(F32)) * (dh ** -0.5)
+    scores = jnp.where(valid[:, None, None], scores, -1e30)
+    if cfg.logit_softcap > 0:
+        scores = cfg.logit_softcap * jnp.tanh(scores / cfg.logit_softcap)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, vc.astype(F32))
+    y = jnp.einsum("bhk,hkd->bd", out.reshape(b, h, dh).astype(x.dtype),
+                   p["wo"].astype(x.dtype))[:, None, :]
+    if int8_kv:
+        return y, cache
+    return y, {"k": kc, "v": vc}
+
+
+def init_attention_cache(cfg: ModelConfig, batch: int, seq_len: int, *,
+                         local: bool, dtype=BF16) -> dict:
+    sc = min(cfg.window_size, seq_len) if local else seq_len
+    shape = (batch, sc, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.kv_cache_dtype == "int8":
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:-1], F32),
+                "v_scale": jnp.zeros(shape[:-1], F32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# --------------------------------------------------------------------- mlp
+def init_mlp(cfg: ModelConfig, key, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    p = {"w_up": (jax.random.normal(ks[0], (d, f)) * d ** -0.5).astype(dt),
+         "w_down": (jax.random.normal(ks[1], (f, d)) * f ** -0.5).astype(dt)}
+    if cfg.mlp_variant in ("swiglu", "geglu"):
+        p["w_gate"] = (jax.random.normal(ks[2], (d, f)) * d ** -0.5).astype(dt)
+    return p
+
+
+def mlp(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    up = shd.constrain(x @ p["w_up"].astype(x.dtype), "ffn_hidden")
+    if cfg.mlp_variant == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"].astype(x.dtype)) * up
+    elif cfg.mlp_variant == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"].astype(x.dtype)) * up
+    elif cfg.mlp_variant == "gelu":
+        h = jax.nn.gelu(up)
+    elif cfg.mlp_variant == "relu2":
+        h = jnp.square(jax.nn.relu(up))
+    else:
+        raise ValueError(cfg.mlp_variant)
+    return shd.constrain(h, "ffn_hidden") @ p["w_down"].astype(x.dtype)
+
+
+# --------------------------------------------------------------------- moe
+MOE_GROUP = 1024     # tokens per dispatch group (GShard-style)
+
+
+def init_moe(cfg: ModelConfig, key) -> dict:
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, e)) * d ** -0.5).astype(F32),
+        "wi": (jax.random.normal(ks[1], (e, d, f)) * d ** -0.5).astype(dt),
+        "wg": (jax.random.normal(ks[2], (e, d, f)) * d ** -0.5).astype(dt),
+        "wo": (jax.random.normal(ks[3], (e, f, d)) * f ** -0.5).astype(dt),
+    }
+    if cfg.n_shared_experts:
+        sub = dataclasses.replace(cfg, mlp_variant="swiglu")
+        p["shared"] = init_mlp(sub, ks[4],
+                               d_ff=cfg.moe_d_ff * cfg.n_shared_experts)
+    return p
+
+
+def moe(p: dict, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    """Token-choice top-k MoE with capacity dropping (GShard/Switch style).
+
+    x: [B, S, D].  Tokens regroup into MOE_GROUP-sized dispatch groups; the
+    one-hot dispatch einsum keeps every shape static (TPU-friendly), experts
+    shard over the ``model`` mesh axis.  Returns (y, aux_losses)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    t = b * s
+    g = min(MOE_GROUP, t)
+    while t % g:
+        g -= 1
+    xg = x.reshape(t // g, g, d)
+    cap = int(np.ceil(g * k * cfg.capacity_factor / e))
+    cap = max(4, min(cap, g))
+
+    def one_group(xt):                                    # [G, D]
+        logits = (xt.astype(F32) @ p["router"]).astype(F32)   # [G, E]
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, sel = jax.lax.top_k(probs, k)                  # [G, k]
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+        counts = jnp.zeros((e,), F32)
+        combine = jnp.zeros((g, e, cap), F32)
+        for i in range(k):
+            oh = jax.nn.one_hot(sel[:, i], e, dtype=F32)          # [G, E]
+            pos = counts[None, :] + jnp.cumsum(oh, axis=0) - oh   # [G, E]
+            keep = oh * (pos < cap)
+            combine = combine + (w[:, i:i + 1] * keep)[:, :, None] \
+                * jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=F32)
+            counts = counts + keep.sum(axis=0)
+        dispatch = (combine > 0).astype(xt.dtype)         # [G, E, C]
+        xin = jnp.einsum("gec,gd->ecd", dispatch, xt)
+        hi = jnp.einsum("ecd,edf->ecf", xin, p["wi"].astype(xt.dtype))
+        hg = jnp.einsum("ecd,edf->ecf", xin, p["wg"].astype(xt.dtype))
+        h = jax.nn.silu(hg) * hi
+        out = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(xt.dtype))
+        y = jnp.einsum("gec,ecd->gd", combine.astype(xt.dtype), out)
+        # aux: Switch load-balance + router z-loss
+        frac_tokens = jnp.mean(jax.nn.one_hot(sel[:, 0], e, dtype=F32), axis=0)
+        frac_probs = jnp.mean(probs, axis=0)
+        lb = e * jnp.sum(frac_tokens * frac_probs)
+        z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+        return y, lb, z
+
+    y, lb, z = jax.vmap(one_group)(xg)
+    y = y.reshape(b, s, d)
+    if cfg.n_shared_experts:
+        sub = dataclasses.replace(cfg, mlp_variant="swiglu")
+        y = y + mlp(p["shared"], x, sub)
+    return y, {"load_balance": lb.mean(), "router_z": z.mean()}
+
+
+# ----------------------------------------------------------------- RG-LRU
+def init_recurrent(cfg: ModelConfig, key) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 7)
+    s = d ** -0.5
+    # Griffin recurrent block: two input branches, temporal conv, RG-LRU,
+    # gated multiply, output projection.
+    c = 0.8 + 0.1 * jax.random.uniform(ks[4], (w,))       # a init near 1
+    return {
+        "w_x": (jax.random.normal(ks[0], (d, w)) * s).astype(dt),
+        "w_gate": (jax.random.normal(ks[1], (d, w)) * s).astype(dt),
+        "w_out": (jax.random.normal(ks[2], (w, d)) * w ** -0.5).astype(dt),
+        "conv_w": (jax.random.normal(ks[3], (4, w)) * 0.5).astype(dt),
+        "a_param": jnp.log(jnp.exp(8.0 * c) - 1.0).astype(F32),  # softplus inv
+        "w_input_gate": (jax.random.normal(ks[5], (w,)) * 0.1).astype(dt),
+        "w_a_gate": (jax.random.normal(ks[6], (w,)) * 0.1).astype(dt),
+    }
+
+
+def _rglru_coeffs(p, xw):
+    """Per-step gate computation.  xw: [..., W] branch input (post conv)."""
+    r = jax.nn.sigmoid(xw.astype(F32) * p["w_a_gate"].astype(F32))
+    i = jax.nn.sigmoid(xw.astype(F32) * p["w_input_gate"].astype(F32))
+    log_a = -8.0 * r * jax.nn.softplus(p["a_param"])      # c=8 as in Griffin
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    return a, beta * i * xw.astype(F32)
+
+
+def recurrent_full(p: dict, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    """Griffin recurrent block over a full sequence (associative scan)."""
+    b, s, d = x.shape
+    xw = shd.constrain(x @ p["w_x"].astype(x.dtype), "ffn_hidden")  # [B,S,W]
+    gate = jax.nn.gelu(
+        shd.constrain(x @ p["w_gate"].astype(x.dtype), "ffn_hidden"))
+    # temporal conv width 4 (causal)
+    xp = jnp.pad(xw, ((0, 0), (3, 0), (0, 0)))
+    conv = sum(xp[:, i:i + s] * p["conv_w"][i].astype(x.dtype)
+               for i in range(4))
+    a, bx = _rglru_coeffs(p, conv)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    af, bf = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    h = bf                                                # h_t with h_0 = 0
+    y = (h.astype(x.dtype) * gate) @ p["w_out"].astype(x.dtype)
+    cache = {"h": h[:, -1].astype(F32),
+             "conv": xw[:, -3:].astype(F32) if s >= 3 else
+             jnp.pad(xw, ((0, 0), (3 - s, 0), (0, 0))).astype(F32)}
+    return y, cache
+
+
+def recurrent_step(p: dict, x: jax.Array, cache: dict, cfg: ModelConfig
+                   ) -> tuple[jax.Array, dict]:
+    b = x.shape[0]
+    xw = (x[:, 0] @ p["w_x"].astype(x.dtype))             # [B, W]
+    gate = jax.nn.gelu(x[:, 0] @ p["w_gate"].astype(x.dtype))
+    hist = jnp.concatenate([cache["conv"].astype(xw.dtype), xw[:, None]], axis=1)
+    conv = sum(hist[:, i] * p["conv_w"][i].astype(x.dtype) for i in range(4))
+    a, bx = _rglru_coeffs(p, conv)
+    h = a * cache["h"] + bx
+    y = ((h.astype(x.dtype) * gate) @ p["w_out"].astype(x.dtype))[:, None]
+    return y, {"h": h, "conv": hist[:, 1:].astype(F32)}
+
+
+def init_recurrent_cache(cfg: ModelConfig, batch: int) -> dict:
+    w = cfg.lru_width or cfg.d_model
+    return {"h": jnp.zeros((batch, w), F32),
+            "conv": jnp.zeros((batch, 3, w), F32)}
+
+
+# ------------------------------------------------------------------ mLSTM
+def init_mlstm(cfg: ModelConfig, key) -> dict:
+    d = cfg.d_model
+    f = int(cfg.mlstm_proj_factor * d)
+    h = cfg.num_heads
+    dh = f // h
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    return {
+        "w_up": (jax.random.normal(ks[0], (d, f)) * s).astype(dt),
+        "w_gate": (jax.random.normal(ks[1], (d, f)) * s).astype(dt),
+        "w_down": (jax.random.normal(ks[2], (f, d)) * f ** -0.5).astype(dt),
+        "wq": (jax.random.normal(ks[3], (f, h, dh)) * f ** -0.5).astype(dt),
+        "wk": (jax.random.normal(ks[4], (f, h, dh)) * f ** -0.5).astype(dt),
+        "wv": (jax.random.normal(ks[5], (f, h, dh)) * f ** -0.5).astype(dt),
+        "w_if": (jax.random.normal(ks[6], (f, h, 2)) * f ** -0.5).astype(F32),
+        "out_norm": jnp.zeros((f,), dt),
+    }
+
+
+def _mlstm_chunk(q, k, v, i_gate, f_gate, c0, n0, m0):
+    """One chunk of the mLSTM chunkwise-parallel form.
+
+    q,k,v: [B,C,H,dh]; i,f: [B,C,H] log-space gates; state c0 [B,H,dh,dh],
+    n0 [B,H,dh], m0 [B,H].  Returns (out [B,C,H,dh], c1, n1, m1)."""
+    bsz, c, h, dh = q.shape
+    logf = jax.nn.log_sigmoid(f_gate)                      # [B,C,H]
+    lf_cum = jnp.cumsum(logf, axis=1)                      # inclusive b_t
+    # intra-chunk contribution weight of step s to step t (s <= t):
+    # exp(b_t - b_s + i_s) — decay over f_{s+1..t} times input gate i_s.
+    a = lf_cum[:, :, None, :] - lf_cum[:, None, :, :]      # [B,T,S,H]
+    logd = a + i_gate[:, None, :, :]
+    tmask = jnp.tril(jnp.ones((c, c), bool))
+    logd = jnp.where(tmask[None, :, :, None], logd, -1e30)
+    # inter-chunk state (convention: true_C = c * exp(m)) enters step t with
+    # weight exp(b_t + m0).
+    logstate = lf_cum + m0[:, None, :]                     # [B,C,H]
+    m = jnp.maximum(jnp.max(logd, axis=2), logstate)       # [B,C,H]
+    dmat = jnp.exp(logd - m[:, :, None, :])                # [B,T,S,H]
+    sstate = jnp.exp(logstate - m)                         # [B,C,H]
+    qf = q.astype(F32) * (dh ** -0.5)
+    scores = jnp.einsum("bthd,bshd->btsh", qf, k.astype(F32)) * dmat
+    num_intra = jnp.einsum("btsh,bshd->bthd", scores, v.astype(F32))
+    num_inter = jnp.einsum("bthd,bhde->bthe", qf, c0) * sstate[..., None]
+    den_inter = jnp.einsum("bthd,bhd->bth", qf, n0) * sstate
+    num = num_intra + num_inter
+    den = jnp.maximum(jnp.abs(jnp.einsum("btsh->bth", scores) + den_inter),
+                      jnp.exp(-m))
+    out = num / den[..., None]
+    # chunk-final state
+    lf_tot = lf_cum[:, -1]                                 # [B,H]
+    m1 = jnp.maximum(lf_tot + m0, jnp.max(i_gate + (lf_tot[:, None] - lf_cum), axis=1))
+    w_state = jnp.exp(lf_tot + m0 - m1)                    # [B,H]
+    w_in = jnp.exp(i_gate + (lf_tot[:, None, :] - lf_cum) - m1[:, None, :])
+    c1 = c0 * w_state[..., None, None] + jnp.einsum(
+        "bshd,bshe,bsh->bhde", k.astype(F32), v.astype(F32), w_in)
+    n1 = n0 * w_state[..., None] + jnp.einsum(
+        "bshd,bsh->bhd", k.astype(F32), w_in)
+    return out, c1, n1, m1
+
+
+def mlstm_full(p: dict, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    b, s, d = x.shape
+    f = int(cfg.mlstm_proj_factor * d)
+    h = cfg.num_heads
+    dh = f // h
+    up = shd.constrain(x @ p["w_up"].astype(x.dtype), "ffn_hidden")  # [B,S,F]
+    gate = jax.nn.silu(
+        shd.constrain(x @ p["w_gate"].astype(x.dtype), "ffn_hidden"))
+    q = jnp.einsum("bsf,fhd->bshd", up, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsf,fhd->bshd", up, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsf,fhd->bshd", up, p["wv"].astype(x.dtype))
+    gates = jnp.einsum("bsf,fhg->bshg", up.astype(F32), p["w_if"])
+    i_gate, f_gate = gates[..., 0], gates[..., 1] + 3.0    # forget bias
+    chunk = _chunk_of(s)
+    nc = s // chunk
+
+    def to_chunks(t):
+        return t.reshape(b, nc, chunk, *t.shape[2:]).transpose(1, 0, 2, *range(3, t.ndim + 1))
+
+    @jax.checkpoint
+    def body(carry, xs):
+        c0, n0, m0 = carry
+        qc, kc, vc, ic, fc = xs
+        out, c1, n1, m1 = _mlstm_chunk(qc, kc, vc, ic, fc, c0, n0, m0)
+        return (c1, n1, m1), out
+
+    # empty-state stabilizer init must match init_mlstm_cache (-1e30), or
+    # the exp(-m) denominator bound differs between train and decode paths
+    init = (jnp.zeros((b, h, dh, dh), F32), jnp.zeros((b, h, dh), F32),
+            jnp.full((b, h), -1e30, F32))
+    (c1, n1, m1), outs = jax.lax.scan(
+        body, init, (to_chunks(q), to_chunks(k), to_chunks(v),
+                     to_chunks(i_gate), to_chunks(f_gate)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, s, f)
+    out = rms_norm(out.astype(x.dtype), p["out_norm"], cfg.norm_eps)
+    y = (out * gate) @ p["w_down"].astype(x.dtype)
+    return y, {"c": c1, "n": n1, "m": m1}
+
+
+def mlstm_step(p: dict, x: jax.Array, cache: dict, cfg: ModelConfig
+               ) -> tuple[jax.Array, dict]:
+    b = x.shape[0]
+    d = cfg.d_model
+    f = int(cfg.mlstm_proj_factor * d)
+    h = cfg.num_heads
+    dh = f // h
+    up = x[:, 0] @ p["w_up"].astype(x.dtype)               # [B,F]
+    gate = jax.nn.silu(x[:, 0] @ p["w_gate"].astype(x.dtype))
+    q = jnp.einsum("bf,fhd->bhd", up, p["wq"].astype(x.dtype)).astype(F32)
+    k = jnp.einsum("bf,fhd->bhd", up, p["wk"].astype(x.dtype)).astype(F32)
+    v = jnp.einsum("bf,fhd->bhd", up, p["wv"].astype(x.dtype)).astype(F32)
+    gts = jnp.einsum("bf,fhg->bhg", up.astype(F32), p["w_if"])
+    i_g, f_g = gts[..., 0], gts[..., 1] + 3.0
+    logf = jax.nn.log_sigmoid(f_g)
+    c0, n0, m0 = cache["c"], cache["n"], cache["m"]
+    m1 = jnp.maximum(logf + m0, i_g)
+    wf = jnp.exp(logf + m0 - m1)
+    wi = jnp.exp(i_g - m1)
+    c1 = c0 * wf[..., None, None] + jnp.einsum("bhd,bhe->bhde", k, v) * wi[..., None, None]
+    n1 = n0 * wf[..., None] + k * wi[..., None]
+    qs = q * (dh ** -0.5)
+    num = jnp.einsum("bhd,bhde->bhe", qs, c1)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qs, n1)), jnp.exp(-m1))
+    out = (num / den[..., None]).reshape(b, f)
+    out = rms_norm(out.astype(x.dtype), p["out_norm"], cfg.norm_eps)
+    y = ((out * gate) @ p["w_down"].astype(x.dtype))[:, None]
+    return y, {"c": c1, "n": n1, "m": m1}
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int) -> dict:
+    f = int(cfg.mlstm_proj_factor * cfg.d_model)
+    h = cfg.num_heads
+    dh = f // h
+    return {"c": jnp.zeros((batch, h, dh, dh), F32),
+            "n": jnp.zeros((batch, h, dh), F32),
+            "m": jnp.full((batch, h), -1e30, F32)}
+
+
+# ------------------------------------------------------------------ sLSTM
+def init_slstm(cfg: ModelConfig, key) -> dict:
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    f = int(cfg.slstm_proj_factor * d)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 7)
+    s = d ** -0.5
+    return {
+        "w_in": (jax.random.normal(ks[0], (d, 4, d)) * s).astype(dt),
+        # block-diagonal recurrence: per head [dh, dh] for each of 4 gates
+        "r": (jax.random.normal(ks[1], (4, h, dh, dh)) * dh ** -0.5).astype(F32),
+        "b": jnp.zeros((4, d), F32),
+        "out_norm": jnp.zeros((d,), dt),
+        "w_up": (jax.random.normal(ks[2], (d, 2, f)) * s).astype(dt),
+        "w_down": (jax.random.normal(ks[3], (f, d)) * f ** -0.5).astype(dt),
+    }
+
+
+def _slstm_cell(zx, state, p, h_heads):
+    """One time step.  zx: [B, 4, D] pre-activations (input part)."""
+    c, n, m, hprev = state
+    b, _, d = zx.shape
+    hh = hprev.reshape(b, h_heads, -1)
+    rec = jnp.einsum("ghde,bhd->gbhe", p["r"], hh).transpose(1, 0, 2, 3) \
+        .reshape(b, 4, d)
+    pre = zx.astype(F32) + rec + p["b"][None]
+    zt = jnp.tanh(pre[:, 0])
+    it = pre[:, 1]
+    ft = pre[:, 2]
+    ot = jax.nn.sigmoid(pre[:, 3])
+    logf = jax.nn.log_sigmoid(ft)
+    m1 = jnp.maximum(logf + m, it)
+    wi = jnp.exp(it - m1)
+    wf = jnp.exp(logf + m - m1)
+    c1 = wf * c + wi * zt
+    n1 = wf * n + wi
+    h1 = ot * (c1 / jnp.maximum(n1, 1e-6))
+    return (c1, n1, m1, h1), h1
+
+
+def slstm_full(p: dict, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    b, s, d = x.shape
+    h = cfg.num_heads
+    zx = jnp.einsum("bsd,dge->bsge", x, p["w_in"].astype(x.dtype))  # [B,S,4,D]
+    chunk = _chunk_of(s)
+    nc = s // chunk
+    zc = zx.reshape(b, nc, chunk, 4, d).transpose(1, 2, 0, 3, 4)    # [nc,C,B,4,D]
+
+    @jax.checkpoint
+    def chunk_body(state, zchunk):                                  # depth-1
+        def step(st, zt):                                           # depth-2
+            return _slstm_cell(zt, st, p, h)
+        state, hs = jax.lax.scan(step, state, zchunk)
+        return state, hs
+
+    init = (jnp.zeros((b, d), F32), jnp.zeros((b, d), F32),
+            jnp.full((b, d), -1e30, F32), jnp.zeros((b, d), F32))
+    state, hs = jax.lax.scan(chunk_body, init, zc)                  # [nc,C,B,D]
+    hseq = hs.transpose(2, 0, 1, 3).reshape(b, s, d).astype(x.dtype)
+    hseq = rms_norm(hseq, p["out_norm"], cfg.norm_eps)
+    up = jnp.einsum("bsd,dgf->bsgf", hseq, p["w_up"].astype(x.dtype))
+    y = (jax.nn.gelu(up[:, :, 0]) * up[:, :, 1]) @ p["w_down"].astype(x.dtype)
+    return y, {"c": state[0], "n": state[1], "m": state[2], "h": state[3]}
+
+
+def slstm_step(p: dict, x: jax.Array, cache: dict, cfg: ModelConfig
+               ) -> tuple[jax.Array, dict]:
+    zx = jnp.einsum("bd,dge->bge", x[:, 0], p["w_in"].astype(x.dtype))
+    state = (cache["c"], cache["n"], cache["m"], cache["h"])
+    state, h1 = _slstm_cell(zx, state, p, cfg.num_heads)
+    hs = rms_norm(h1.astype(x.dtype), p["out_norm"], cfg.norm_eps)
+    up = jnp.einsum("bd,dgf->bgf", hs, p["w_up"].astype(x.dtype))
+    y = ((jax.nn.gelu(up[:, 0]) * up[:, 1]) @ p["w_down"].astype(x.dtype))[:, None]
+    return y, {"c": state[0], "n": state[1], "m": state[2], "h": state[3]}
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int) -> dict:
+    d = cfg.d_model
+    return {"c": jnp.zeros((batch, d), F32), "n": jnp.zeros((batch, d), F32),
+            "m": jnp.full((batch, d), -1e30, F32),
+            "h": jnp.zeros((batch, d), F32)}

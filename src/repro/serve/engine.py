@@ -1,0 +1,198 @@
+"""Batched serving engine with APack-compressed weights.
+
+Continuous-batching-lite: a fixed pool of decode slots; finished sequences
+retire and waiting requests are admitted with a (jit-cached) single-request
+prefill.  Weights arrive APack-compressed (``compress_params``): the engine
+decompresses through the bit-exact codec at load and keeps per-tensor
+traffic stats — on TPU the fused ``decompress_matmul`` kernel consumes the
+compressed planes directly (kernels/decompress_matmul.py), which is the
+paper's Figure-1 integration; this engine is the scheduling layer above it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant, tables
+from repro.kernels import fastpath, ops
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # [S] int32
+    max_new_tokens: int = 32
+    eos_id: int | None = None
+    tokens: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    t_submit: float = 0.0
+    t_done: float = 0.0
+
+
+@dataclasses.dataclass
+class CompressedParams:
+    """APack-compressed int8 view of a param tree (large matrices only)."""
+    containers: dict                     # path -> (CompressedTensor, QuantParams)
+    passthrough: dict                    # path -> raw small leaves
+    treedef: Any
+    n_leaves: int
+    original_bytes: int
+    compressed_bytes: int
+
+    @property
+    def ratio(self) -> float:
+        return self.original_bytes / max(self.compressed_bytes, 1)
+
+
+def compress_params(params: Any, min_size: int = 16384) -> CompressedParams:
+    """int8-quantize + APack-compress every large matrix in a param tree."""
+    leaves, treedef = jax.tree.flatten(params)
+    containers: dict = {}
+    passthrough: dict = {}
+    orig = comp = 0
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        orig += arr.nbytes
+        if arr.size >= min_size and arr.dtype.kind == "f" and arr.ndim >= 2:
+            q, qp = quant.quantize_symmetric(jnp.asarray(arr, jnp.float32),
+                                             axis=-1)
+            u = quant.to_unsigned(np.asarray(q))
+            table = tables.table_for(u.reshape(-1)[:2 ** 20],
+                                     is_activation=True)
+            ct = fastpath.compress_np(u, table)
+            containers[i] = (ct, np.asarray(qp.scale), str(arr.dtype))
+            comp += ct.total_bits // 8
+        else:
+            passthrough[i] = arr
+            comp += arr.nbytes
+    return CompressedParams(containers=containers, passthrough=passthrough,
+                            treedef=treedef, n_leaves=len(leaves),
+                            original_bytes=orig, compressed_bytes=comp)
+
+
+def decompress_params(cp: CompressedParams) -> Any:
+    leaves: list = [None] * cp.n_leaves
+    for i, arr in cp.passthrough.items():
+        leaves[i] = jnp.asarray(arr)
+    for i, (ct, scale, dtype) in cp.containers.items():
+        u = fastpath.decompress_np(ct)
+        q = quant.from_unsigned(u, bits=ct.bits)
+        leaves[i] = (jnp.asarray(q, jnp.float32)
+                     * jnp.asarray(scale)).astype(jnp.dtype(dtype))
+    return jax.tree.unflatten(cp.treedef, leaves)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params: Any, *, max_batch: int = 8,
+                 max_len: int = 256, eos_id: int | None = None):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.queue: deque[Request] = deque()
+        self.active: list[Request | None] = [None] * max_batch
+        self.positions = np.zeros(max_batch, np.int32)
+        self.cache = M.init_cache(cfg, max_batch, max_len)
+        self.last_tokens = np.zeros((max_batch, 1), np.int32)
+        self.stats = {"steps": 0, "generated": 0, "completed": 0}
+        self._decode = jax.jit(
+            lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos))
+        self._prefill_cache = {}
+
+    # -------------------------------------------------------- scheduling
+    def submit(self, req: Request) -> None:
+        req.t_submit = time.time()
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.max_batch):
+            if self.active[slot] is None and self.queue:
+                req = self.queue.popleft()
+                self._prefill_into_slot(slot, req)
+
+    def _prefill_into_slot(self, slot: int, req: Request) -> None:
+        # single-request prefill at the exact prompt length (jit-cached per
+        # length — submit same-length prompts for best compile reuse)
+        s = len(req.prompt)
+        if s not in self._prefill_cache:
+            self._prefill_cache[s] = jax.jit(
+                lambda p, t: M.forward(self.cfg, p, {"tokens": t},
+                                       remat=False, collect_cache=True,
+                                       last_only=True)[:2])
+        logits, caches = self._prefill_cache[s](
+            self.params, jnp.asarray(np.asarray(req.prompt)[None]))
+        # write this sequence's prefill cache into the batch cache at `slot`
+        caches = M.extend_caches(self.cfg, caches, self.max_len)
+
+        def put(batch_leaf, one_leaf):
+            # both trees have identical ndim (init_cache vs forward caches
+            # stacked the same way); find the batch axis by shape matching
+            rank = one_leaf.ndim
+            # find batch axis: the axis where one_leaf has size 1 and
+            # batch_leaf has size max_batch
+            for ax in range(rank):
+                if one_leaf.shape[ax] == 1 and batch_leaf.shape[ax] == self.max_batch:
+                    idx = [slice(None)] * rank
+                    idx[ax] = slice(slot, slot + 1)
+                    return batch_leaf.at[tuple(idx)].set(
+                        one_leaf.astype(batch_leaf.dtype))
+            return batch_leaf                          # scalar stats etc.
+
+        self.cache = jax.tree.map(put, self.cache, caches)
+        next_tok = int(jnp.argmax(logits[0, -1]))
+        req.tokens.append(next_tok)
+        self.active[slot] = req
+        self.positions[slot] = s
+        self.last_tokens[slot, 0] = next_tok
+
+    def _retire(self) -> None:
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            eos = self.eos_id if req.eos_id is None else req.eos_id
+            if (len(req.tokens) >= req.max_new_tokens
+                    or (eos is not None and req.tokens
+                        and req.tokens[-1] == eos)
+                    or self.positions[slot] >= self.max_len - 1):
+                req.done = True
+                req.t_done = time.time()
+                self.stats["completed"] += 1
+                self.active[slot] = None
+
+    # ------------------------------------------------------------- step
+    def step(self) -> int:
+        """One engine iteration.  Returns number of active sequences."""
+        self._retire()
+        self._admit()
+        n_active = sum(r is not None for r in self.active)
+        if n_active == 0:
+            return 0
+        # per-slot positions: every sequence advances at its own offset
+        # (attention_step takes a [B] position vector)
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(self.last_tokens),
+                                          jnp.asarray(self.positions))
+        toks = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            req.tokens.append(int(toks[slot]))
+            self.last_tokens[slot, 0] = toks[slot]
+            self.positions[slot] += 1
+            self.stats["generated"] += 1
+        self.stats["steps"] += 1
+        return n_active
+
+    def run_until_drained(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if self.step() == 0 and not self.queue:
+                break

@@ -1,0 +1,7 @@
+from .optimizer import AdamWConfig, init_state, apply_updates, lr_schedule
+from .train_step import make_train_step, make_eval_step, make_loss_fn
+from . import compress_grads
+
+__all__ = ["AdamWConfig", "init_state", "apply_updates", "lr_schedule",
+           "make_train_step", "make_eval_step", "make_loss_fn",
+           "compress_grads"]

@@ -1,0 +1,127 @@
+"""Checkpoint + supervisor (fault tolerance) tests."""
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ckpt
+from repro.runtime import Supervisor, SupervisorConfig
+
+
+def tree():
+    rng = np.random.default_rng(0)
+    return {
+        "w": jnp.asarray(rng.normal(0, 0.02, (256, 128)), jnp.float32),
+        "b16": jnp.asarray(rng.normal(0, 1, (128, 64)), jnp.bfloat16),
+        "step": jnp.asarray(7, jnp.int32),
+        "nested": {"scale": jnp.ones((64,))},
+    }
+
+
+class TestCheckpoint:
+    def test_save_restore_identity(self, tmp_path):
+        t = tree()
+        ckpt.save(tmp_path, 5, t, extra={"foo": 1})
+        out, extra, step = ckpt.restore(tmp_path)
+        assert step == 5 and extra == {"foo": 1}
+        for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+            assert np.asarray(a).dtype == np.asarray(b).dtype
+
+    def test_compressed_save_is_bit_exact(self, tmp_path):
+        t = tree()
+        ckpt.save(tmp_path, 1, t, compress=True)
+        out, _, _ = ckpt.restore(tmp_path)
+        for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+            assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+
+    def test_compression_shrinks_trained_like_weights(self, tmp_path):
+        rng = np.random.default_rng(0)
+        t = {"w": jnp.asarray(rng.normal(0, 0.02, (512, 512)), jnp.float32)}
+        d = ckpt.save(tmp_path, 1, t, compress=True)
+        with open(d / "manifest.json") as f:
+            man = json.load(f)
+        stored = sum(l["stored_bits"] for l in man["leaves"])
+        assert stored < 512 * 512 * 32 * 0.92
+
+    def test_latest_pointer_and_gc(self, tmp_path):
+        t = tree()
+        for s in (1, 2, 3, 4, 5):
+            ckpt.save(tmp_path, s, t, keep=2)
+        assert ckpt.latest_step(tmp_path) == 5
+        dirs = sorted(p.name for p in tmp_path.iterdir()
+                      if p.name.startswith("step_"))
+        assert dirs == ["step_00000004", "step_00000005"]
+
+    def test_async_checkpointer(self, tmp_path):
+        saver = ckpt.AsyncCheckpointer(tmp_path)
+        saver.save(3, tree())
+        saver.wait()
+        assert ckpt.latest_step(tmp_path) == 3
+
+    def test_elastic_restore_with_shardings(self, tmp_path):
+        t = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+        ckpt.save(tmp_path, 1, t)
+        sh = {"w": jax.sharding.SingleDeviceSharding(jax.devices()[0])}
+        out, _, _ = ckpt.restore(tmp_path, shardings=sh)
+        assert np.array_equal(np.asarray(out["w"]), np.asarray(t["w"]))
+
+
+class TestSupervisor:
+    def _sup(self, tmp_path, fail_at=(), max_steps=20, **kw):
+        calls = {"n": 0}
+
+        def make_state():
+            return {"x": jnp.zeros(())}, {}
+
+        def step_fn(state, step_idx):
+            calls["n"] += 1
+            if calls["n"] in fail_at:
+                raise RuntimeError(f"injected failure at call {calls['n']}")
+            return {"x": state["x"] + 1}, {"loss": float(state["x"])}
+
+        cfg = SupervisorConfig(ckpt_dir=str(tmp_path), save_every=5,
+                               max_steps=max_steps, async_save=False, **kw)
+        return Supervisor(cfg, make_state=make_state, step_fn=step_fn)
+
+    def test_runs_to_completion(self, tmp_path):
+        state, hist = self._sup(tmp_path).run()
+        assert float(state["x"]) == 20
+        assert len(hist) == 20
+
+    def test_restart_from_checkpoint_after_failure(self, tmp_path):
+        sup = self._sup(tmp_path, fail_at=(8, 13))
+        state, hist = sup.run()
+        assert sup.restarts == 2
+        # bit-exact final state despite two failures (restored from step 5/10)
+        assert float(state["x"]) == 20
+
+    def test_gives_up_after_max_restarts(self, tmp_path):
+        sup = self._sup(tmp_path, fail_at=tuple(range(1, 100)),
+                        max_restarts=3)
+        with pytest.raises(RuntimeError):
+            sup.run()
+
+    def test_straggler_watchdog_flags(self, tmp_path):
+        calls = {"n": 0}
+
+        def make_state():
+            return {"x": jnp.zeros(())}, {}
+
+        def step_fn(state, step_idx):
+            calls["n"] += 1
+            if calls["n"] >= 12:
+                time.sleep(0.3)       # sustained straggle
+            return state, {}
+
+        cfg = SupervisorConfig(ckpt_dir=str(tmp_path), save_every=100,
+                               max_steps=30, async_save=False,
+                               straggler_ratio=4.0, straggler_patience=2,
+                               max_restarts=0)
+        sup = Supervisor(cfg, make_state=make_state, step_fn=step_fn)
+        with pytest.raises(TimeoutError):
+            sup.run()
+        assert sup.straggler_events >= 2

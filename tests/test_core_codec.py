@@ -1,0 +1,211 @@
+"""Golden-codec + table-generation + container-format behaviour tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ac_golden, baselines, byteplane, compress, decompress,
+                        distributions, find_table, histogram, table_for,
+                        uniform_table)
+from repro.core.format import estimate_bits
+from repro.core.tables import ApackTable, N_SYMBOLS, encoded_size
+
+
+# ---------------------------------------------------------------- tables
+class TestTables:
+    def test_uniform_table_invariants(self):
+        t = uniform_table()
+        assert t.v_min[0] == 0 and t.v_min[-1] == 256
+        assert t.cum[0] == 0 and t.cum[-1] == 1024
+        assert all(b - a == 16 for a, b in zip(t.v_min, t.v_min[1:]))
+        assert all(o == 4 for o in t.ol)
+
+    @pytest.mark.parametrize("gen", list(distributions.PAPER_LIKE))
+    def test_found_table_invariants(self, gen):
+        v = distributions.PAPER_LIKE[gen](4096)
+        t = table_for(v, is_activation=True)
+        assert len(t.v_min) == N_SYMBOLS + 1
+        assert t.v_min[0] == 0 and t.v_min[-1] == 256
+        assert all(b > a for a, b in zip(t.v_min, t.v_min[1:]))
+        assert t.cum[0] == 0 and t.cum[-1] == 1024
+        assert all(b >= a for a, b in zip(t.cum, t.cum[1:]))
+        # activation tables: every range encodable (stealing)
+        assert all(b > a for a, b in zip(t.cum, t.cum[1:]))
+        # OL consistency
+        for i in range(N_SYMBOLS):
+            size = t.v_min[i + 1] - t.v_min[i]
+            assert (1 << t.ol[i]) >= size
+
+    def test_search_improves_on_uniform(self):
+        v = distributions.gaussian_weights(16384)
+        h = histogram(v)
+        uni = uniform_table()
+        found = find_table(h)
+        assert (encoded_size(h, list(found.v_min[:-1]))
+                <= encoded_size(h, list(uni.v_min[:-1])))
+
+    def test_table_matches_paper_shape(self):
+        # Paper Table I: bimodal weights -> dense short ranges near 0 and 255,
+        # wide dead ranges in the middle.
+        v = distributions.gaussian_weights(65536, sigma=3.0)
+        t = table_for(v)
+        assert t.v_min[1] <= 8, "first range should be short (dense near 0)"
+        assert t.v_min[-2] >= 240, "last range should be short (dense near 255)"
+        counts = np.diff(np.asarray(t.cum))
+        assert counts[0] + counts[-1] > 700, "mass concentrates at the ends"
+
+    def test_zero_count_stealing(self):
+        v = np.zeros(1000, np.uint8)          # only value 0 ever seen
+        t = table_for(v, is_activation=True)
+        counts = np.diff(np.asarray(t.cum))
+        assert (counts >= 1).all(), "activation table must cover unseen values"
+        tw = table_for(v, is_activation=False)
+        cw = np.diff(np.asarray(tw.cum))
+        assert cw[0] > 900  # weights may dedicate nearly everything to 0
+
+
+# ---------------------------------------------------------------- golden codec
+class TestGoldenCodec:
+    @pytest.mark.parametrize("gen", list(distributions.PAPER_LIKE))
+    def test_roundtrip(self, gen):
+        v = distributions.PAPER_LIKE[gen](2048).astype(np.int64)
+        t = table_for(v, is_activation=True)
+        sw, sb, ow, ob = ac_golden.encode_stream(v, t)
+        out = ac_golden.decode_stream(sw, ow, len(v), t, sb, ob)
+        assert list(v) == out
+
+    def test_single_value_stream(self):
+        t = uniform_table()
+        sw, sb, ow, ob = ac_golden.encode_stream([7], t)
+        assert ac_golden.decode_stream(sw, ow, 1, t, sb, ob) == [7]
+
+    def test_extreme_skew_fraction_of_a_bit(self):
+        # Very frequent symbol must cost well under 1 bit on average (the
+        # paper's core claim for AC over Huffman).
+        v = np.zeros(4096, np.int64)
+        v[::64] = 255
+        t = table_for(v, is_activation=False)
+        sw, sb, ow, ob = ac_golden.encode_stream(v, t)
+        assert (sb + ob) / len(v) < 0.5
+        assert ac_golden.decode_stream(sw, ow, len(v), t, sb, ob) == list(v)
+
+    def test_zero_probability_symbol_rejected(self):
+        v = np.zeros(128, np.int64)
+        t = table_for(v, is_activation=False)   # most ranges get 0 counts
+        dead = next(s for s in range(N_SYMBOLS) if t.cum[s + 1] == t.cum[s])
+        with pytest.raises(ValueError):
+            ac_golden.encode_stream([t.v_min[dead]], t)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.integers(0, 255), min_size=1, max_size=512),
+           st.integers(0, 2**32 - 1))
+    def test_roundtrip_property(self, vals, seed):
+        v = np.asarray(vals, np.int64)
+        t = table_for(v, is_activation=True)
+        sw, sb, ow, ob = ac_golden.encode_stream(v, t)
+        assert ac_golden.decode_stream(sw, ow, len(v), t, sb, ob) == list(v)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, 1000), st.floats(0.0, 0.99), st.integers(0, 999))
+    def test_roundtrip_sparse_property(self, n, sparsity, seed):
+        rng = np.random.default_rng(seed)
+        v = np.where(rng.random(n) < sparsity, 0,
+                     rng.integers(0, 256, n)).astype(np.int64)
+        t = table_for(v, is_activation=True)
+        sw, sb, ow, ob = ac_golden.encode_stream(v, t)
+        assert ac_golden.decode_stream(sw, ow, len(v), t, sb, ob) == list(v)
+
+
+# ---------------------------------------------------------------- container
+class TestContainer:
+    @pytest.mark.parametrize("n", [1, 511, 512, 513, 5000])
+    def test_compress_roundtrip_sizes(self, n):
+        v = distributions.relu_activations(n, seed=n)
+        ct = compress(v, is_activation=True)
+        out = decompress(ct)
+        assert out.shape == v.shape
+        assert np.array_equal(out, v)
+
+    def test_multidim_shape_preserved(self):
+        v = distributions.gaussian_weights(6144).reshape(3, 64, 32)
+        ct = compress(v)
+        assert np.array_equal(decompress(ct), v)
+
+    def test_stored_mode_bounds_worst_case(self):
+        rng = np.random.default_rng(0)
+        v = rng.integers(0, 256, 4096).astype(np.uint8)   # incompressible
+        ct = compress(v, table=uniform_table())
+        assert ct.payload_bits <= v.size * 8 + ct.n_streams  # stored-mode bound
+        assert np.array_equal(decompress(ct), v)
+
+    def test_ratio_accounting(self):
+        v = distributions.pruned_weights(32768)
+        ct = compress(v)
+        assert ct.ratio(include_metadata=True) <= ct.ratio(include_metadata=False)
+        assert ct.original_bits == v.size * 8
+
+    def test_estimate_matches_actual(self):
+        v = distributions.gaussian_weights(65536)
+        t = table_for(v)
+        ct = compress(v, table=t)
+        est = estimate_bits(histogram(v), t)
+        actual = ct.payload_bits
+        assert abs(est - actual) / actual < 0.01
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(1, 2000), st.integers(0, 99))
+    def test_container_roundtrip_property(self, n, seed):
+        rng = np.random.default_rng(seed)
+        kind = seed % 3
+        if kind == 0:
+            v = rng.integers(0, 256, n).astype(np.uint8)
+        elif kind == 1:
+            v = distributions.relu_activations(n, seed=seed)
+        else:
+            v = distributions.pruned_weights(n, seed=seed)
+        ct = compress(v, is_activation=True, elems_per_stream=256)
+        assert np.array_equal(decompress(ct), v)
+
+
+# ---------------------------------------------------------------- baselines
+class TestBaselines:
+    def test_apack_beats_others_on_paper_distributions(self):
+        # Fig. 5: APack outperforms RLE/RLEZ/ShapeShifter on every tensor.
+        for name, gen in distributions.PAPER_LIKE.items():
+            v = gen(16384)
+            ct = compress(v, is_activation=True)
+            apack = ct.payload_bits
+            assert apack <= baselines.shapeshifter_bits(v), name
+            assert apack <= baselines.rle_bits(v), name
+            assert apack <= baselines.rlez_bits(v), name
+
+    def test_rle_runs(self):
+        v = np.array([5] * 20 + [3] + [0] * 10, np.uint8)
+        # runs: 20x5 -> 2 tuples (16+4), 1x3 -> 1, 10x0 -> 1 tuple
+        assert baselines.rle_bits(v) == 4 * 12
+
+    def test_rlez_counts_zero_gaps(self):
+        v = np.array([1, 0, 0, 2, 3], np.uint8)
+        assert baselines.rlez_bits(v) == 3 * 12   # three nonzero tuples
+
+    def test_shapeshifter_sign_extension(self):
+        # all-0xFF (-1) group needs 1 bit per value, not 8
+        v = np.full(8, 0xFF, np.uint8)
+        assert baselines.shapeshifter_bits(v, zero_vector=False) <= 8 * 2 + 3
+
+
+# ---------------------------------------------------------------- byteplane
+class TestByteplane:
+    @pytest.mark.parametrize("dtype", [np.float32, np.dtype("bfloat16") if hasattr(np, "bfloat16") else np.float16])
+    def test_lossless_float_roundtrip(self, dtype):
+        rng = np.random.default_rng(0)
+        x = (rng.normal(0, 0.02, 2048)).astype(np.float32).astype(dtype)
+        cp = byteplane.compress_float(x)
+        out = byteplane.decompress_float(cp)
+        assert out.dtype == x.dtype
+        assert np.array_equal(out.view(np.uint8), x.view(np.uint8))
+
+    def test_trained_like_weights_compress(self):
+        rng = np.random.default_rng(1)
+        x = (rng.normal(0, 0.02, 65536)).astype(np.float32)
+        cp = byteplane.compress_float(x)
+        assert cp.ratio() > 1.15   # exponent plane is highly skewed

@@ -1,0 +1,99 @@
+"""HLO cost-walker tests: shape parsing, dot flops, while-trip handling —
+verified against a compiled toy whose analytic costs are known."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import hlo_costs as hc
+
+
+class TestShapeParsing:
+    def test_bytes(self):
+        assert hc._shape_bytes("bf16[8,128]{1,0}") == 8 * 128 * 2
+        assert hc._shape_bytes("f32[16]") == 64
+        assert hc._shape_bytes("(bf16[4,4]{1,0}, s32[2])") == 32 + 8
+        assert hc._shape_bytes("pred[]") == 1
+
+    def test_numel_and_dims(self):
+        assert hc._shape_numel("f32[3,5]{1,0}") == 15
+        assert hc._shape_dims("bf16[7,9]{1,0}") == [7, 9]
+
+
+class TestToyPrograms:
+    def test_matmul_flops_counted(self):
+        m, k, n = 64, 128, 32
+
+        def f(a, b):
+            return a @ b
+
+        compiled = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((m, k), jnp.float32),
+            jax.ShapeDtypeStruct((k, n), jnp.float32)).compile()
+        out = hc.analyze(compiled.as_text(), {})
+        expect = 2 * m * k * n
+        assert abs(out["flops"] - expect) / expect < 0.05
+
+    def test_scan_body_multiplied_by_trip(self):
+        L, d = 8, 32
+
+        def f(ws, x):
+            def body(h, w):
+                return jnp.tanh(h @ w), ()
+            h, _ = jax.lax.scan(body, x, ws)
+            return h
+
+        compiled = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((L, d, d), jnp.float32),
+            jax.ShapeDtypeStruct((d, d), jnp.float32)).compile()
+        txt = compiled.as_text()
+        once = hc.analyze(txt, {0: 1})["flops"]
+        tripped = hc.analyze(txt, {0: L})["flops"]
+        per_layer = 2 * d * d * d
+        assert tripped - once >= (L - 1) * per_layer * 0.9
+        # XLA's own cost analysis counts the body once — our walker with
+        # trip=1 should be in its ballpark
+        xla = compiled.cost_analysis()["flops"]
+        assert once <= xla * 2 + per_layer
+
+    def test_nested_scan_depths(self):
+        def f(x):
+            def outer(h, _):
+                def inner(g, _):
+                    return g * 2.0, ()
+                g, _ = jax.lax.scan(inner, h, None, length=5)
+                return g, ()
+            h, _ = jax.lax.scan(outer, x, None, length=3)
+            return h
+
+        compiled = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((16,), jnp.float32)).compile()
+        txt = compiled.as_text()
+        flat = hc.analyze(txt, {0: 1, 1: 1})["flops"]
+        deep = hc.analyze(txt, {0: 3, 1: 5})["flops"]
+        assert deep > flat * 3           # multiplies through both depths
+
+    def test_collectives_absent_on_single_device(self):
+        compiled = jax.jit(lambda x: x + 1).lower(
+            jax.ShapeDtypeStruct((8,), jnp.float32)).compile()
+        out = hc.analyze(compiled.as_text(), {})
+        assert out["collective_wire_bytes"] == 0
+
+
+class TestCollectiveParsing:
+    HLO = """
+HloModule test
+
+ENTRY %main (p0: f32[1024]) -> f32[1024] {
+  %p0 = f32[1024]{0} parameter(0)
+  %ag = f32[4096]{0} all-gather(%p0), replica_groups={}, dimensions={0}
+  %ar = f32[1024]{0} all-reduce(%p0), to_apply=%add
+  %slice = f32[1024]{0} slice(%ag), slice={[0:1024]}
+  ROOT %out = f32[1024]{0} add(%ar, %slice)
+}
+"""
+
+    def test_wire_model(self):
+        out = hc.analyze(self.HLO, {})
+        # all-gather: result - operand = (4096-1024)*4; all-reduce: 2*operand
+        assert out["collective_wire_bytes"] == (4096 - 1024) * 4 + 2 * 1024 * 4
+        assert out["collective_by_kind"]["all-gather"] == (4096 - 1024) * 4

@@ -1,0 +1,133 @@
+"""Pallas kernel validation: sweep shapes/bit-widths, assert bit-exact
+against the ref.py jnp oracle (lossless codec => exact equality, which is
+stricter than assert_allclose)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import format as fmt
+from repro.core import tables, distributions
+from repro.kernels import ops, ref
+from repro.kernels import decompress_matmul as dm
+
+
+def _random_values(n, kind, seed, bits=8):
+    rng = np.random.default_rng(seed)
+    if kind == "gaussian":
+        v = distributions.gaussian_weights(n, seed=seed)
+    elif kind == "sparse":
+        v = distributions.pruned_weights(n, seed=seed)
+    elif kind == "uniform":
+        v = rng.integers(0, 1 << bits, n)
+    else:
+        v = distributions.relu_activations(n, seed=seed)
+    return np.asarray(v, np.int64) & ((1 << bits) - 1)
+
+
+class TestDecodeKernel:
+    @pytest.mark.parametrize("n,e", [(64, 64), (1000, 128), (4096, 512),
+                                     (130, 64), (513, 512)])
+    @pytest.mark.parametrize("kind", ["gaussian", "sparse", "relu"])
+    def test_shape_sweep_vs_ref(self, n, e, kind):
+        v = _random_values(n, kind, seed=n + e)
+        t = tables.table_for(v, is_activation=True)
+        ca = ops.apack_encode(v, t, elems_per_stream=e, backend="ref")
+        out_k = ops.apack_decode(ca, backend="pallas_interpret")
+        out_r = ops.apack_decode(ca, backend="ref")
+        assert np.array_equal(np.asarray(out_k), np.asarray(out_r))
+        assert np.array_equal(np.asarray(out_k), v.astype(np.uint8))
+
+    @pytest.mark.parametrize("bits", [4, 8, 16])
+    def test_bitwidth_sweep(self, bits):
+        v = _random_values(777, "gaussian", seed=bits, bits=bits)
+        if bits == 4:
+            v = v & 0xF
+        t = tables.table_for(v, bits=bits, is_activation=True)
+        ca = ops.apack_encode(v, t, elems_per_stream=128,
+                              backend="pallas_interpret")
+        out = ops.apack_decode(ca, backend="pallas_interpret")
+        assert np.array_equal(np.asarray(out).astype(np.int64), v)
+
+    def test_stored_mode_streams(self):
+        v = _random_values(512, "uniform", seed=0)
+        t = tables.uniform_table()
+        ca = ops.apack_encode(v, t, elems_per_stream=128,
+                              backend="pallas_interpret")
+        assert bool(np.asarray(ca.stored).all())
+        out = ops.apack_decode(ca, backend="pallas_interpret")
+        assert np.array_equal(np.asarray(out).astype(np.int64), v)
+
+
+class TestEncodeKernel:
+    @pytest.mark.parametrize("n,e", [(256, 64), (1500, 128), (2048, 512)])
+    @pytest.mark.parametrize("kind", ["gaussian", "sparse"])
+    def test_bit_exact_vs_golden_container(self, n, e, kind):
+        v = _random_values(n, kind, seed=7 * n)
+        t = tables.table_for(v, is_activation=True)
+        ct = fmt.compress(v, t, elems_per_stream=e)          # golden
+        ca = ops.apack_encode(v, t, elems_per_stream=e,
+                              backend="pallas_interpret")    # kernel
+        assert np.array_equal(np.asarray(ca.sym_bits), ct.sym_bits)
+        assert np.array_equal(np.asarray(ca.ofs_bits), ct.ofs_bits)
+        assert np.array_equal(np.asarray(ca.stored), ct.stored)
+        ws, wo = ct.sym_plane.shape[0], ct.ofs_plane.shape[0]
+        assert np.array_equal(np.asarray(ca.sym_plane[:ws]).astype(np.uint32),
+                              ct.sym_plane)
+        assert np.array_equal(np.asarray(ca.ofs_plane[:wo]).astype(np.uint32),
+                              ct.ofs_plane)
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(10, 600), st.integers(0, 99))
+    def test_roundtrip_property(self, n, seed):
+        v = _random_values(n, ["gaussian", "sparse", "relu"][seed % 3], seed)
+        t = tables.table_for(v, is_activation=True)
+        assert ops.apack_roundtrip_check(v, t, elems_per_stream=64,
+                                         backend="pallas_interpret")
+
+
+class TestFusedMatmul:
+    @pytest.mark.parametrize("m,k,n,tile_k", [
+        (8, 128, 128, 128), (17, 300, 130, 128), (64, 512, 256, 256),
+    ])
+    def test_matches_reference(self, m, k, n, tile_k):
+        rng = np.random.default_rng(m * k)
+        w = rng.normal(0, 0.05, (k, n)).astype(np.float32)
+        x = rng.normal(0, 1, (m, k)).astype(np.float32)
+        cw = dm.compress_linear(w, tile_k=tile_k)
+        fused = np.asarray(dm.compressed_matmul(jnp.asarray(x), cw,
+                                                block_m=max(8, m)))
+        oracle = np.asarray(dm.reference_matmul(jnp.asarray(x), cw))
+        np.testing.assert_allclose(fused, oracle, rtol=1e-5, atol=1e-5)
+
+    def test_quantization_error_bounded(self):
+        rng = np.random.default_rng(0)
+        k, n, m = 256, 128, 16
+        w = rng.normal(0, 0.05, (k, n)).astype(np.float32)
+        x = rng.normal(0, 1, (m, k)).astype(np.float32)
+        cw = dm.compress_linear(w, tile_k=128)
+        fused = np.asarray(dm.compressed_matmul(jnp.asarray(x), cw, block_m=16))
+        dense = x @ w
+        rel = np.abs(fused - dense).max() / np.abs(dense).max()
+        assert rel < 0.05   # int8 per-channel quantization error only
+
+
+class TestRefInternals:
+    def test_shift_helpers_edge_cases(self):
+        x = jnp.asarray([0xFFFFFFFF, 1, 0x80000000], jnp.uint32)
+        assert np.array_equal(np.asarray(ref.shr32(x, jnp.asarray([32, 0, 31]))),
+                              [0, 1, 1])
+        assert np.array_equal(np.asarray(ref.shl32(x, jnp.asarray([32, 31, 0]))),
+                              [0, 0x80000000, 0x80000000])
+
+    def test_read_bits_word_straddle(self):
+        plane = jnp.asarray(np.array([[0xAAAAAAAA], [0x55555555]], np.uint32))
+        # LSB-first: stream bits 30,31 of w0 = (0,1), bits 0,1 of w1 = (1,0)
+        # -> value = 0 | 1<<1 | 1<<2 | 0<<3 = 0b0110
+        v = ref.read_bits(plane, jnp.asarray([30]), jnp.asarray([4]))
+        assert int(v[0]) == 0b0110
+
+    def test_read_past_end_returns_zero(self):
+        plane = jnp.full((1, 1), 0xFFFFFFFF, jnp.uint32)
+        v = ref.read_bits(plane, jnp.asarray([40]), jnp.asarray([8]))
+        assert int(v[0]) == 0

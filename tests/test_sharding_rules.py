@@ -1,0 +1,67 @@
+"""Sharding-rule unit tests (no compilation needed)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.models import sharding as sh
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # 1 device is enough: fit_spec only reads axis sizes from the mesh shape
+    return jax.sharding.Mesh(
+        jax.numpy.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+
+class FakeMesh:
+    """Axis sizes only — what fit_spec consumes."""
+    def __init__(self, **shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def test_fit_spec_drops_indivisible():
+    m = FakeMesh(data=16, model=16)
+    spec = sh.fit_spec(P("data", "model"), (256, 8), m)
+    assert spec == P("data", None)           # 8 % 16 != 0
+    spec = sh.fit_spec(P(("data", "model"), None), (512, 7), m)
+    assert spec == P(("data", "model"), None)
+    spec = sh.fit_spec(P(("data", "model"), None), (100, 7), m)
+    assert spec == P(None, None)             # 100 % 256 != 0
+
+
+def test_param_spec_rules():
+    f = ("data",)
+    mk = lambda nd: jnp.zeros((2,) * nd)   # noqa: E731
+    assert sh._param_spec("embed", mk(2), f) == P("model", f)
+    # measured-better layout (see sharding.py comment): D over model,
+    # V over fsdp — NOT the naive P(None, "model")
+    assert sh._param_spec("unembed", mk(2), f) == P("model", f)
+    assert sh._param_spec("blocks/0/inner/wq", mk(4), f) == \
+        P(None, f, "model", None)
+    assert sh._param_spec("blocks/0/inner/wo", mk(4), f) == \
+        P(None, "model", None, f)
+    assert sh._param_spec("blocks/0/ffn/wi", mk(4), f) == \
+        P(None, "model", f, None)
+    assert sh._param_spec("blocks/0/norm1", mk(2), f) == P(None, None)
+
+
+def test_moe_ep_variant_switches_expert_axis():
+    f = ("data",)
+    mk = lambda nd: jnp.zeros((2,) * nd)   # noqa: E731
+    sh.set_mesh_context(None, moe_ep=True)
+    try:
+        assert sh._param_spec("blocks/0/ffn/wi", mk(3), f) == \
+            P(f, "model", None)
+        assert sh._param_spec("blocks/0/ffn/wo", mk(3), f) == \
+            P(f, None, "model")
+    finally:
+        sh.set_mesh_context(None)
+    assert sh._param_spec("blocks/0/ffn/wi", mk(3), f) == \
+        P("model", f, None)
+
+
+def test_constrain_noop_without_mesh():
+    x = jnp.ones((4, 4, 4))
+    assert sh.constrain(x, "residual") is x

@@ -1,0 +1,179 @@
+"""Optimizer / train-step / gradient-compression / data-pipeline tests."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.data import BinTokenDataset, DataConfig, SyntheticLM, write_bin
+from repro.models import model as M
+from repro.train import AdamWConfig, init_state, apply_updates, lr_schedule
+from repro.train.optimizer import Q8, _q8_decode, _q8_encode
+from repro.train.train_step import make_train_step
+from repro.train import compress_grads as cg
+
+
+class TestOptimizer:
+    def _quadratic_converges(self, state_dtype):
+        # min ||Wx - y||^2 — AdamW should reduce loss by >10x
+        rng = np.random.default_rng(0)
+        w0 = jnp.asarray(rng.normal(0, 1, (8, 8)), jnp.float32)
+        x = jnp.asarray(rng.normal(0, 1, (8, 32)), jnp.float32)
+        y = jnp.asarray(rng.normal(0, 1, (8, 32)), jnp.float32)
+        cfg = AdamWConfig(lr=3e-2, warmup_steps=5, total_steps=300,
+                          weight_decay=0.0, state_dtype=state_dtype)
+        params = {"w": w0}
+        state = init_state(cfg, params)
+
+        def loss(p):
+            return jnp.mean((p["w"] @ x - y) ** 2)
+
+        l0 = float(loss(params))
+        for _ in range(300):
+            g = jax.grad(loss)(params)
+            params, state, _ = apply_updates(cfg, params, g, state)
+        return l0, float(loss(params))
+
+    def test_adamw_converges_fp32(self):
+        l0, l1 = self._quadratic_converges("float32")
+        assert l1 < l0 / 10
+
+    def test_adamw_converges_int8_state(self):
+        l0, l1 = self._quadratic_converges("int8")
+        assert l1 < l0 / 5      # block-quantized moments still converge
+
+    def test_q8_roundtrip_accuracy(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(0, 0.1, (1024,)), jnp.float32)
+        q = _q8_encode(x)
+        out = _q8_decode(q, x.shape, x.size)
+        # per-block absmax scaling bounds error by max|block|/127
+        assert float(jnp.max(jnp.abs(out - x))) <= float(jnp.abs(x).max()) / 127 * 1.01
+
+    def test_q8_shape_aligned(self):
+        # q keeps the source shape so moments inherit param shardings
+        x = jnp.ones((8, 224), jnp.float32)
+        q = _q8_encode(x)
+        assert q.q.shape == x.shape
+        assert q.scale.shape == (8, 224 // 32)
+
+    def test_lr_schedule_shape(self):
+        cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_ratio=0.1)
+        assert float(lr_schedule(cfg, jnp.asarray(0))) < 0.2
+        assert abs(float(lr_schedule(cfg, jnp.asarray(10))) - 1.0) < 1e-6
+        assert float(lr_schedule(cfg, jnp.asarray(100))) <= 0.11
+
+    def test_grad_clip(self):
+        cfg = AdamWConfig(grad_clip=1e-6)
+        params = {"w": jnp.ones((4,))}
+        state = init_state(cfg, params)
+        g = {"w": jnp.full((4,), 100.0)}
+        new_p, _, m = apply_updates(cfg, params, g, state)
+        assert float(m["grad_norm"]) == pytest.approx(200.0)
+        assert float(jnp.max(jnp.abs(new_p["w"] - params["w"]))) < 0.01
+
+
+class TestTrainStep:
+    def test_loss_decreases_on_learnable_data(self):
+        cfg = configs.get_smoke_config("qwen3-1.7b")
+        ocfg = AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=60)
+        data = SyntheticLM(DataConfig(batch_size=8, seq_len=64,
+                                      vocab_size=cfg.vocab_size))
+        step = jax.jit(make_train_step(cfg, ocfg), donate_argnums=(0, 1))
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        opt = init_state(ocfg, params)
+        losses = []
+        for _ in range(30):
+            b = data.next_batch()
+            params, opt, metrics = step(params, opt,
+                                        {"tokens": jnp.asarray(b["tokens"])})
+            losses.append(float(metrics["loss"]))
+        assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.5
+
+    def test_grad_accum_matches_full_batch(self):
+        cfg = configs.get_smoke_config("xlstm-125m")
+        ocfg = AdamWConfig(lr=1e-3)
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                                    (8, 32)))}
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        opt = init_state(ocfg, params)
+        p1, _, m1 = make_train_step(cfg, ocfg, grad_accum=1)(params, opt, batch)
+        p2, _, m2 = make_train_step(cfg, ocfg, grad_accum=4)(params, opt, batch)
+        assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-3)
+        d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                                            - b.astype(jnp.float32)))), p1, p2)
+        assert max(jax.tree.leaves(d)) < 2e-2   # bf16-level agreement
+
+
+class TestGradCompression:
+    def test_quantize_roundtrip(self):
+        rng = np.random.default_rng(0)
+        g = jnp.asarray(rng.normal(0, 0.01, (3000,)), jnp.float32)
+        q, s, n = cg.quantize_blockwise(g)
+        out = cg.dequantize_blockwise(q, s, n, g.shape)
+        assert float(jnp.max(jnp.abs(out - g))) <= float(s.max()) * 1.01
+
+    def test_error_feedback_removes_bias(self):
+        # repeated EF quantization of a constant gradient: the *running sum*
+        # of dequantized outputs must track the true sum (bias-free)
+        rng = np.random.default_rng(1)
+        g = jnp.asarray(rng.normal(0, 1e-3, (512,)), jnp.float32)
+        e = jnp.zeros_like(g)
+        acc = jnp.zeros_like(g)
+        for i in range(50):
+            q, s, n = cg.quantize_blockwise(g + e)
+            deq = cg.dequantize_blockwise(q, s, n, g.shape)
+            e = (g + e) - deq
+            acc = acc + deq
+        err = float(jnp.max(jnp.abs(acc / 50 - g)))
+        assert err < float(jnp.abs(g).max()) * 0.05
+
+
+class TestData:
+    def test_synthetic_deterministic_resume(self):
+        cfg = DataConfig(batch_size=2, seq_len=16, vocab_size=100)
+        a = SyntheticLM(cfg)
+        b1 = [a.next_batch()["tokens"] for _ in range(3)]
+        state = a.state_dict()
+        b2 = a.next_batch()["tokens"]
+        a2 = SyntheticLM(cfg)
+        a2.load_state_dict(state)
+        assert np.array_equal(a2.next_batch()["tokens"], b2)
+
+    def test_synthetic_host_shards_differ(self):
+        c0 = DataConfig(batch_size=2, seq_len=16, vocab_size=100, host_index=0)
+        c1 = dataclasses.replace(c0, host_index=1)
+        assert not np.array_equal(SyntheticLM(c0).next_batch()["tokens"],
+                                  SyntheticLM(c1).next_batch()["tokens"])
+
+    def test_bin_dataset_roundtrip(self, tmp_path):
+        tokens = np.arange(10000) % 1000
+        path = tmp_path / "toks.bin"
+        write_bin(path, tokens)
+        cfg = DataConfig(batch_size=2, seq_len=16, vocab_size=1000)
+        ds = BinTokenDataset(path, cfg)
+        b = ds.next_batch()
+        assert b["tokens"].shape == (2, 16)
+        assert np.array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+        # resume determinism
+        state = ds.state_dict()
+        nxt = ds.next_batch()["tokens"]
+        ds2 = BinTokenDataset(path, cfg)
+        ds2.load_state_dict(state)
+        assert np.array_equal(ds2.next_batch()["tokens"], nxt)
+
+    def test_bin_dataset_hosts_disjoint(self, tmp_path):
+        tokens = np.arange(20000) % 997
+        path = tmp_path / "t.bin"
+        write_bin(path, tokens)
+        cfg0 = DataConfig(batch_size=1, seq_len=64, vocab_size=997,
+                          host_index=0, host_count=2)
+        cfg1 = dataclasses.replace(cfg0, host_index=1)
+        b0 = BinTokenDataset(path, cfg0).next_batch()["tokens"]
+        b1 = BinTokenDataset(path, cfg1).next_batch()["tokens"]
+        assert not np.array_equal(b0, b1)
