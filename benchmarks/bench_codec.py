@@ -2,8 +2,10 @@
 throughput numbers are 65nm-ASIC facts with no TPU analogue; what matters
 for the TPU adaptation is that the lane-vectorized codec keeps up with HBM
 when replicated (DESIGN.md §2) — here we measure the CPU software paths
-(jnp ref codec, golden) for regression tracking, and the per-value step
-counts that map to TPU cycles.
+(jnp ref codec, Pallas-interpret kernels, golden) for regression tracking,
+plus the fused decompress+matmul against its decode-then-matmul oracle.
+The M-sweep of ``compressed_matmul`` documents the decode-once property:
+decode cost must stay flat as M grows (DESIGN.md §2.3).
 """
 from __future__ import annotations
 
@@ -14,6 +16,26 @@ import numpy as np
 
 from repro.core import ac_golden, distributions, format as fmt, tables
 from repro.kernels import ref
+from repro.kernels import decompress_matmul as dm
+from repro.kernels.apack_decode import decode_pallas
+from repro.kernels.apack_encode import encode_pallas
+
+
+def _timeit(fn, repeats: int = 3):
+    """Run once for compile (blocking), then ``repeats`` timed runs;
+    returns the minimum in seconds (min is the noise-robust statistic for
+    a committed perf trajectory)."""
+    warm = fn()
+    if hasattr(warm, "block_until_ready"):
+        warm.block_until_ready()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        if hasattr(out, "block_until_ready"):
+            out.block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
 
 
 def main(emit) -> None:
@@ -24,23 +46,56 @@ def main(emit) -> None:
     streams, _ = fmt.split_streams(v.astype(np.int64), 512)
     sj = jnp.asarray(streams)
 
-    sp, op, sb, ob, st = ref.encode(sj, ta, 512)          # compile
-    t0 = time.perf_counter()
-    sp, op, sb, ob, st = ref.encode(sj, ta, 512)
-    sp.block_until_ready()
-    enc_dt = time.perf_counter() - t0
-
-    out = ref.decode(sp.astype(jnp.uint32), op.astype(jnp.uint32), st, ta, 512)
-    out.block_until_ready()
-    t0 = time.perf_counter()
-    out = ref.decode(sp.astype(jnp.uint32), op.astype(jnp.uint32), st, ta, 512)
-    out.block_until_ready()
-    dec_dt = time.perf_counter() - t0
-
+    enc_dt = _timeit(lambda: ref.encode(sj, ta, 512)[0])
     emit("codec/ref_encode", enc_dt * 1e6,
          f"{n / enc_dt / 1e6:.1f} Mvals/s ({streams.shape[0]} streams)")
-    emit("codec/ref_decode", dec_dt * 1e6,
-         f"{n / dec_dt / 1e6:.1f} Mvals/s")
+
+    sp, op, sb, ob, st = ref.encode(sj, ta, 512)
+    sp32, op32 = sp.astype(jnp.uint32), op.astype(jnp.uint32)
+    dec_dt = _timeit(lambda: ref.decode(sp32, op32, st, ta, 512))
+    emit("codec/ref_decode", dec_dt * 1e6, f"{n / dec_dt / 1e6:.1f} Mvals/s")
+
+    # Pallas kernels in interpret mode (the CPU-validation path; on TPU the
+    # same kernels compile).  Smaller block: interpret is ~100x slower.
+    np_small = 1 << 15
+    streams_p = streams[: np_small // 512]
+    spj = jnp.asarray(streams_p)
+    penc_dt = _timeit(lambda: encode_pallas(
+        jnp.tile(spj, (128 // spj.shape[0] + 1, 1))[:128], ta.v_min, ta.ol,
+        ta.cum, n_steps=512, bits=8, interpret=True)[0])
+    emit("codec/pallas_interpret_encode", penc_dt * 1e6,
+         f"{128 * 512 / penc_dt / 1e3:.1f} Kvals/s (128 streams)")
+
+    sp_p, op_p, sb_p, ob_p, ovf_p = encode_pallas(
+        jnp.tile(spj, (128 // spj.shape[0] + 1, 1))[:128], ta.v_min, ta.ol,
+        ta.cum, n_steps=512, bits=8, interpret=True)
+    stored_p = jnp.zeros((128,), jnp.int32)
+    pdec_dt = _timeit(lambda: decode_pallas(
+        sp_p, op_p, stored_p, ta.v_min, ta.ol, ta.cum, n_steps=512, bits=8,
+        interpret=True))
+    emit("codec/pallas_interpret_decode", pdec_dt * 1e6,
+         f"{128 * 512 / pdec_dt / 1e3:.1f} Kvals/s")
+
+    # fused decompress+matmul vs decode-then-dense oracle, with an M sweep:
+    # decode-once means time must grow far slower than M.
+    rng = np.random.default_rng(0)
+    k_dim, n_dim = 512, 256
+    w = rng.normal(0, 0.05, (k_dim, n_dim)).astype(np.float32)
+    cw = dm.compress_linear(w, tile_k=256)
+    xs = {m: jnp.asarray(rng.normal(0, 1, (m, k_dim)).astype(np.float32))
+          for m in (64, 256)}
+    fused = {}
+    for m, x in xs.items():
+        fused[m] = _timeit(lambda x=x: dm.compressed_matmul(x, cw, block_m=64))
+        scaling = ("" if m == 64 else
+                   f"; {fused[m] / fused[64]:.2f}x time for {m // 64}x M "
+                   "(flat => decode-once)")
+        emit(f"codec/fused_matmul_m{m}", fused[m] * 1e6,
+             f"{m}x{k_dim}x{n_dim}{scaling}")
+    ref_dt = _timeit(lambda: dm.reference_matmul(xs[256], cw))
+    emit("codec/reference_matmul_m256", ref_dt * 1e6,
+         f"fused speedup vs decode-then-dense oracle: "
+         f"{ref_dt / fused[256]:.2f}x")
 
     # golden (pure python) on a small slice, for scale
     t0 = time.perf_counter()

@@ -1,15 +1,28 @@
 """Benchmark driver — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows.  ``--json PATH`` additionally
+dumps the rows as machine-readable JSON (the perf trajectory across PRs is
+tracked by committing ``BENCH_codec.json`` from ``--only codec --json
+BENCH_codec.json``).  ``--only SUBSTR`` restricts to matching sections.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import platform
 import sys
 import time
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write results as JSON to PATH")
+    ap.add_argument("--only", metavar="SUBSTR", default=None,
+                    help="run only sections whose label contains SUBSTR")
+    args = ap.parse_args(argv)
+
     from . import (bench_distributions, bench_tablegen, bench_traffic,
                    bench_energy, bench_speedup, bench_codec, bench_roofline,
                    bench_trained)
@@ -23,10 +36,18 @@ def main() -> None:
         ("trained(§VII-A)", bench_trained),
         ("roofline(§Roofline)", bench_roofline),
     ]
+    if args.only:
+        mods = [(label, mod) for label, mod in mods if args.only in label]
+        if not mods:
+            ap.error(f"--only {args.only!r} matches no benchmark section")
     print("name,us_per_call,derived")
+
+    rows: list[dict] = []
 
     def emit(name: str, us: float, derived: str) -> None:
         print(f"{name},{us:.1f},{derived}", flush=True)
+        rows.append({"name": name, "us_per_call": round(us, 1),
+                     "derived": derived})
 
     failed = 0
     for label, mod in mods:
@@ -38,6 +59,18 @@ def main() -> None:
             failed += 1
             traceback.print_exc(file=sys.stderr)
             emit(f"_section/{label}", (time.time() - t0) * 1e6, f"FAILED: {e}")
+
+    if args.json:
+        doc = {
+            "schema": "apack-bench-v1",
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "results": rows,
+        }
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.json}", file=sys.stderr)
     sys.exit(1 if failed else 0)
 
 

@@ -40,12 +40,17 @@ class ApackTable:
       cum:  cumulative probability counts, ``cum[0] == 0``,
         ``cum[16] == 1024``; symbol ``s`` owns ``[cum[s], cum[s+1])``.
       bits: input value bit-width.
+      mode: which partitioning heuristic produced the table — "weight"
+        (paper §IV: exact histogram, empty ranges get zero counts) or
+        "activation" (§VI final adjustment: empty ranges keep one stolen
+        count so unprofiled values stay encodable).
     """
 
     v_min: tuple[int, ...]
     ol: tuple[int, ...]
     cum: tuple[int, ...]
     bits: int = 8
+    mode: str = "weight"
 
     def symbol_of(self, v: int) -> int:
         """Largest s with v_min[s] <= v (ranges are contiguous + exhaustive)."""
@@ -250,7 +255,8 @@ def find_table(hist: np.ndarray, bits: int = 8, is_activation: bool = False,
     bounds = v_min + [nvals]
     ol = [_ol_bits(bounds[i + 1] - bounds[i]) for i in range(N_SYMBOLS)]
     return ApackTable(v_min=tuple(v_min + [nvals]), ol=tuple(ol),
-                      cum=tuple(cum), bits=bits)
+                      cum=tuple(cum), bits=bits,
+                      mode="activation" if is_activation else "weight")
 
 
 def uniform_table(bits: int = 8) -> ApackTable:

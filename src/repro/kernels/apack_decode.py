@@ -23,8 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.ac_golden import HALF, MAX_RENORM, PCOUNT_BITS, QUARTER, THREEQ, TOP
-from .ref import read_bits
+from repro.core.ac_golden import PCOUNT_BITS, TOP
+from .ref import decode_renorm, read_bits, rev16
 
 I32 = jnp.int32
 U32 = jnp.uint32
@@ -40,12 +40,10 @@ def decode_block(sym_plane, ofs_plane, stored, v_min, ol, cum,
     ns = sym_plane.shape[1]
     zeros = jnp.zeros((ns,), I32)
 
-    def load_code(i, st):
-        code, spos = st
-        b = read_bits(sym_plane, spos, jnp.ones_like(spos)).astype(I32)
-        return code * 2 + b, spos + 1
-
-    code0, spos0 = jax.lax.fori_loop(0, 16, load_code, (zeros, zeros))
+    # initial CODE register: one 16-bit read, bit-reversed to MSB-first
+    code0 = rev16(read_bits(sym_plane, zeros,
+                            jnp.full((ns,), 16, I32))).astype(I32)
+    spos0 = jnp.full((ns,), 16, I32)
 
     def step(i, carry):
         low, high, code, spos, opos, out = carry
@@ -64,26 +62,8 @@ def decode_block(sym_plane, ofs_plane, stored, v_min, ol, cum,
         opos = opos + jnp.where(stored, bits, ol_s)
         high2 = low + ((rng * chi) >> PCOUNT_BITS) - 1
         low2 = low + ((rng * clo) >> PCOUNT_BITS)
-
-        def renorm(j, st):
-            lo, hi, cd, sp, act = st
-            c1 = hi < HALF
-            c2 = lo >= HALF
-            c3 = (lo >= QUARTER) & (hi < THREEQ)
-            do = act & (c1 | c2 | c3)
-            sub = jnp.where(c1, 0, jnp.where(c2, HALF, QUARTER))
-            bit = read_bits(sym_plane, sp, jnp.ones_like(sp)).astype(I32)
-            lo_n = (lo - sub) * 2
-            hi_n = (hi - sub) * 2 + 1
-            cd_n = (cd - sub) * 2 + bit
-            return (jnp.where(do, lo_n, lo), jnp.where(do, hi_n, hi),
-                    jnp.where(do, cd_n, cd), sp + do.astype(I32), do)
-
-        low3, high3, code3, spos3, _ = jax.lax.fori_loop(
-            0, MAX_RENORM, renorm,
-            (low2, high2, code, spos, jnp.logical_not(stored)))
-        low3 = jnp.where(stored, low, low3)
-        high3 = jnp.where(stored, high, high3)
+        low3, high3, code3, spos3 = decode_renorm(
+            low, high, code, spos, low2, high2, sym_plane, stored)
         out = jax.lax.dynamic_update_slice(out, value[:, None], (0, i))
         return (low3, high3, code3, spos3, opos, out)
 

@@ -21,9 +21,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.ac_golden import (HALF, MAX_PENDING, MAX_RENORM, PCOUNT_BITS,
-                                  QUARTER, THREEQ, TOP)
-from .ref import (ofs_capacity_words, shl32, shr32, sym_capacity_words)
+from repro.core.ac_golden import MAX_PENDING, PCOUNT_BITS, QUARTER, TOP
+from .ref import (encode_renorm, ofs_capacity_words, shl32, shr32,
+                  sym_capacity_words)
 
 I32 = jnp.int32
 U32 = jnp.uint32
@@ -62,53 +62,46 @@ def _encode_kernel(values_ref, vmin_ref, ol_ref, cum_ref,
     zeros = jnp.zeros((ns,), I32)
     zerosu = jnp.zeros((ns,), U32)
 
+    # hoisted symbol search + table gathers, vectorized over the whole
+    # [NS, E] block (16 unrolled compares stand in for the HW comparator
+    # array); the serial loop below only touches AC state and bit buffers.
+    s_idx = -jnp.ones(values.shape, I32)
+    for i in range(16):
+        s_idx = s_idx + (values >= v_min[i]).astype(I32)
+    ol_all = jnp.take(ol, s_idx)                         # [NS, E]
+    off_all = (values - jnp.take(v_min, s_idx)).astype(U32)
+    clo_all = jnp.take(cum, s_idx)
+    chi_all = jnp.take(cum, s_idx + 1)
+
     def step(i, carry):
         (low, high, pending, overflow,
          s_plane, s_widx, s_lo, s_hi, s_len, s_bits,
          o_plane, o_widx, o_lo, o_hi, o_len, o_bits) = carry
-        v = jax.lax.dynamic_slice(values, (0, i), (ns, 1))[:, 0]
-        s_idx = jnp.sum((v[:, None] >= v_min[None, :-1]).astype(I32),
-                        axis=1) - 1
-        ol_s = jnp.take(ol, s_idx)
-        off = (v - jnp.take(v_min, s_idx)).astype(U32)
+        ol_s = jax.lax.dynamic_slice(ol_all, (0, i), (ns, 1))[:, 0]
+        off = jax.lax.dynamic_slice(off_all, (0, i), (ns, 1))[:, 0]
+        clo = jax.lax.dynamic_slice(clo_all, (0, i), (ns, 1))[:, 0]
+        chi = jax.lax.dynamic_slice(chi_all, (0, i), (ns, 1))[:, 0]
         o_lo, o_hi, o_len = _append(o_lo, o_hi, o_len, off, ol_s)
         o_bits = o_bits + ol_s
         o_plane, o_widx, o_lo, o_hi, o_len = _flush(o_plane, o_widx,
                                                     o_lo, o_hi, o_len)
         rng = high - low + 1
-        chi = jnp.take(cum, s_idx + 1)
-        clo = jnp.take(cum, s_idx)
-        high = low + ((rng * chi) >> PCOUNT_BITS) - 1
-        low = low + ((rng * clo) >> PCOUNT_BITS)
+        high2 = low + ((rng * chi) >> PCOUNT_BITS) - 1
+        low2 = low + ((rng * clo) >> PCOUNT_BITS)
 
-        def renorm(j, st):
-            (lo, hi, pend, ovf, plane, widx, blo, bhi, blen, bout, act) = st
-            c1 = hi < HALF
-            c2 = lo >= HALF
-            c3 = (lo >= QUARTER) & (hi < THREEQ)
-            do = act & (c1 | c2 | c3)
-            emit = do & (c1 | c2)
-            b = c2.astype(U32)
-            inv_run = (shl32(jnp.ones_like(b), pend) - U32(1)) * (U32(1) - b)
-            pattern = b | (inv_run << 1)
-            k = jnp.where(emit, 1 + pend, 0)
-            blo, bhi, blen = _append(blo, bhi, blen,
-                                     jnp.where(emit, pattern, U32(0)), k)
-            bout = bout + k
-            pend_n = jnp.where(emit, 0, jnp.where(do, pend + 1, pend))
-            ovf = ovf | (pend_n > MAX_PENDING)
-            sub = jnp.where(c1, 0, jnp.where(c2, HALF, QUARTER))
-            lo = jnp.where(do, (lo - sub) * 2, lo)
-            hi = jnp.where(do, (hi - sub) * 2 + 1, hi)
-            plane, widx, blo, bhi, blen = _flush(plane, widx, blo, bhi, blen)
-            return (lo, hi, pend_n, ovf, plane, widx, blo, bhi, blen,
-                    bout, do)
-
-        (low, high, pending, overflow, s_plane, s_widx, s_lo, s_hi, s_len,
-         s_bits, _) = jax.lax.fori_loop(
-            0, MAX_RENORM, renorm,
-            (low, high, pending, overflow, s_plane, s_widx, s_lo, s_hi,
-             s_len, s_bits, jnp.ones((ns,), bool)))
+        # multi-bit renormalization: all matched leading bits + pending
+        # underflow bits emitted in two appends (see ref.encode_renorm)
+        low, high, pending, pat1, k1, pat2, k2 = encode_renorm(
+            low2, high2, pending)
+        s_lo, s_hi, s_len = _append(s_lo, s_hi, s_len, pat1, k1)
+        s_bits = s_bits + k1
+        s_plane, s_widx, s_lo, s_hi, s_len = _flush(s_plane, s_widx,
+                                                    s_lo, s_hi, s_len)
+        s_lo, s_hi, s_len = _append(s_lo, s_hi, s_len, pat2, k2)
+        s_bits = s_bits + k2
+        s_plane, s_widx, s_lo, s_hi, s_len = _flush(s_plane, s_widx,
+                                                    s_lo, s_hi, s_len)
+        overflow = overflow | (pending > MAX_PENDING)
         return (low, high, pending, overflow,
                 s_plane, s_widx, s_lo, s_hi, s_len, s_bits,
                 o_plane, o_widx, o_lo, o_hi, o_len, o_bits)

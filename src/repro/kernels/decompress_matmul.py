@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import format as fmt
 from repro.core.tables import ApackTable, find_table, histogram
@@ -106,15 +107,24 @@ def compress_linear(w: np.ndarray, tile_k: int = DEFAULT_TILE_K,
 
 
 def _fused_kernel(x_ref, sym_ref, ofs_ref, stored_ref, vmin_ref, ol_ref,
-                  cum_ref, scale_ref, out_ref, *, tile_k: int, nk: int):
-    kt = pl.program_id(2)
-    vals = decode_block(sym_ref[...].astype(U32), ofs_ref[...].astype(U32),
-                        stored_ref[...] != 0, vmin_ref[...], ol_ref[...],
-                        cum_ref[...], n_steps=tile_k, bits=8)   # [NS, E]
-    # two's-complement reinterpret + per-channel dequant
-    signed = jnp.where(vals >= 128, vals - 256, vals).astype(jnp.float32)
-    w_tile = signed.T * scale_ref[...][None, :]          # [E, NS] f32
-    acc = jnp.dot(x_ref[...].astype(jnp.float32), w_tile,
+                  cum_ref, scale_ref, out_ref, w_tile_ref, *, tile_k: int):
+    kt = pl.program_id(1)
+    i = pl.program_id(2)
+
+    # The grid iterates M innermost, so each compressed weight tile (j, kt)
+    # is decoded exactly once — at its first row-block visit — and the
+    # dequantized tile persists in VMEM scratch for the remaining
+    # m_pad // block_m - 1 visits (EIE-style decode-once amortization).
+    @pl.when(i == 0)
+    def _decode_tile():
+        vals = decode_block(sym_ref[...].astype(U32), ofs_ref[...].astype(U32),
+                            stored_ref[...] != 0, vmin_ref[...], ol_ref[...],
+                            cum_ref[...], n_steps=tile_k, bits=8)   # [NS, E]
+        # two's-complement reinterpret + per-channel dequant
+        signed = jnp.where(vals >= 128, vals - 256, vals).astype(jnp.float32)
+        w_tile_ref[...] = signed.T * scale_ref[...][None, :]   # [E, NS] f32
+
+    acc = jnp.dot(x_ref[...].astype(jnp.float32), w_tile_ref[...],
                   preferred_element_type=jnp.float32)
 
     @pl.when(kt == 0)
@@ -129,7 +139,18 @@ def _fused_kernel(x_ref, sym_ref, ofs_ref, stored_ref, vmin_ref, ol_ref,
 @functools.partial(jax.jit, static_argnames=("interpret", "block_m"))
 def compressed_matmul(x: jax.Array, cw: CompressedLinear,
                       interpret: bool = True, block_m: int = 256) -> jax.Array:
-    """``x @ W`` where W is APack-compressed; x: f32/bf16 [M, K]."""
+    """``x @ W`` where W is APack-compressed; x: f32/bf16 [M, K].
+
+    Grid order is (N-tiles, K-tiles, M-blocks) with M innermost: decode work
+    is independent of M (each tile decoded once into scratch), at the cost
+    of revisiting output blocks once per K-tile — the decode is orders of
+    magnitude more expensive than the extra out-block traffic.
+
+    NOTE: the out-block revisits across kt are non-consecutive (other
+    M-blocks run in between).  Interpret mode — the validated contract on
+    CPU — handles this exactly; before enabling compiled TPU mode, confirm
+    Mosaic re-fetches revisited output blocks, or switch the accumulation
+    to a dedicated VMEM scratch accumulator flushed at kt == nk - 1."""
     m, k = x.shape
     assert k == cw.k, f"K mismatch: {k} vs {cw.k}"
     k_pad, n_pad = cw.k_pad, cw.n_pad
@@ -137,22 +158,23 @@ def compressed_matmul(x: jax.Array, cw: CompressedLinear,
     m_pad = -(-m // block_m) * block_m
     xp = jnp.pad(x, ((0, m_pad - m), (0, k_pad - k)))
     ws, wo = cw.sym_plane.shape[0], cw.ofs_plane.shape[0]
-    grid = (m_pad // block_m, nn, nk)
+    grid = (nn, nk, m_pad // block_m)
     out = pl.pallas_call(
-        functools.partial(_fused_kernel, tile_k=cw.tile_k, nk=nk),
+        functools.partial(_fused_kernel, tile_k=cw.tile_k),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_m, cw.tile_k), lambda i, j, kt: (i, kt)),
-            pl.BlockSpec((ws, TILE_N), lambda i, j, kt: (0, kt * nn + j)),
-            pl.BlockSpec((wo, TILE_N), lambda i, j, kt: (0, kt * nn + j)),
-            pl.BlockSpec((TILE_N,), lambda i, j, kt: (kt * nn + j,)),
-            pl.BlockSpec((17,), lambda i, j, kt: (0,)),
-            pl.BlockSpec((16,), lambda i, j, kt: (0,)),
-            pl.BlockSpec((17,), lambda i, j, kt: (0,)),
-            pl.BlockSpec((TILE_N,), lambda i, j, kt: (j,)),
+            pl.BlockSpec((block_m, cw.tile_k), lambda j, kt, i: (i, kt)),
+            pl.BlockSpec((ws, TILE_N), lambda j, kt, i: (0, kt * nn + j)),
+            pl.BlockSpec((wo, TILE_N), lambda j, kt, i: (0, kt * nn + j)),
+            pl.BlockSpec((TILE_N,), lambda j, kt, i: (kt * nn + j,)),
+            pl.BlockSpec((17,), lambda j, kt, i: (0,)),
+            pl.BlockSpec((16,), lambda j, kt, i: (0,)),
+            pl.BlockSpec((17,), lambda j, kt, i: (0,)),
+            pl.BlockSpec((TILE_N,), lambda j, kt, i: (j,)),
         ],
-        out_specs=pl.BlockSpec((block_m, TILE_N), lambda i, j, kt: (i, j)),
+        out_specs=pl.BlockSpec((block_m, TILE_N), lambda j, kt, i: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m_pad, n_pad), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((cw.tile_k, TILE_N), jnp.float32)],
         interpret=interpret,
     )(xp, cw.sym_plane, cw.ofs_plane, cw.stored, cw.v_min, cw.ol, cw.cum,
       cw.scale)

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.ac_golden import (HALF, MAX_PENDING, MAX_RENORM, PCOUNT_BITS,
-                                  QUARTER, THREEQ, TOP)
+                                  QUARTER, TOP)
 from repro.core.tables import ApackTable
 
 U32 = jnp.uint32
@@ -51,6 +51,108 @@ def shl32(x: jax.Array, k: jax.Array) -> jax.Array:
     """Left shift, correct for k in [0, 32]."""
     kc = jnp.minimum(k, 31).astype(U32)
     return jnp.where(k >= 32, U32(0), (x.astype(U32) << kc))
+
+
+def bitlen16(x: jax.Array) -> jax.Array:
+    """Bit length of x in [0, 0xFFFF] (0 -> 0), branch-free binary search."""
+    x = x.astype(I32)
+    b = jnp.zeros_like(x)
+    for s in (8, 4, 2, 1):
+        big = x >= (1 << s)
+        b = b + jnp.where(big, s, 0)
+        x = jnp.where(big, x >> s, x)
+    return b + (x > 0).astype(I32)
+
+
+def rev16(w: jax.Array) -> jax.Array:
+    """Reverse the low 16 bits (bit 0 <-> bit 15), u32 in/out."""
+    w = w.astype(U32)
+    w = ((w & U32(0x5555)) << 1) | ((w >> 1) & U32(0x5555))
+    w = ((w & U32(0x3333)) << 2) | ((w >> 2) & U32(0x3333))
+    w = ((w & U32(0x0F0F)) << 4) | ((w >> 4) & U32(0x0F0F))
+    w = ((w & U32(0x00FF)) << 8) | ((w >> 8) & U32(0x00FF))
+    return w & U32(0xFFFF)
+
+
+def renorm_counts(low: jax.Array, high: jax.Array):
+    """O(1) replacement for the per-bit WNC renormalization loop.
+
+    After a range update the loop is provably a run of ``m`` emit-shifts
+    (the matched leading bits of low/high) followed by a run of ``u``
+    underflow-shifts (the straddle positions ``low=..01x``/``high=..10x``
+    directly below the matched prefix), then it stops: an underflow shift
+    clears bit15 of low and sets bit15 of high, so an emit can never follow
+    an underflow within one symbol.  Returns ``(m, u, low', high')`` where
+    ``low'``/``high'`` are the fully renormalized interval bounds.
+    """
+    m = 16 - bitlen16(low ^ high)
+    low_m = (shl32(low.astype(U32), m) & U32(0xFFFF)).astype(I32)
+    high_m = ((shl32(high.astype(U32), m)
+               | (shl32(jnp.ones_like(low, U32), m) - U32(1)))
+              & U32(0xFFFF)).astype(I32)
+    # straddle run: consecutive positions below the MSB where low has 1 and
+    # high has 0; count-leading-ones of (low & ~high) << 1
+    t = (low_m & ~high_m) & 0xFFFF
+    u = 16 - bitlen16(~(t << 1) & 0xFFFF)
+    ufill = (shl32(jnp.ones_like(low, U32), u) - U32(1)).astype(I32)
+    low_f = (shl32(low_m.astype(U32), u) & U32(0x7FFF)).astype(I32)
+    high_f = ((shl32(high_m.astype(U32), u) & U32(0x7FFF)).astype(I32)
+              | HALF | ufill)
+    return m, u, low_f, high_f
+
+
+def decode_renorm(low, high, code, spos, low2, high2, sym_plane, stored):
+    """Decoder side of the multi-bit renormalization: renormalize the
+    post-update interval ``low2``/``high2``, consume all m+u stream bits in
+    one read, and update the CODE register in closed form.  Shared by
+    ``decode`` and the Pallas ``decode_block``.
+
+    ``low``/``high``/``code``/``spos`` are the pre-update values, returned
+    unchanged for stored lanes.  Valid streams need at most 16 bits per
+    step (m + u <= MAX_RENORM); the clamp guards the garbage padding lanes
+    whose output is discarded.
+    """
+    m, u, low3, high3 = renorm_counts(low2, high2)
+    k = jnp.minimum(m + u, 16)
+    u = jnp.minimum(u, k - jnp.minimum(m, k))
+    w = read_bits(sym_plane, spos, k)
+    r = shr32(rev16(w), 16 - k).astype(I32)           # first-read bit = MSB
+    r_m = shr32(r.astype(U32), u).astype(I32)
+    ufill = (shl32(jnp.ones_like(u, U32), u) - U32(1)).astype(I32)
+    code_m = (shl32(code.astype(U32), m) & U32(0xFFFF)).astype(I32) | r_m
+    code3 = (shl32(code_m.astype(U32), u).astype(I32)
+             - HALF * ufill + (r & ufill))
+    # stored streams keep AC state frozen
+    low3 = jnp.where(stored, low, low3)
+    high3 = jnp.where(stored, high, high3)
+    code3 = jnp.where(stored, code, code3)
+    spos3 = spos + jnp.where(stored, 0, k)
+    return low3, high3, code3, spos3
+
+
+def encode_renorm(low2, high2, pending):
+    """Encoder side of the multi-bit renormalization: renormalize the
+    post-update interval and express the emitted bits as two append
+    patterns.  Shared by ``encode_ac`` and the Pallas encoder kernel.
+
+    Returns ``(low, high, pending', pat1, k1, pat2, k2)``: append ``pat1``
+    (``k1`` bits — the first matched bit followed by the pending inverse
+    run, LSB-first emission order) then ``pat2`` (``k2`` bits — the
+    remaining matched leading bits of ``low2``).  ``k1``/``k2`` are zero
+    when nothing is emitted; the caller flags overflow when ``pending'``
+    exceeds ``MAX_PENDING``.
+    """
+    m, u, low, high = renorm_counts(low2, high2)
+    has = m > 0
+    ones = jnp.ones_like(low2).astype(U32)
+    prefix = rev16(low2.astype(U32)) & (shl32(ones, m) - U32(1))
+    b1 = prefix & U32(1)
+    inv_run = (shl32(ones, pending) - U32(1)) * (U32(1) - b1)
+    k1 = jnp.where(has, 1 + pending, 0)
+    pat1 = jnp.where(has, b1 | (inv_run << 1), U32(0))
+    k2 = jnp.where(has, m - 1, 0)
+    pending = jnp.where(has, u, pending + u)
+    return low, high, pending, pat1, k1, prefix >> 1, k2
 
 
 def gather_word(plane: jax.Array, w: jax.Array) -> jax.Array:
@@ -100,14 +202,11 @@ def decode(sym_plane: jax.Array, ofs_plane: jax.Array, stored: jax.Array,
     v_min = table.v_min
     ol = table.ol
 
-    # initial CODE register: 16 bits, stream order = MSB first
-    def load_code(i, st):
-        code, spos = st
-        b = read_bits(sym_plane, spos, jnp.ones_like(spos)).astype(I32)
-        return code * 2 + b, spos + 1
-
+    # initial CODE register: one 16-bit read; stream order = MSB of CODE first
     zeros = jnp.zeros((S,), I32)
-    code0, spos0 = jax.lax.fori_loop(0, 16, load_code, (zeros, zeros))
+    code0 = rev16(read_bits(sym_plane, zeros,
+                            jnp.full((S,), 16, I32))).astype(I32)
+    spos0 = jnp.full((S,), 16, I32)
 
     def step(carry, _):
         low, high, code, spos, opos = carry
@@ -127,27 +226,8 @@ def decode(sym_plane: jax.Array, ofs_plane: jax.Array, stored: jax.Array,
         opos = opos + jnp.where(stored, bits, ol_s)
         high2 = low + ((rng * chi) >> PCOUNT_BITS) - 1
         low2 = low + ((rng * clo) >> PCOUNT_BITS)
-
-        def renorm(i, st):
-            lo, hi, cd, sp, act = st
-            c1 = hi < HALF
-            c2 = lo >= HALF
-            c3 = (lo >= QUARTER) & (hi < THREEQ)
-            do = act & (c1 | c2 | c3)
-            sub = jnp.where(c1, 0, jnp.where(c2, HALF, QUARTER))
-            bit = read_bits(sym_plane, sp, jnp.ones_like(sp)).astype(I32)
-            lo_n = (lo - sub) * 2
-            hi_n = (hi - sub) * 2 + 1
-            cd_n = (cd - sub) * 2 + bit
-            return (jnp.where(do, lo_n, lo), jnp.where(do, hi_n, hi),
-                    jnp.where(do, cd_n, cd), sp + do.astype(I32), do)
-
-        low3, high3, code3, spos3, _ = jax.lax.fori_loop(
-            0, MAX_RENORM, renorm,
-            (low2, high2, code, spos, jnp.logical_not(stored)))
-        # stored streams keep AC state frozen
-        low3 = jnp.where(stored, low, low3)
-        high3 = jnp.where(stored, high, high3)
+        low3, high3, code3, spos3 = decode_renorm(
+            low, high, code, spos, low2, high2, sym_plane, stored)
         return (low3, high3, code3, spos3, opos), value
 
     init = (zeros, jnp.full((S,), TOP, I32), code0, spos0, zeros)
@@ -202,58 +282,45 @@ def encode_ac(values: jax.Array, table: TableArrays, n_steps: int,
     Wo = ofs_capacity_words(n_steps, bits)
     sidx = jnp.arange(S)
 
-    def step(carry, v):
+    # hoisted symbol search + table gathers: one vectorized pass over the
+    # whole [S, E] block; the serial scan below only touches AC state and
+    # the bit buffers.
+    vals = values.astype(I32)
+    s_idx = (jnp.searchsorted(v_min[:-1], vals.reshape(-1),
+                              side="right").astype(I32) - 1).reshape(vals.shape)
+    ol_all = jnp.take(ol, s_idx)                         # [S, E]
+    off_all = (vals - jnp.take(v_min, s_idx)).astype(U32)
+    clo_all = jnp.take(cum, s_idx)
+    chi_all = jnp.take(cum, s_idx + 1)
+
+    def step(carry, xs):
         (low, high, pending, overflow,
          s_plane, s_widx, s_lo, s_hi, s_len, s_bits,
          o_plane, o_widx, o_lo, o_hi, o_len, o_bits) = carry
-        # symbol lookup (largest s with v_min[s] <= v)
-        s_idx = jnp.sum((v[:, None] >= v_min[None, :-1]).astype(I32), axis=1) - 1
-        ol_s = jnp.take(ol, s_idx)
+        off, ol_s, clo, chi = xs
         # offset emission
-        off = (v - jnp.take(v_min, s_idx)).astype(U32)
         o_lo, o_hi, o_len = _append(o_lo, o_hi, o_len, off, ol_s)
         o_bits = o_bits + ol_s
         o_plane, o_widx, o_lo, o_hi, o_len = _flush(o_plane, o_widx, sidx,
                                                     o_lo, o_hi, o_len)
         # range update
         rng = high - low + 1
-        chi = jnp.take(cum, s_idx + 1)
-        clo = jnp.take(cum, s_idx)
-        high = low + ((rng * chi) >> PCOUNT_BITS) - 1
-        low = low + ((rng * clo) >> PCOUNT_BITS)
+        high2 = low + ((rng * chi) >> PCOUNT_BITS) - 1
+        low2 = low + ((rng * clo) >> PCOUNT_BITS)
 
-        def renorm(i, st):
-            (lo, hi, pend, ovf, plane, widx, blo, bhi, blen, bits_out, act) = st
-            c1 = hi < HALF
-            c2 = lo >= HALF
-            c3 = (lo >= QUARTER) & (hi < THREEQ)
-            do = act & (c1 | c2 | c3)
-            emit = do & (c1 | c2)
-            b = c2.astype(U32)                         # emitted bit
-            # bit + pending inverted bits, LSB-first: b | (~b)*pending << 1
-            inv_run = (shl32(jnp.ones_like(b), pend) - U32(1)) * (U32(1) - b)
-            pattern = b | (inv_run << 1)
-            k = jnp.where(emit, 1 + pend, 0)
-            blo, bhi, blen = _append(blo, bhi, blen,
-                                     jnp.where(emit, pattern, U32(0)), k)
-            bits_out = bits_out + k
-            pend_n = jnp.where(emit, 0, jnp.where(do, pend + 1, pend))
-            ovf = ovf | (pend_n > MAX_PENDING)
-            sub = jnp.where(c1, 0, jnp.where(c2, HALF, QUARTER))
-            lo_n = (lo - sub) * 2
-            hi_n = (hi - sub) * 2 + 1
-            lo = jnp.where(do, lo_n, lo)
-            hi = jnp.where(do, hi_n, hi)
-            plane, widx, blo, bhi, blen = _flush(plane, widx, sidx,
-                                                 blo, bhi, blen)
-            return (lo, hi, pend_n, ovf, plane, widx, blo, bhi, blen,
-                    bits_out, do)
-
-        (low, high, pending, overflow, s_plane, s_widx, s_lo, s_hi, s_len,
-         s_bits, _) = jax.lax.fori_loop(
-            0, MAX_RENORM, renorm,
-            (low, high, pending, overflow, s_plane, s_widx, s_lo, s_hi,
-             s_len, s_bits, jnp.ones((S,), bool)))
+        # multi-bit renormalization: all matched leading bits + pending
+        # underflow bits emitted in two appends (see encode_renorm)
+        low, high, pending, pat1, k1, pat2, k2 = encode_renorm(
+            low2, high2, pending)
+        s_lo, s_hi, s_len = _append(s_lo, s_hi, s_len, pat1, k1)
+        s_bits = s_bits + k1
+        s_plane, s_widx, s_lo, s_hi, s_len = _flush(s_plane, s_widx, sidx,
+                                                    s_lo, s_hi, s_len)
+        s_lo, s_hi, s_len = _append(s_lo, s_hi, s_len, pat2, k2)
+        s_bits = s_bits + k2
+        s_plane, s_widx, s_lo, s_hi, s_len = _flush(s_plane, s_widx, sidx,
+                                                    s_lo, s_hi, s_len)
+        overflow = overflow | (pending > MAX_PENDING)
         return (low, high, pending, overflow,
                 s_plane, s_widx, s_lo, s_hi, s_len, s_bits,
                 o_plane, o_widx, o_lo, o_hi, o_len, o_bits), None
@@ -263,7 +330,8 @@ def encode_ac(values: jax.Array, table: TableArrays, n_steps: int,
     init = (zeros, jnp.full((S,), TOP, I32), zeros, jnp.zeros((S,), bool),
             jnp.zeros((Ws, S), U32), zeros, zerosu, zerosu, zeros, zeros,
             jnp.zeros((Wo, S), U32), zeros, zerosu, zerosu, zeros, zeros)
-    carry, _ = jax.lax.scan(step, init, values.T.astype(I32))
+    carry, _ = jax.lax.scan(step, init,
+                            (off_all.T, ol_all.T, clo_all.T, chi_all.T))
     (low, high, pending, overflow,
      s_plane, s_widx, s_lo, s_hi, s_len, s_bits,
      o_plane, o_widx, o_lo, o_hi, o_len, o_bits) = carry

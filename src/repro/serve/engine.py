@@ -65,8 +65,12 @@ def compress_params(params: Any, min_size: int = 16384) -> CompressedParams:
             q, qp = quant.quantize_symmetric(jnp.asarray(arr, jnp.float32),
                                              axis=-1)
             u = quant.to_unsigned(np.asarray(q))
-            table = tables.table_for(u.reshape(-1)[:2 ** 20],
-                                     is_activation=True)
+            # Weights are static, so the paper's weight-mode heuristic
+            # applies: profile the full tensor (histogram is cheap) and do
+            # NOT steal probability counts for empty ranges — that slack is
+            # only needed for activations whose values aren't all profiled.
+            # (tests/test_serve.py pins table.mode == "weight".)
+            table = tables.table_for(u.reshape(-1), is_activation=False)
             ct = fastpath.compress_np(u, table)
             containers[i] = (ct, np.asarray(qp.scale), str(arr.dtype))
             comp += ct.total_bits // 8

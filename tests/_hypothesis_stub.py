@@ -1,0 +1,103 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The CI image bakes in jax/numpy/pytest but not always hypothesis; rather
+than skip every property test, ``conftest.py`` installs this module as
+``hypothesis`` so ``@given`` tests still run — with a fixed number of
+deterministic pseudo-random examples instead of adaptive search.  Only the
+tiny API surface the test-suite uses is provided (``given``, ``settings``,
+``strategies.integers/floats/lists``).  Install the real package (see
+``requirements.txt``) to get shrinking and adaptive example generation.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+DEFAULT_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0,
+           **_kw) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def lists(elements: _Strategy, min_size: int = 0,
+          max_size: int = 10) -> _Strategy:
+    def draw(rng: random.Random):
+        n = rng.randint(min_size, max_size)
+        return [elements.example(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def sampled_from(options) -> _Strategy:
+    options = list(options)
+    return _Strategy(lambda rng: rng.choice(options))
+
+
+class strategies:                                  # "from hypothesis import strategies as st"
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    lists = staticmethod(lists)
+    sampled_from = staticmethod(sampled_from)
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(fn, "_stub_max_examples", DEFAULT_EXAMPLES)
+            # deterministic per-test seed so failures reproduce
+            rng = random.Random(fn.__qualname__)
+            for _ in range(n):
+                fn(*args, *(s.example(rng) for s in strats), **kwargs)
+        # hide the drawn parameters from pytest's fixture resolution
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())[:-len(strats)]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        wrapper.hypothesis_stub = True
+        return wrapper
+    return deco
+
+
+class settings:
+    """Both the decorator (``@settings(max_examples=...)``) and the profile
+    registry (``settings.register_profile`` / ``load_profile``)."""
+
+    _profiles: dict = {}
+
+    def __init__(self, max_examples: int | None = None, **_kw):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        if self.max_examples is not None:
+            # applies whether @settings sits above or below @given
+            target = fn.__wrapped__ if hasattr(fn, "__wrapped__") else fn
+            target._stub_max_examples = self.max_examples
+            fn._stub_max_examples = self.max_examples
+        return fn
+
+    @classmethod
+    def register_profile(cls, name, *args, **kwargs):
+        cls._profiles[name] = (args, kwargs)
+
+    @classmethod
+    def load_profile(cls, name):
+        pass
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"

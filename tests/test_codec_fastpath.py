@@ -1,0 +1,186 @@
+"""Fast-path coverage for the multi-bit-renormalization codec and the
+decode-once fused matmul.
+
+The multi-bit renorm (kernels/ref.py ``renorm_counts``) replaces the per-bit
+WNC loop with closed-form bit arithmetic; these tests pin it against (a) a
+direct Python transcription of the per-bit loop and (b) the golden codec's
+full streams, across bit-widths, stored-mode fallbacks, and stream counts
+that don't tile the 128-lane kernel block.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ac_golden, distributions, format as fmt, tables
+from repro.core.ac_golden import HALF, QUARTER, THREEQ, TOP
+from repro.kernels import ops, ref
+from repro.kernels import decompress_matmul as dm
+
+
+def _wnc_renorm(low: int, high: int):
+    """Per-bit reference of one post-update renormalization run."""
+    m = u = 0
+    bits = []
+    while True:
+        if high < HALF:
+            bits.append(0)
+            m += 1
+        elif low >= HALF:
+            bits.append(1)
+            low -= HALF
+            high -= HALF
+            m += 1
+        elif low >= QUARTER and high < THREEQ:
+            u += 1
+            low -= QUARTER
+            high -= QUARTER
+        else:
+            break
+        low = low * 2
+        high = high * 2 + 1
+    return m, u, low, high, bits
+
+
+class TestRenormCounts:
+    @settings(max_examples=200, deadline=None)
+    @given(st.integers(0, TOP), st.integers(0, TOP))
+    def test_matches_per_bit_loop(self, a, b):
+        low, high = min(a, b), max(a, b)
+        if low == high:
+            high = min(high + 1, TOP)
+            low = high - 1
+        em, eu, elo, ehi, ebits = _wnc_renorm(low, high)
+        m, u, lo, hi = ref.renorm_counts(jnp.asarray([low], jnp.int32),
+                                         jnp.asarray([high], jnp.int32))
+        assert (int(m[0]), int(u[0])) == (em, eu), (low, high)
+        assert (int(lo[0]), int(hi[0])) == (elo, ehi), (low, high)
+        # emitted bits are the m matched leading bits of low, MSB-first
+        prefix = [(low >> (15 - i)) & 1 for i in range(em)]
+        assert prefix == ebits
+
+    def test_interval_invariant_restored(self):
+        # after renorm the range must exceed QUARTER (WNC invariant)
+        rng = np.random.default_rng(0)
+        lows = rng.integers(0, TOP, 4096)
+        highs = np.minimum(lows + rng.integers(16, TOP, 4096), TOP)
+        m, u, lo, hi = ref.renorm_counts(jnp.asarray(lows, jnp.int32),
+                                         jnp.asarray(highs, jnp.int32))
+        assert bool(jnp.all(hi - lo + 1 > QUARTER))
+
+    def test_bit_helpers(self):
+        x = jnp.asarray([0, 1, 2, 0x8000, 0xFFFF], jnp.int32)
+        assert np.asarray(ref.bitlen16(x)).tolist() == [0, 1, 2, 16, 16]
+        w = jnp.asarray([0x0001, 0x8000, 0x1234], jnp.uint32)
+        assert np.asarray(ref.rev16(w)).tolist() == [0x8000, 0x0001, 0x2C48]
+
+
+def _golden_stream_check(v, table, e):
+    """Encode with the jnp kernels and golden; assert bit-identical planes."""
+    ct = fmt.compress(v, table, bits=table.bits, elems_per_stream=e)  # golden
+    for backend in ("ref", "pallas_interpret"):
+        ca = ops.apack_encode(v, table, elems_per_stream=e, backend=backend)
+        assert np.array_equal(np.asarray(ca.sym_bits), ct.sym_bits), backend
+        assert np.array_equal(np.asarray(ca.ofs_bits), ct.ofs_bits), backend
+        assert np.array_equal(np.asarray(ca.stored), ct.stored), backend
+        ws, wo = ct.sym_plane.shape[0], ct.ofs_plane.shape[0]
+        assert np.array_equal(
+            np.asarray(ca.sym_plane[:ws]).astype(np.uint32), ct.sym_plane)
+        assert np.array_equal(
+            np.asarray(ca.ofs_plane[:wo]).astype(np.uint32), ct.ofs_plane)
+        out = ops.apack_decode(ca, backend=backend)
+        assert np.array_equal(np.asarray(out).astype(np.int64), v), backend
+
+
+class TestBitExactVsGolden:
+    @pytest.mark.parametrize("bits", [4, 8, 16])
+    def test_bitwidth_sweep(self, bits):
+        rng = np.random.default_rng(bits)
+        base = distributions.gaussian_weights(3000, seed=bits).astype(np.int64)
+        v = (base * (1 if bits <= 8 else 257)) & ((1 << bits) - 1)
+        t = tables.table_for(v, bits=bits, is_activation=True)
+        _golden_stream_check(v, t, e=128)
+
+    def test_stored_mode_fallback_streams(self):
+        # uniform values under a uniform table inflate -> stored fallback
+        rng = np.random.default_rng(1)
+        v = rng.integers(0, 256, 1024).astype(np.int64)
+        t = tables.uniform_table()
+        ca = ops.apack_encode(v, t, elems_per_stream=128,
+                              backend="pallas_interpret")
+        assert bool(np.asarray(ca.stored).all())
+        _golden_stream_check(v, t, e=128)
+
+    def test_mixed_stored_and_ac_streams(self):
+        # half gaussian (compresses), half uniform (stored) in one tensor
+        rng = np.random.default_rng(2)
+        g = distributions.gaussian_weights(512, seed=3).astype(np.int64)
+        u = rng.integers(0, 256, 512).astype(np.int64)
+        v = np.concatenate([g, u]) & 0xFF
+        t = tables.table_for(g, is_activation=True)
+        ca = ops.apack_encode(v, t, elems_per_stream=128,
+                              backend="pallas_interpret")
+        stored = np.asarray(ca.stored)
+        assert stored.any() and not stored.all()
+        _golden_stream_check(v, t, e=128)
+
+    @pytest.mark.parametrize("n", [1, 100, 129 * 64, 5000])
+    def test_non_multiple_of_128_streams(self, n):
+        # stream counts that don't tile BLOCK_STREAMS exercise the padding
+        # lanes (garbage-in, discarded-out) around the multi-bit fast path
+        v = distributions.gaussian_weights(max(n, 1), seed=n).astype(np.int64) & 0xFF
+        t = tables.table_for(v, is_activation=True)
+        ca = ops.apack_encode(v, t, elems_per_stream=64,
+                              backend="pallas_interpret")
+        assert ca.sym_bits.shape[0] == -(-n // 64)
+        out = ops.apack_decode(ca, backend="pallas_interpret")
+        assert np.array_equal(np.asarray(out).astype(np.int64), v)
+
+
+class TestDecodeOnceMatmul:
+    @pytest.mark.parametrize("block_m", [8, 16, 32])
+    def test_output_invariant_to_block_m(self, block_m):
+        # m_pad // block_m > 1 for every setting: the decode-under-
+        # pl.when(i == 0) + VMEM scratch path must give identical results
+        # no matter how many row-blocks reuse the decoded tile.
+        rng = np.random.default_rng(7)
+        m, k, n = 64, 256, 128
+        w = rng.normal(0, 0.05, (k, n)).astype(np.float32)
+        x = rng.normal(0, 1, (m, k)).astype(np.float32)
+        cw = dm.compress_linear(w, tile_k=128)
+        assert m // block_m > 1
+        fused = np.asarray(dm.compressed_matmul(jnp.asarray(x), cw,
+                                                block_m=block_m))
+        oracle = np.asarray(dm.reference_matmul(jnp.asarray(x), cw))
+        np.testing.assert_allclose(fused, oracle, rtol=1e-5, atol=1e-5)
+
+    def test_multi_tile_grid(self):
+        # nk > 1 and nn > 1 and row-blocks > 1 simultaneously: scratch must
+        # be refilled at each (j, kt) tile and reused across i only.
+        rng = np.random.default_rng(8)
+        m, k, n = 32, 256, 256
+        w = rng.normal(0, 0.05, (k, n)).astype(np.float32)
+        x = rng.normal(0, 1, (m, k)).astype(np.float32)
+        cw = dm.compress_linear(w, tile_k=128)
+        fused = np.asarray(dm.compressed_matmul(jnp.asarray(x), cw, block_m=16))
+        oracle = np.asarray(dm.reference_matmul(jnp.asarray(x), cw))
+        np.testing.assert_allclose(fused, oracle, rtol=1e-5, atol=1e-5)
+
+
+class TestTableMode:
+    def test_find_table_records_mode(self):
+        v = distributions.gaussian_weights(4096, seed=0).astype(np.int64) & 0xFF
+        assert tables.table_for(v, is_activation=False).mode == "weight"
+        assert tables.table_for(v, is_activation=True).mode == "activation"
+
+    def test_weight_mode_gives_empty_ranges_zero_counts(self):
+        # only low values present: weight mode must not steal counts for
+        # the empty upper ranges, activation mode must
+        v = np.zeros(4096, np.int64)
+        v[:100] = np.arange(100) % 16
+        tw = tables.table_for(v, is_activation=False)
+        ta = tables.table_for(v, is_activation=True)
+        cw = np.diff(np.asarray(tw.cum))
+        ca = np.diff(np.asarray(ta.cum))
+        assert (cw == 0).any()
+        assert (ca > 0).all()

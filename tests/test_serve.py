@@ -41,6 +41,16 @@ class TestCompressedParams:
         cp = compress_params(params, min_size=1024)
         assert cp.ratio > 2.0     # fp32 -> int8+APack is at least ~4x/1.x
 
+    def test_weight_tables_use_weight_mode(self):
+        # regression: weight matrices must use the weight-mode partitioning
+        # heuristic (paper §IV), not the activation final-adjustment (§VI)
+        cfg = small_cfg()
+        params = M.init_params(cfg, KEY)
+        cp = compress_params(params, min_size=1024)
+        assert cp.containers, "expected at least one compressed matrix"
+        for ct, _scale, _dtype in cp.containers.values():
+            assert ct.table.mode == "weight"
+
 
 class TestEngine:
     def test_batched_generation_drains(self):
