@@ -44,10 +44,14 @@ def main(argv=None) -> None:
 
     rows: list[dict] = []
 
-    def emit(name: str, us: float, derived: str) -> None:
+    def emit(name: str, us: float, derived: str, value: float | None = None) -> None:
         print(f"{name},{us:.1f},{derived}", flush=True)
-        rows.append({"name": name, "us_per_call": round(us, 1),
-                     "derived": derived})
+        row = {"name": name, "us_per_call": round(us, 1), "derived": derived}
+        if value is not None:
+            # machine-readable scalar (e.g. the measured KV compression
+            # ratio) so trajectory tooling doesn't parse `derived` strings
+            row["value"] = value
+        rows.append(row)
 
     failed = 0
     for label, mod in mods:

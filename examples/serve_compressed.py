@@ -1,7 +1,12 @@
 """Serve a small model with batched requests from APack-compressed weights
-(paper Fig. 1 integration at the serving layer).
+AND a paged, APack-compressed int8 KV cache (paper Fig. 1 integration at
+the serving layer: weights decompress at load, decode KV reads go through
+the activation-mode gather-decode path and the run prints the measured
+raw-vs-compressed KV traffic ratio).
 
     PYTHONPATH=src python examples/serve_compressed.py
+    # raw-KV baseline for comparison:
+    PYTHONPATH=src python examples/serve_compressed.py --kv int8
 """
 import os
 import subprocess
@@ -13,8 +18,10 @@ REPO = Path(__file__).resolve().parent.parent
 if __name__ == "__main__":
     env = dict(os.environ)
     env["PYTHONPATH"] = str(REPO / "src")
+    args = ["--arch", "qwen3-1.7b", "--smoke", "--requests", "12",
+            "--prompt-len", "16", "--max-new", "12", "--max-batch", "4"]
+    if not any(a == "--kv" or a.startswith("--kv=") for a in sys.argv[1:]):
+        args += ["--kv", "apack-int8", "--kv-page-size", "8"]
     raise SystemExit(subprocess.run(
-        [sys.executable, "-m", "repro.launch.serve", "--arch", "qwen3-1.7b",
-         "--smoke", "--requests", "12", "--prompt-len", "16",
-         "--max-new", "12", "--max-batch", "4"] + sys.argv[1:],
+        [sys.executable, "-m", "repro.launch.serve"] + args + sys.argv[1:],
         env=env).returncode)

@@ -1,0 +1,135 @@
+"""Pallas paged gather-decode kernel for the APack-compressed KV cache.
+
+The serving engine stores cold KV pages as fixed-capacity APack planes
+stacked in a block pool (``models/modules.py::KVPagePool``): page ``p``'s
+symbol plane lives at ``sym[p]`` (u32[Ws, S]), its offset plane at
+``ofs[p]``.  On every attention read the engine needs an arbitrary *subset*
+of pages — the per-request page tables of the active batch — decoded into
+dense int8 K/V.
+
+This kernel is that read path: a scalar-prefetched page-index vector drives
+the BlockSpec index_map, so grid program ``g`` DMAs exactly page
+``page_idx[g]``'s compressed words HBM->VMEM and decodes it with the shared
+``decode_block`` body (one stream per lane, ``fori_loop`` over symbols).
+Off-chip traffic is the *compressed* footprint — the paper's Figure-1
+saving applied to KV-cache decode reads instead of weight reads.
+
+Interpret mode is bit-exact with ``fastpath.decompress_np`` per page
+(tests/test_paged_kv.py); on TPU the same kernel compiles with the pages
+resident in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import ref as _ref
+from .apack_decode import decode_block
+
+I32 = jnp.int32
+U32 = jnp.uint32
+
+# jit-compile buckets for the gather size: pad the page-index vector up to
+# the next bucket so a serving loop with a growing working set compiles
+# O(log pages) kernels, not one per distinct page count.
+GATHER_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024)
+
+
+def gather_bucket(n: int) -> int:
+    for b in GATHER_BUCKETS:
+        if n <= b:
+            return b
+    return -(-n // GATHER_BUCKETS[-1]) * GATHER_BUCKETS[-1]
+
+
+def _gather_decode_kernel(idx_ref, sym_ref, ofs_ref, stored_ref, vmin_ref,
+                          ol_ref, cum_ref, out_ref, *, n_steps: int,
+                          bits: int):
+    del idx_ref                     # consumed by the BlockSpec index_maps
+    out_ref[0] = decode_block(
+        sym_ref[0].astype(U32), ofs_ref[0].astype(U32), stored_ref[0] != 0,
+        vmin_ref[...], ol_ref[...], cum_ref[...],
+        n_steps=n_steps, bits=bits)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_steps", "bits", "interpret"))
+def gather_decode_pallas(sym: jax.Array, ofs: jax.Array, stored: jax.Array,
+                         page_idx: jax.Array, v_min: jax.Array,
+                         ol: jax.Array, cum: jax.Array, *, n_steps: int,
+                         bits: int = 8, interpret: bool = True) -> jax.Array:
+    """Decode pages ``page_idx`` out of a pooled compressed-plane stack.
+
+    Args:
+      sym:      u32[P, Ws, S] pooled symbol planes (word-interleaved).
+      ofs:      u32[P, Wo, S] pooled offset planes.
+      stored:   bool/i32[P, S] per-stream verbatim-mode flags.
+      page_idx: i32[G] page ids to decode (duplicates allowed — callers pad
+                to a jit bucket by repeating a valid id).
+      v_min/ol/cum: table arrays of the (single) activation-mode table all
+                selected pages were encoded with.
+      n_steps:  values per stream (E).
+
+    Returns: i32[G, S, n_steps] decoded unsigned values, gather order.
+    """
+    p, ws, s = sym.shape
+    wo = ofs.shape[1]
+    g = page_idx.shape[0]
+    kernel = functools.partial(_gather_decode_kernel, n_steps=n_steps,
+                               bits=bits)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, ws, s), lambda i, idx: (idx[i], 0, 0)),
+            pl.BlockSpec((1, wo, s), lambda i, idx: (idx[i], 0, 0)),
+            pl.BlockSpec((1, s), lambda i, idx: (idx[i], 0)),
+            pl.BlockSpec((17,), lambda i, idx: (0,)),
+            pl.BlockSpec((16,), lambda i, idx: (0,)),
+            pl.BlockSpec((17,), lambda i, idx: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, s, n_steps), lambda i, idx: (i, 0, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((g, s, n_steps), I32),
+        interpret=interpret,
+    )(page_idx.astype(I32), sym.astype(U32), ofs.astype(U32),
+      stored.astype(I32), v_min.astype(I32), ol.astype(I32), cum.astype(I32))
+
+
+@functools.partial(jax.jit, static_argnames=("n_steps", "bits"))
+def gather_decode_ref(sym: jax.Array, ofs: jax.Array, stored: jax.Array,
+                      page_idx: jax.Array, v_min: jax.Array, ol: jax.Array,
+                      cum: jax.Array, *, n_steps: int,
+                      bits: int = 8) -> jax.Array:
+    """jnp reference for ``gather_decode_pallas`` (bit-identical)."""
+    table = _ref.TableArrays(v_min.astype(I32), ol.astype(I32),
+                             cum.astype(I32))
+    sym_g = jnp.take(sym.astype(U32), page_idx, axis=0)
+    ofs_g = jnp.take(ofs.astype(U32), page_idx, axis=0)
+    st_g = jnp.take(stored.astype(bool), page_idx, axis=0)
+    return jax.vmap(
+        lambda sp, op, st: _ref.decode(sp, op, st, table, n_steps, bits)
+    )(sym_g, ofs_g, st_g)
+
+
+def gather_decode(sym, ofs, stored, page_idx, v_min, ol, cum, *,
+                  n_steps: int, bits: int = 8,
+                  backend: str | None = None) -> jax.Array:
+    """Backend dispatch, shared with ``ops``: pallas on TPU,
+    pallas-interpret on CPU, ``backend="ref"`` for the pure-jnp path."""
+    if backend is None:
+        from .ops import _default_backend
+        backend = _default_backend()
+    if backend == "ref":
+        return gather_decode_ref(sym, ofs, stored, page_idx, v_min, ol, cum,
+                                 n_steps=n_steps, bits=bits)
+    return gather_decode_pallas(sym, ofs, stored, page_idx, v_min, ol, cum,
+                                n_steps=n_steps, bits=bits,
+                                interpret=(backend == "pallas_interpret"))

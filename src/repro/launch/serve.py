@@ -1,11 +1,13 @@
-"""Serving driver: batched requests against APack-compressed weights.
+"""Serving driver: batched requests against APack-compressed weights and
+(optionally) a paged APack-compressed KV cache.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
-        --requests 16 --prompt-len 32 --max-new 16
+        --requests 16 --prompt-len 32 --max-new 16 --kv apack-int8
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -25,10 +27,16 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--no-compress", action="store_true")
+    ap.add_argument("--kv", default=None,
+                    choices=["bfloat16", "int8", "apack-int8"],
+                    help="KV-cache mode (apack-int8 = paged + compressed)")
+    ap.add_argument("--kv-page-size", type=int, default=16)
     args = ap.parse_args()
 
     cfg = (configs.get_smoke_config(args.arch) if args.smoke
            else configs.get_config(args.arch))
+    if args.kv:
+        cfg = dataclasses.replace(cfg, kv_cache_dtype=args.kv)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     if not args.no_compress:
         t0 = time.time()
@@ -39,7 +47,8 @@ def main() -> None:
         params = decompress_params(cp)
 
     engine = ServeEngine(cfg, params, max_batch=args.max_batch,
-                         max_len=args.prompt_len + args.max_new + 8)
+                         max_len=args.prompt_len + args.max_new + 8,
+                         kv_page_size=args.kv_page_size)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab_size,
@@ -54,6 +63,14 @@ def main() -> None:
     assert all(r.done for r in reqs)
     print(f"{engine.stats} in {dt:.1f}s "
           f"({engine.stats['generated']/max(dt,1e-9):.1f} tok/s)")
+    if engine.paged:
+        ks = engine.kv_stats()
+        print(f"paged KV traffic: raw={ks['kv_raw_bytes']/1e3:.1f} kB -> "
+              f"read={ks['kv_read_bytes']/1e3:.1f} kB "
+              f"(+{ks['kv_table_bytes']} B tables) "
+              f"ratio={ks['kv_ratio']:.3f} "
+              f"packed_pages={ks['kv_pages_packed']} "
+              f"pool={ks['kv_pages_high_water']}/{ks['kv_pool_pages']} pages")
     print("sample output:", reqs[0].tokens[:16])
 
 

@@ -63,12 +63,20 @@ class ModelConfig:
 
     # numerics
     param_dtype: str = "float32"          # float32 | bfloat16
-    kv_cache_dtype: str = "bfloat16"      # bfloat16 | int8 (per-head scales)
+    # bfloat16 | int8 (per-token-head scales) | apack-int8 (int8 compute
+    # view + paged APack-compressed off-chip storage, serve-layer only)
+    kv_cache_dtype: str = "bfloat16"
     norm_eps: float = 1e-6
 
     @property
     def is_encoder(self) -> bool:
         return self.family == "encoder"
+
+    @property
+    def kv_int8(self) -> bool:
+        """int8 KV compute path (both the raw and the APack-paged modes —
+        the compressed storage layer is transparent to the block math)."""
+        return self.kv_cache_dtype in ("int8", "apack-int8")
 
     @property
     def cycle(self) -> tuple[str, ...]:

@@ -14,12 +14,36 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import modules as m
 from . import sharding as shd
 from .config import ModelConfig
 
 F32 = jnp.float32
+
+
+@jax.custom_vjp
+def _residual_barrier(h: jax.Array) -> jax.Array:
+    """``optimization_barrier`` with a defined gradient (identity).
+
+    ``lax.optimization_barrier`` has no differentiation rule, so the bare
+    primitive breaks every ``jax.grad`` trace through the train scan.  The
+    custom_vjp hides it from autodiff while keeping the barrier in both the
+    forward and backward HLO (the backward residual stack has the same
+    bf16->f32 hoisting hazard the forward one does)."""
+    return jax.lax.optimization_barrier(h)
+
+
+def _residual_barrier_fwd(h):
+    return jax.lax.optimization_barrier(h), None
+
+
+def _residual_barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+_residual_barrier.defvjp(_residual_barrier_fwd, _residual_barrier_bwd)
 
 
 # ------------------------------------------------------------------- init
@@ -186,7 +210,7 @@ def _scan_blocks(cfg: ModelConfig, params: dict, h: jax.Array, *,
         # barrier: stops XLA from hoisting the body's bf16->f32 convert out
         # of the loop, which would store the stacked per-layer residuals in
         # fp32 (measured 2x memory on the backward stack)
-        h = jax.lax.optimization_barrier(h)
+        h = _residual_barrier(h)
         h = shd.constrain(h, "residual")
         caches = []
         for i, kind in enumerate(cfg.cycle):
@@ -354,3 +378,280 @@ def prefill(cfg: ModelConfig, params: dict, batch: dict,
     if max_len is not None:
         caches = extend_caches(cfg, caches, max_len)
     return logits, caches
+
+
+# ------------------------------------------------------- paged APack KV
+class PagedKVCache:
+    """Paged, APack-compressed KV cache for ``kv_cache_dtype="apack-int8"``.
+
+    The off-chip store is a ``modules.KVPagePool`` shared by every
+    attention layer; each request owns a per-layer list of page ids (the
+    page table).  Token ``t`` of a sequence lives at page ``t // page_size``
+    offset ``t % page_size`` — the same absolute layout as the dense cache,
+    so ``materialize`` can rebuild the exact int8 cache pytree
+    ``decode_step`` consumes.
+
+    Compression policy (paper §VI activations): each layer × {K, V} gets
+    its own activation-mode table, calibrated *online* from the histogram
+    of the first ``calib_pages`` sealed pages of that layer — the
+    probability slack for empty ranges guarantees any later, unprofiled
+    value stays encodable (lossless).  Pages sealed before calibration
+    completes stay COLD (uncompressed int8, page-granular scales) and are
+    retro-packed the moment the table exists.  Reads of PACKED pages go
+    through the Pallas gather-decode kernel (``kernels/paged_decode.py``)
+    — compressed words are the only thing that crosses the "off-chip"
+    boundary, which is where the traffic saving in ``self.traffic``
+    comes from.
+    """
+
+    def __init__(self, cfg: ModelConfig, num_pages: int, *,
+                 page_size: int = 16, calib_pages: int = 4,
+                 elems_per_stream: int = 128, backend: str | None = None):
+        kinds = set(cfg.cycle)
+        if kinds != {"global"} or cfg.prefix_pattern:
+            raise NotImplementedError(
+                "paged apack-int8 KV supports prefix-free all-global-"
+                f"attention stacks; {cfg.name} has cycle={sorted(kinds)} "
+                f"prefix={cfg.prefix_pattern} (local/rolling and recurrent "
+                "states are fixed-size and stay dense; unscanned prefix "
+                "layers would need their own page tables)")
+        self.cfg = cfg
+        self.page_size = page_size
+        self.calib_pages = calib_pages
+        self.backend = backend
+        self.n_cycle = len(cfg.cycle)
+        self.n_stack = cfg.n_cycles
+        self.n_layers = self.n_cycle * self.n_stack
+        self.pool = m.KVPagePool(num_pages, page_size, cfg.num_kv_heads,
+                                 cfg.head_dim, elems_per_stream)
+        # per (layer, kind=K/V): activation-mode table + calibration state
+        self.tables: list[list] = [[None, None] for _ in range(self.n_layers)]
+        self.hists = np.zeros((self.n_layers, 2, 256), np.int64)
+        self.hist_pages = np.zeros((self.n_layers, 2), np.int32)
+        self._cold: list[set[int]] = [set() for _ in range(self.n_layers)]
+        self.page_tables: dict[int, list[list[int]]] = {}
+        self.seq_len: dict[int, int] = {}
+        self.traffic = {"kv_raw_bytes": 0, "kv_read_bytes": 0,
+                        "kv_table_bytes": 0, "kv_pages_packed": 0}
+
+    # ------------------------------------------------------------ sizing
+    def pages_per_seq(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def pages_needed(self, n_tokens: int) -> int:
+        """Pool pages a request storing ``n_tokens`` occupies (all layers)."""
+        return self.n_layers * self.pages_per_seq(n_tokens)
+
+    @property
+    def free_pages(self) -> int:
+        return self.pool.free_count
+
+    def kv_ratio(self) -> float:
+        """Cumulative compressed-vs-raw KV read traffic (< 1.0 is a win)."""
+        raw = self.traffic["kv_raw_bytes"]
+        read = self.traffic["kv_read_bytes"] + self.traffic["kv_table_bytes"]
+        return read / raw if raw else 1.0
+
+    # ----------------------------------------------------------- requests
+    def add_request(self, rid: int) -> None:
+        assert rid not in self.page_tables
+        self.page_tables[rid] = [[] for _ in range(self.n_layers)]
+        self.seq_len[rid] = 0
+
+    def release(self, rid: int) -> None:
+        for layer, pids in enumerate(self.page_tables.pop(rid)):
+            for pid in pids:
+                self._cold[layer].discard(pid)
+                self.pool.free(pid)
+        del self.seq_len[rid]
+
+    def append_token(self, rid: int, kq: np.ndarray, vq: np.ndarray,
+                     ks: np.ndarray, vs: np.ndarray) -> None:
+        """Append one token's KV for every layer.  kq/vq: [n_layers, H, dh]
+        int8; ks/vs: [n_layers, H] f32 (the model's per-token scales)."""
+        t = self.seq_len[rid]
+        new_page = t % self.page_size == 0
+        for layer in range(self.n_layers):
+            pids = self.page_tables[rid][layer]
+            if new_page:
+                pid = self.pool.alloc()
+                assert pid is not None, \
+                    "page pool exhausted mid-flight (admission must reserve)"
+                pids.append(pid)
+            pid = pids[-1]
+            self.pool.write_token(pid, kq[layer], vq[layer],
+                                  ks[layer], vs[layer])
+            if int(self.pool.fill[pid]) == self.page_size:
+                self._seal(layer, pid)
+        self.seq_len[rid] = t + 1
+
+    def _unstack(self, caches: dict, positions=None) -> dict[str, np.ndarray]:
+        """Fetch a dense int8 cache's leaves into network-layer order:
+        field -> [n_layers, B, (S,) ...] with layer = j*n_cycle + c.  This
+        is the single home of the stacked-cycle cache layout.  With
+        ``positions`` ([B] ints) the sequence axis is sliced to each
+        slot's position *on device* before the host fetch — one token per
+        slot instead of the whole [B, S] cache."""
+        out = {}
+        for f in ("k", "v", "k_scale", "v_scale"):
+            per_c = []
+            for c in range(self.n_cycle):
+                leaf = caches["blocks"][c][f]
+                if positions is not None:
+                    b = leaf.shape[1]
+                    leaf = leaf[:, jnp.arange(b),
+                                jnp.asarray(np.asarray(positions, np.int32))]
+                per_c.append(np.asarray(jax.device_get(leaf)))
+            out[f] = np.stack([per_c[c][j]
+                               for j in range(self.n_stack)
+                               for c in range(self.n_cycle)])
+        return out
+
+    def append_step_tokens(self, caches: dict, slot_rids: list,
+                           positions) -> None:
+        """Extract the token a decode step wrote at ``positions[slot]`` for
+        every active slot of a dense cache pytree and append it to the
+        paged store (the dense view is then discarded)."""
+        arrs = self._unstack(caches, positions=positions)
+        for slot, rid in enumerate(slot_rids):
+            if rid is None:
+                continue
+            self.append_token(rid, arrs["k"][:, slot], arrs["v"][:, slot],
+                              arrs["k_scale"][:, slot],
+                              arrs["v_scale"][:, slot])
+
+    def ingest_prefill(self, rid: int, caches: dict, s: int) -> None:
+        """Chop a (batch-1) prefill cache into pages, token order."""
+        arrs = self._unstack(caches)
+        for t in range(s):
+            self.append_token(rid, arrs["k"][:, 0, t], arrs["v"][:, 0, t],
+                              arrs["k_scale"][:, 0, t],
+                              arrs["v_scale"][:, 0, t])
+
+    # ------------------------------------------------- seal/calibrate/pack
+    def _seal(self, layer: int, pid: int) -> None:
+        """Full HOT page -> COLD: re-quantize to one scale per (page, head)
+        — scale amortization — then calibrate or pack."""
+        from repro.core import quant, tables as ctables
+        from repro.core.tables import TABLE_OVERHEAD_BITS
+        pool = self.pool
+        q2 = np.zeros((2, self.page_size, pool.kv_heads, pool.head_dim),
+                      np.int8)
+        scale2 = np.zeros((2, pool.kv_heads), np.float32)
+        for kind in (0, 1):
+            f = (pool.tok_q[kind, pid].astype(np.float32)
+                 * pool.tok_scale[kind, pid][..., None])
+            sc = np.maximum(np.abs(f).max(axis=(0, 2)), 1e-8) / 127.0
+            q2[kind] = np.clip(np.round(f / sc[None, :, None]),
+                               -127, 127).astype(np.int8)
+            scale2[kind] = sc
+        pool.seal(pid, q2, scale2)
+        self._cold[layer].add(pid)
+        if self.tables[layer][0] is not None:
+            self._pack(layer, pid)
+            return
+        for kind in (0, 1):
+            u = quant.to_unsigned(q2[kind]).reshape(-1)
+            self.hists[layer, kind] += np.bincount(u, minlength=256)
+            self.hist_pages[layer, kind] += 1
+        if int(self.hist_pages[layer, 0]) >= self.calib_pages:
+            for kind in (0, 1):
+                self.tables[layer][kind] = ctables.find_table(
+                    self.hists[layer, kind], bits=8, is_activation=True)
+            self.traffic["kv_table_bytes"] += 2 * TABLE_OVERHEAD_BITS // 8
+            for cold_pid in sorted(self._cold[layer]):
+                self._pack(layer, cold_pid)
+
+    def _pack(self, layer: int, pid: int) -> None:
+        """COLD -> PACKED: APack-encode both kinds with the layer's
+        activation tables into the pool's fixed-capacity planes."""
+        from repro.core import quant
+        from repro.kernels import ref as _codec
+        pool = self.pool
+        outs = []
+        for kind in (0, 1):
+            vals = quant.to_unsigned(pool.cold_q[kind, pid]).reshape(
+                pool.n_streams, pool.elems_per_stream)
+            ta = _codec.TableArrays.from_table(self.tables[layer][kind])
+            planes = _codec.encode(jnp.asarray(vals.astype(np.int32)), ta,
+                                   pool.elems_per_stream, 8)
+            outs.append(tuple(np.asarray(p) for p in planes))
+        pool.pack(pid, tuple(np.stack([o[i] for o in outs])
+                             for i in range(5)))
+        self._cold[layer].discard(pid)
+        self.traffic["kv_pages_packed"] += 1
+
+    # -------------------------------------------------------- materialize
+    def materialize(self, slot_rids: list, max_len: int) -> dict:
+        """Rebuild the dense int8 cache pytree for the active batch.
+
+        HOT/COLD pages copy straight from the pool; PACKED pages are
+        decoded in batched per-(layer, kind) Pallas gather-decode calls
+        (page-index vectors padded to a jit bucket).  Also accrues the
+        raw-vs-actual read-traffic counters."""
+        from repro.core import quant
+        from repro.kernels.paged_decode import gather_bucket, gather_decode
+        pool = self.pool
+        b = len(slot_rids)
+        h, dh, ps = pool.kv_heads, pool.head_dim, self.page_size
+        kvq = np.zeros((2, self.n_cycle, self.n_stack, b, max_len, h, dh),
+                       np.int8)
+        kvs = np.zeros((2, self.n_cycle, self.n_stack, b, max_len, h),
+                       np.float32)
+        jobs: dict[int, list] = {}
+        raw = read = 0
+        for slot, rid in enumerate(slot_rids):
+            if rid is None:
+                continue
+            for layer, pids in enumerate(self.page_tables[rid]):
+                c, j = layer % self.n_cycle, layer // self.n_cycle
+                for pno, pid in enumerate(pids):
+                    t0 = pno * ps
+                    state = pool.state[pid]
+                    n_tok = (int(pool.fill[pid]) if state == m.PAGE_HOT
+                             else ps)
+                    raw += pool.dense_bytes(n_tok)
+                    read += pool.page_bytes(pid)
+                    if state == m.PAGE_HOT:
+                        kvq[:, c, j, slot, t0:t0 + n_tok] = \
+                            pool.tok_q[:, pid, :n_tok]
+                        kvs[:, c, j, slot, t0:t0 + n_tok] = \
+                            pool.tok_scale[:, pid, :n_tok]
+                    elif state == m.PAGE_COLD:
+                        kvq[:, c, j, slot, t0:t0 + ps] = pool.cold_q[:, pid]
+                        kvs[:, c, j, slot, t0:t0 + ps] = \
+                            pool.page_scale[:, pid][:, None, :]
+                    else:
+                        jobs.setdefault(layer, []).append((pid, slot, t0))
+        if jobs:
+            # one pool upload per step, shared by every (layer, kind) call
+            # (device-resident planes are a ROADMAP item)
+            sym_dev = [jnp.asarray(pool.sym[kind]) for kind in (0, 1)]
+            ofs_dev = [jnp.asarray(pool.ofs[kind]) for kind in (0, 1)]
+            st_dev = [jnp.asarray(pool.stored[kind]) for kind in (0, 1)]
+        for layer, items in jobs.items():
+            c, j = layer % self.n_cycle, layer // self.n_cycle
+            idx = np.asarray([pid for pid, _, _ in items], np.int32)
+            g = gather_bucket(len(idx))
+            idx_p = np.pad(idx, (0, g - len(idx)), mode="edge")
+            for kind in (0, 1):
+                v_min, ol, cum = self.tables[layer][kind].as_arrays()
+                out = gather_decode(
+                    sym_dev[kind], ofs_dev[kind], st_dev[kind],
+                    jnp.asarray(idx_p),
+                    jnp.asarray(v_min), jnp.asarray(ol), jnp.asarray(cum),
+                    n_steps=pool.elems_per_stream, backend=self.backend)
+                vals = np.asarray(out)[:len(items)].astype(np.uint8)
+                q = quant.from_unsigned(vals).reshape(len(items), ps, h, dh)
+                for i, (pid, slot, t0) in enumerate(items):
+                    kvq[kind, c, j, slot, t0:t0 + ps] = q[i]
+                    kvs[kind, c, j, slot, t0:t0 + ps] = \
+                        pool.page_scale[kind, pid][None, :]
+        self.traffic["kv_raw_bytes"] += raw
+        self.traffic["kv_read_bytes"] += read
+        blocks = tuple(
+            {"k": jnp.asarray(kvq[0, c]), "v": jnp.asarray(kvq[1, c]),
+             "k_scale": jnp.asarray(kvs[0, c]),
+             "v_scale": jnp.asarray(kvs[1, c])}
+            for c in range(self.n_cycle))
+        return {"prefix": [], "blocks": blocks}

@@ -154,7 +154,7 @@ def attention_full(p: dict, x: jax.Array, cfg: ModelConfig, *,
         cache = {"k": kcache, "v": vcache}
     else:
         cache = {"k": k, "v": v}
-    if cfg.kv_cache_dtype == "int8":
+    if cfg.kv_int8:
         qk, sk = _kv_quantize(cache["k"])
         qv, sv = _kv_quantize(cache["v"])
         cache = {"k": qk, "v": qv, "k_scale": sk, "v_scale": sv}
@@ -223,7 +223,7 @@ def init_attention_cache(cfg: ModelConfig, batch: int, seq_len: int, *,
                          local: bool, dtype=BF16) -> dict:
     sc = min(cfg.window_size, seq_len) if local else seq_len
     shape = (batch, sc, cfg.num_kv_heads, cfg.head_dim)
-    if cfg.kv_cache_dtype == "int8":
+    if cfg.kv_int8:
         return {"k": jnp.zeros(shape, jnp.int8),
                 "v": jnp.zeros(shape, jnp.int8),
                 "k_scale": jnp.zeros(shape[:-1], F32),
@@ -631,3 +631,158 @@ def init_slstm_cache(cfg: ModelConfig, batch: int) -> dict:
     return {"c": jnp.zeros((batch, d), F32), "n": jnp.zeros((batch, d), F32),
             "m": jnp.full((batch, d), -1e30, F32),
             "h": jnp.zeros((batch, d), F32)}
+
+
+# ------------------------------------------------------------ KV page pool
+# Host-side model of the *off-chip* KV store for `kv_cache_dtype =
+# "apack-int8"` serving: fixed-size token pages in a block pool with
+# free-list allocation (the on-chip compute path still sees dense int8 —
+# `models/model.py::PagedKVCache` materializes it every attention read).
+#
+# Page lifecycle: FREE -> HOT (per-token int8 + per-token-head scales,
+# being appended) -> COLD (full; re-quantized to one scale per (page, head)
+# — the scale amortization is itself a ~20% footprint cut over the dense
+# int8 layout) -> PACKED (COLD payload APack-compressed with the layer's
+# activation-mode table into fixed-capacity word-interleaved planes, ready
+# for the Pallas gather-decode kernel).  Pages that fill before the layer's
+# table is calibrated stay COLD.
+
+PAGE_FREE, PAGE_HOT, PAGE_COLD, PAGE_PACKED = 0, 1, 2, 3
+
+
+class KVPagePool:
+    """Block pool of fixed-size KV token pages (storage + free list only;
+    tables/calibration/decode policy live in ``model.PagedKVCache``).
+
+    Kind axis: index 0 = K, 1 = V throughout."""
+
+    def __init__(self, num_pages: int, page_size: int, kv_heads: int,
+                 head_dim: int, elems_per_stream: int = 128):
+        from repro.kernels.ref import ofs_capacity_words, sym_capacity_words
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.kv_heads = kv_heads
+        self.head_dim = head_dim
+        L = page_size * kv_heads * head_dim     # values per page per kind
+        e = min(elems_per_stream, L)
+        while L % e:                            # largest divisor <= target
+            e -= 1
+        self.elems_per_stream = e
+        self.n_streams = L // e
+        self.sym_words = sym_capacity_words(e)
+        self.ofs_words = ofs_capacity_words(e, 8)
+        p, ps, h, dh, s = num_pages, page_size, kv_heads, head_dim, self.n_streams
+        # HOT storage: the per-token layout the model's int8 path emits
+        self.tok_q = np.zeros((2, p, ps, h, dh), np.int8)
+        self.tok_scale = np.zeros((2, p, ps, h), np.float32)
+        # COLD storage: page-granular scales
+        self.cold_q = np.zeros((2, p, ps, h, dh), np.int8)
+        self.page_scale = np.zeros((2, p, h), np.float32)
+        # PACKED storage: fixed-capacity APack planes, stackable for the
+        # paged gather-decode kernel
+        self.sym = np.zeros((2, p, self.sym_words, s), np.uint32)
+        self.ofs = np.zeros((2, p, self.ofs_words, s), np.uint32)
+        self.sym_bits = np.zeros((2, p, s), np.int32)
+        self.ofs_bits = np.zeros((2, p, s), np.int32)
+        self.stored = np.zeros((2, p, s), bool)
+        self.fill = np.zeros(p, np.int32)
+        self.state = np.full(p, PAGE_FREE, np.uint8)
+        self.free_list: list[int] = list(range(num_pages - 1, -1, -1))
+        self.alloc_count = 0                    # lifetime allocs (reuse proof)
+        self.high_water = 0                     # max pages in use at once
+
+    # ------------------------------------------------------------ free list
+    @property
+    def free_count(self) -> int:
+        return len(self.free_list)
+
+    def alloc(self) -> int | None:
+        if not self.free_list:
+            return None
+        pid = self.free_list.pop()
+        self.state[pid] = PAGE_HOT
+        self.fill[pid] = 0
+        self.alloc_count += 1
+        self.high_water = max(self.high_water,
+                              self.num_pages - len(self.free_list))
+        return pid
+
+    def free(self, pid: int) -> None:
+        assert self.state[pid] != PAGE_FREE, f"double free of page {pid}"
+        self.state[pid] = PAGE_FREE
+        self.fill[pid] = 0
+        # scrub so a stale read of a recycled page is loud, not subtle
+        self.tok_q[:, pid] = 0
+        self.tok_scale[:, pid] = 0
+        self.cold_q[:, pid] = 0
+        self.page_scale[:, pid] = 0
+        self.sym[:, pid] = 0
+        self.ofs[:, pid] = 0
+        self.sym_bits[:, pid] = 0
+        self.ofs_bits[:, pid] = 0
+        self.stored[:, pid] = False
+        self.free_list.append(pid)
+
+    # ------------------------------------------------------------- writes
+    def write_token(self, pid: int, kq: np.ndarray, vq: np.ndarray,
+                    ks: np.ndarray, vs: np.ndarray) -> int:
+        """Append one token's [H, dh] int8 K/V (+ [H] scales).  Returns the
+        in-page offset written."""
+        assert self.state[pid] == PAGE_HOT
+        off = int(self.fill[pid])
+        assert off < self.page_size, f"page {pid} overfull"
+        self.tok_q[0, pid, off] = kq
+        self.tok_q[1, pid, off] = vq
+        self.tok_scale[0, pid, off] = ks
+        self.tok_scale[1, pid, off] = vs
+        self.fill[pid] = off + 1
+        return off
+
+    def seal(self, pid: int, q2: np.ndarray, scale2: np.ndarray) -> None:
+        """HOT -> COLD: store the page-requantized payload (``q2``
+        [2, page_size, H, dh] int8, ``scale2`` [2, H] f32) and drop the
+        per-token copy."""
+        assert self.state[pid] == PAGE_HOT and self.fill[pid] == self.page_size
+        self.cold_q[:, pid] = q2
+        self.page_scale[:, pid] = scale2
+        self.tok_q[:, pid] = 0
+        self.tok_scale[:, pid] = 0
+        self.state[pid] = PAGE_COLD
+
+    def pack(self, pid: int, planes: tuple) -> None:
+        """COLD -> PACKED: store both kinds' compressed planes
+        (``planes`` = (sym[2,Ws,S], ofs[2,Wo,S], sym_bits[2,S],
+        ofs_bits[2,S], stored[2,S])) and scrub the raw payload so any read
+        that bypasses the decoder is visibly wrong."""
+        assert self.state[pid] == PAGE_COLD
+        sym, ofs, sb, ob, st = planes
+        self.sym[:, pid] = sym
+        self.ofs[:, pid] = ofs
+        self.sym_bits[:, pid] = sb
+        self.ofs_bits[:, pid] = ob
+        self.stored[:, pid] = st
+        self.cold_q[:, pid] = 0
+        self.state[pid] = PAGE_PACKED
+
+    # -------------------------------------------------------- accounting
+    def dense_bytes(self, n_tokens: int) -> int:
+        """What the dense int8 engine stores for ``n_tokens`` of one layer:
+        int8 K+V plus per-token-head f32 scales."""
+        h, dh = self.kv_heads, self.head_dim
+        return 2 * (n_tokens * h * dh + n_tokens * h * 4)
+
+    def page_bytes(self, pid: int) -> int:
+        """Actual off-chip footprint of a page in its current state."""
+        from repro.core.format import DIR_BITS_PER_STREAM
+        h, dh = self.kv_heads, self.head_dim
+        st = self.state[pid]
+        if st == PAGE_HOT:
+            return self.dense_bytes(int(self.fill[pid]))
+        if st == PAGE_COLD:
+            return 2 * (self.page_size * h * dh + h * 4)
+        if st == PAGE_PACKED:
+            payload = int(self.sym_bits[:, pid].sum()
+                          + self.ofs_bits[:, pid].sum())
+            directory = 2 * self.n_streams * DIR_BITS_PER_STREAM
+            return (payload + directory + 7) // 8 + 2 * h * 4
+        return 0

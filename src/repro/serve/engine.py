@@ -96,7 +96,9 @@ def decompress_params(cp: CompressedParams) -> Any:
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params: Any, *, max_batch: int = 8,
-                 max_len: int = 256, eos_id: int | None = None):
+                 max_len: int = 256, eos_id: int | None = None,
+                 kv_pages: int | None = None, kv_page_size: int = 16,
+                 kv_calib_pages: int = 4, kv_backend: str | None = None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -105,21 +107,58 @@ class ServeEngine:
         self.queue: deque[Request] = deque()
         self.active: list[Request | None] = [None] * max_batch
         self.positions = np.zeros(max_batch, np.int32)
-        self.cache = M.init_cache(cfg, max_batch, max_len)
         self.last_tokens = np.zeros((max_batch, 1), np.int32)
-        self.stats = {"steps": 0, "generated": 0, "completed": 0}
+        self.stats = {"steps": 0, "generated": 0, "completed": 0,
+                      "kv_admission_blocked": 0}
+        # paged, APack-compressed KV mode: the dense cache is re-materialized
+        # from the page pool every step; admission is keyed on free pages
+        self.paged = cfg.kv_cache_dtype == "apack-int8"
+        if self.paged:
+            n_layers = cfg.n_cycles * len(cfg.cycle)
+            if kv_pages is None:
+                # enough for every slot at full context (slot-equivalent)
+                kv_pages = max_batch * n_layers * (-(-max_len // kv_page_size))
+            self.kv = M.PagedKVCache(cfg, kv_pages, page_size=kv_page_size,
+                                     calib_pages=kv_calib_pages,
+                                     backend=kv_backend)
+            self._reserved: dict[int, int] = {}
+            self._reserved_total = 0
+            self.cache = None
+        else:
+            self.kv = None
+            self.cache = M.init_cache(cfg, max_batch, max_len)
         self._decode = jax.jit(
             lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos))
         self._prefill_cache = {}
 
     # -------------------------------------------------------- scheduling
     def submit(self, req: Request) -> None:
+        if self.paged:
+            need = self._pages_for(req)
+            if need > self.kv.pool.num_pages:
+                # would head-of-line-block the queue forever otherwise
+                raise ValueError(
+                    f"request {req.rid} needs {need} pages worst-case but "
+                    f"the pool only has {self.kv.pool.num_pages}; shorten "
+                    "the request or grow kv_pages")
         req.t_submit = time.time()
         self.queue.append(req)
+
+    def _pages_for(self, req: Request) -> int:
+        """Worst-case page reservation: prompt + generated tokens, capped at
+        the context window (so ``append_token`` can never starve)."""
+        toks = min(self.max_len, len(req.prompt) + req.max_new_tokens)
+        return self.kv.pages_needed(toks)
 
     def _admit(self) -> None:
         for slot in range(self.max_batch):
             if self.active[slot] is None and self.queue:
+                if self.paged:
+                    need = self._pages_for(self.queue[0])
+                    if self._reserved_total + need > self.kv.pool.num_pages:
+                        # free slot but no pages: request waits (FIFO)
+                        self.stats["kv_admission_blocked"] += 1
+                        break
                 req = self.queue.popleft()
                 self._prefill_into_slot(slot, req)
 
@@ -134,6 +173,21 @@ class ServeEngine:
                                        last_only=True)[:2])
         logits, caches = self._prefill_cache[s](
             self.params, jnp.asarray(np.asarray(req.prompt)[None]))
+        if self.paged:
+            # chop the prefill cache into pages instead of a batch write
+            self.kv.add_request(req.rid)
+            self._reserved[req.rid] = self._pages_for(req)
+            self._reserved_total += self._reserved[req.rid]
+            self.kv.ingest_prefill(req.rid, caches, s)
+        else:
+            self._write_prefill_cache(slot, caches)
+        next_tok = int(jnp.argmax(logits[0, -1]))
+        req.tokens.append(next_tok)
+        self.active[slot] = req
+        self.positions[slot] = s
+        self.last_tokens[slot, 0] = next_tok
+
+    def _write_prefill_cache(self, slot: int, caches) -> None:
         # write this sequence's prefill cache into the batch cache at `slot`
         caches = M.extend_caches(self.cfg, caches, self.max_len)
 
@@ -152,11 +206,6 @@ class ServeEngine:
             return batch_leaf                          # scalar stats etc.
 
         self.cache = jax.tree.map(put, self.cache, caches)
-        next_tok = int(jnp.argmax(logits[0, -1]))
-        req.tokens.append(next_tok)
-        self.active[slot] = req
-        self.positions[slot] = s
-        self.last_tokens[slot, 0] = next_tok
 
     def _retire(self) -> None:
         for slot, req in enumerate(self.active):
@@ -171,6 +220,9 @@ class ServeEngine:
                 req.t_done = time.time()
                 self.stats["completed"] += 1
                 self.active[slot] = None
+                if self.paged:
+                    self.kv.release(req.rid)
+                    self._reserved_total -= self._reserved.pop(req.rid)
 
     # ------------------------------------------------------------- step
     def step(self) -> int:
@@ -182,10 +234,27 @@ class ServeEngine:
             return 0
         # per-slot positions: every sequence advances at its own offset
         # (attention_step takes a [B] position vector)
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          jnp.asarray(self.last_tokens),
-                                          jnp.asarray(self.positions))
+        if self.paged:
+            # attention read: rebuild the dense int8 cache from the page
+            # pool (compressed pages decode through the Pallas kernel)
+            self.cache = self.kv.materialize(
+                [r.rid if r is not None else None for r in self.active],
+                self.max_len)
+        logits, new_cache = self._decode(self.params, self.cache,
+                                         jnp.asarray(self.last_tokens),
+                                         jnp.asarray(self.positions))
         toks = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        if self.paged:
+            # the decode wrote each slot's quantized K/V at its position;
+            # extract into the paged store and drop the dense view (it is
+            # re-materialized from pages next step)
+            self.kv.append_step_tokens(
+                new_cache,
+                [r.rid if r is not None else None for r in self.active],
+                self.positions)
+            self.cache = None
+        else:
+            self.cache = new_cache
         for slot, req in enumerate(self.active):
             if req is None:
                 continue
@@ -200,3 +269,14 @@ class ServeEngine:
         for _ in range(max_steps):
             if self.step() == 0 and not self.queue:
                 break
+
+    def kv_stats(self) -> dict:
+        """Raw-vs-compressed KV traffic + pool occupancy (paged mode)."""
+        if not self.paged:
+            return {}
+        out = dict(self.kv.traffic)
+        out["kv_ratio"] = self.kv.kv_ratio()
+        out["kv_pool_pages"] = self.kv.pool.num_pages
+        out["kv_pages_allocated"] = self.kv.pool.alloc_count
+        out["kv_pages_high_water"] = self.kv.pool.high_water
+        return out
