@@ -72,7 +72,12 @@ def kv_cache_traffic(arch: str = "qwen3-1.7b", *, requests: int = 4,
                      prompt_len: int = 12, max_new: int = 6,
                      max_batch: int = 2, max_len: int = 32) -> dict:
     """Serve a smoke model with the paged APack KV cache and report the
-    measured decode-read traffic (compressed vs raw int8-KV bytes)."""
+    measured decode-read traffic (compressed vs raw int8-KV bytes),
+    accounted per stream kind (global KV / rolling KV / recurrent state).
+
+    ``arch="hetero-serve-smoke"`` runs the synthetic heterogeneous config
+    (global + rolling + recurrent cycle, recurrent prefix) whose window is
+    small enough that rolling-page eviction triggers within the run."""
     import jax
     from repro import configs
     from repro.models import model as M
@@ -111,10 +116,34 @@ def main(emit) -> None:
          f"act_geomean={s['apack_act_geomean']:.3f}x "
          f"weight_geomean={s['apack_weight_geomean']:.3f}x "
          f"wins={s['apack_wins']}")
-    kv = kv_cache_traffic()
-    emit(f"traffic/kv_cache/{kv['arch']}", kv["wall_s"] * 1e6 / max(kv["steps"], 1),
-         f"ratio={kv['kv_ratio']:.3f} raw={kv['kv_raw_bytes']}B "
-         f"read={kv['kv_read_bytes']}B tables={kv['kv_table_bytes']}B "
-         f"packed_pages={kv['kv_pages_packed']} "
-         f"high_water={kv['kv_pages_high_water']}",
-         value=kv["kv_ratio"])
+    for arch, kw in (("qwen3-1.7b", {}),
+                     ("hetero-serve-smoke",
+                      dict(max_len=40, max_new=16, requests=3))):
+        kv = kv_cache_traffic(arch, **kw)
+        if kv["kv_ratio"] is None:
+            # no KV read traffic: emit the row WITHOUT a value so the CI
+            # ratio gate skips it instead of vacuously passing on 1.0
+            emit(f"traffic/kv_cache/{kv['arch']}", 0.0,
+                 "no KV reads (ratio n/a)")
+            continue
+        emit(f"traffic/kv_cache/{kv['arch']}",
+             kv["wall_s"] * 1e6 / max(kv["steps"], 1),
+             f"ratio={kv['kv_ratio']:.3f} raw={kv['kv_raw_bytes']}B "
+             f"read={kv['kv_read_bytes']}B tables={kv['kv_table_bytes']}B "
+             f"packed_pages={kv['kv_pages_packed']} "
+             f"evicted_pages={kv['kv_pages_evicted']} "
+             f"high_water={kv['kv_pages_high_water']}",
+             value=kv["kv_ratio"])
+        for kind, st in kv["kv_streams"].items():
+            if st.get("ratio") is None:
+                continue
+            emit(f"traffic/kv_stream/{kv['arch']}/{kind}", 0.0,
+                 " ".join(f"{k}={v}" for k, v in st.items()
+                          if k != "ratio")
+                 + f" ratio={st['ratio']:.3f}",
+                 value=st["ratio"])
+        # structured eviction count (CI gates on this row's value, not on
+        # parsing the human-readable `derived` string above)
+        emit(f"traffic/kv_evicted/{kv['arch']}", 0.0,
+             "rolling pages freed during decode",
+             value=float(kv["kv_pages_evicted"]))

@@ -7,6 +7,10 @@ raw-vs-compressed KV traffic ratio).
     PYTHONPATH=src python examples/serve_compressed.py
     # raw-KV baseline for comparison:
     PYTHONPATH=src python examples/serve_compressed.py --kv int8
+    # heterogeneous stack (global + rolling + recurrent cycle): rolling
+    # layers evict whole pages as tokens leave the window, recurrent
+    # states stay dense on the hot path; per-stream ratios are printed
+    PYTHONPATH=src python examples/serve_compressed.py --hetero
 """
 import os
 import subprocess
@@ -18,10 +22,19 @@ REPO = Path(__file__).resolve().parent.parent
 if __name__ == "__main__":
     env = dict(os.environ)
     env["PYTHONPATH"] = str(REPO / "src")
-    args = ["--arch", "qwen3-1.7b", "--smoke", "--requests", "12",
-            "--prompt-len", "16", "--max-new", "12", "--max-batch", "4"]
-    if not any(a == "--kv" or a.startswith("--kv=") for a in sys.argv[1:]):
-        args += ["--kv", "apack-int8", "--kv-page-size", "8"]
+    argv = sys.argv[1:]
+    if "--hetero" in argv:
+        argv.remove("--hetero")
+        args = ["--arch", "hetero-serve-smoke", "--smoke", "--requests", "8",
+                "--prompt-len", "12", "--max-new", "16", "--max-batch", "4",
+                "--kv-page-size", "4"]
+    else:
+        args = ["--arch", "qwen3-1.7b", "--smoke", "--requests", "12",
+                "--prompt-len", "16", "--max-new", "12", "--max-batch", "4"]
+    if not any(a == "--kv" or a.startswith("--kv=") for a in argv):
+        args += ["--kv", "apack-int8"]
+        if "--kv-page-size" not in args:
+            args += ["--kv-page-size", "8"]
     raise SystemExit(subprocess.run(
-        [sys.executable, "-m", "repro.launch.serve"] + args + sys.argv[1:],
+        [sys.executable, "-m", "repro.launch.serve"] + args + argv,
         env=env).returncode)

@@ -30,12 +30,31 @@ def _module(name: str):
 
 
 def get_config(name: str):
+    if name == "hetero-serve-smoke":        # synthetic, smoke-sized only
+        return get_hetero_smoke_config()
     return _module(name).CONFIG
 
 
 def get_smoke_config(name: str):
+    if name == "hetero-serve-smoke":
+        return get_hetero_smoke_config()
     return _module(name).SMOKE
 
 
 def all_arch_ids() -> list[str]:
     return list(ALIASES)
+
+
+def get_hetero_smoke_config():
+    """Synthetic heterogeneous *serving* smoke: one cycle mixing global +
+    rolling-window + recurrent blocks plus a recurrent prefix layer, with
+    a window small enough that rolling-page eviction triggers within a few
+    dozen decode steps.  Exercises all three paged-KV stream kinds (global
+    pages, rolling pages, fixed-size recurrent state) in one stack —
+    shared by tests/test_paged_kv_hetero.py and the bench-smoke CI step."""
+    import dataclasses
+    base = get_smoke_config("qwen3-1.7b")
+    return dataclasses.replace(
+        base, name="hetero-serve-smoke", family="hybrid", num_layers=4,
+        block_pattern=("global", "local", "recurrent"),
+        prefix_pattern=("recurrent",), window_size=8, lru_width=64)

@@ -52,7 +52,18 @@ def _plane_entropy(plane: np.ndarray) -> float:
 
 def compress_float(x: np.ndarray,
                    elems_per_stream: int = fmt.DEFAULT_ELEMS_PER_STREAM,
-                   backend: str = "jnp") -> CompressedPlanes:
+                   backend: str = "jnp",
+                   table_mode: str = "activation") -> CompressedPlanes:
+    """``table_mode="activation"`` (default) profiles a bounded sample per
+    plane and keeps the §VI empty-range slack — right for large tensors
+    where profiling everything is too slow.  ``table_mode="weight"``
+    profiles the *full* plane and uses the paper's weight-mode heuristic
+    (no slack needed: every byte that will ever be encoded is in the
+    histogram) — right for small, fully-known tensors such as recurrent
+    decode-state snapshots."""
+    if table_mode not in ("activation", "weight"):
+        raise ValueError(f"table_mode must be activation|weight, "
+                         f"got {table_mode!r}")
     arr = np.asarray(x)
     comp, _ = _codec(backend)
     raw = arr.view(np.uint8).reshape(arr.size, arr.dtype.itemsize)
@@ -63,8 +74,11 @@ def compress_float(x: np.ndarray,
             # near-uniform (mantissa) plane: skip the coder, store verbatim
             planes.append(_stored_plane(plane, elems_per_stream))
             continue
-        # profile on a bounded sample; stealing keeps unseen bytes encodable
-        table = table_for(plane[:2 ** 20], bits=8, is_activation=True)
+        if table_mode == "weight":
+            table = table_for(plane, bits=8, is_activation=False)
+        else:
+            # bounded sample; stealing keeps unseen bytes encodable
+            table = table_for(plane[:2 ** 20], bits=8, is_activation=True)
         planes.append(comp(plane, table, bits=8,
                            elems_per_stream=elems_per_stream))
     return CompressedPlanes(shape=tuple(arr.shape), dtype=str(arr.dtype),

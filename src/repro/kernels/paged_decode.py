@@ -11,8 +11,12 @@ This kernel is that read path: a scalar-prefetched page-index vector drives
 the BlockSpec index_map, so grid program ``g`` DMAs exactly page
 ``page_idx[g]``'s compressed words HBM->VMEM and decodes it with the shared
 ``decode_block`` body (one stream per lane, ``fori_loop`` over symbols).
-Off-chip traffic is the *compressed* footprint — the paper's Figure-1
-saving applied to KV-cache decode reads instead of weight reads.
+A *second* scalar-prefetch vector carries a per-page table id into the
+table-array BlockSpecs: pages encoded with different (layer, K/V) tables
+batch into ONE kernel launch — the engine issues two calls per step (one
+per K/V kind) instead of two per layer.  Off-chip traffic is the
+*compressed* footprint — the paper's Figure-1 saving applied to KV-cache
+decode reads instead of weight reads.
 
 Interpret mode is bit-exact with ``fastpath.decompress_np`` per page
 (tests/test_paged_kv.py); on TPU the same kernel compiles with the pages
@@ -46,13 +50,27 @@ def gather_bucket(n: int) -> int:
     return -(-n // GATHER_BUCKETS[-1]) * GATHER_BUCKETS[-1]
 
 
-def _gather_decode_kernel(idx_ref, sym_ref, ofs_ref, stored_ref, vmin_ref,
-                          ol_ref, cum_ref, out_ref, *, n_steps: int,
+def _as_table_stack(v_min, ol, cum, page_idx, table_idx):
+    """Canonicalize table arrays to stacked [T, ...] form + per-page ids.
+
+    1-D tables (the single-table call signature) become a one-row stack
+    with every page pointing at row 0."""
+    v_min = jnp.asarray(v_min)
+    if v_min.ndim == 1:
+        v_min, ol, cum = (v_min[None], jnp.asarray(ol)[None],
+                          jnp.asarray(cum)[None])
+    if table_idx is None:
+        table_idx = jnp.zeros(page_idx.shape, I32)
+    return v_min, jnp.asarray(ol), jnp.asarray(cum), table_idx
+
+
+def _gather_decode_kernel(idx_ref, tid_ref, sym_ref, ofs_ref, stored_ref,
+                          vmin_ref, ol_ref, cum_ref, out_ref, *, n_steps: int,
                           bits: int):
-    del idx_ref                     # consumed by the BlockSpec index_maps
+    del idx_ref, tid_ref            # consumed by the BlockSpec index_maps
     out_ref[0] = decode_block(
         sym_ref[0].astype(U32), ofs_ref[0].astype(U32), stored_ref[0] != 0,
-        vmin_ref[...], ol_ref[...], cum_ref[...],
+        vmin_ref[0], ol_ref[0], cum_ref[0],
         n_steps=n_steps, bits=bits)
 
 
@@ -61,7 +79,8 @@ def _gather_decode_kernel(idx_ref, sym_ref, ofs_ref, stored_ref, vmin_ref,
 def gather_decode_pallas(sym: jax.Array, ofs: jax.Array, stored: jax.Array,
                          page_idx: jax.Array, v_min: jax.Array,
                          ol: jax.Array, cum: jax.Array, *, n_steps: int,
-                         bits: int = 8, interpret: bool = True) -> jax.Array:
+                         bits: int = 8, interpret: bool = True,
+                         table_idx: jax.Array | None = None) -> jax.Array:
     """Decode pages ``page_idx`` out of a pooled compressed-plane stack.
 
     Args:
@@ -70,8 +89,11 @@ def gather_decode_pallas(sym: jax.Array, ofs: jax.Array, stored: jax.Array,
       stored:   bool/i32[P, S] per-stream verbatim-mode flags.
       page_idx: i32[G] page ids to decode (duplicates allowed — callers pad
                 to a jit bucket by repeating a valid id).
-      v_min/ol/cum: table arrays of the (single) activation-mode table all
-                selected pages were encoded with.
+      v_min/ol/cum: table arrays — either a single table ([17]/[16]/[17])
+                or a stack ([T, 17]/[T, 16]/[T, 17]) indexed per page by
+                ``table_idx``.
+      table_idx: i32[G] table-stack row for each gathered page (None with
+                1-D tables: every page uses the single table).
       n_steps:  values per stream (E).
 
     Returns: i32[G, S, n_steps] decoded unsigned values, gather order.
@@ -79,49 +101,56 @@ def gather_decode_pallas(sym: jax.Array, ofs: jax.Array, stored: jax.Array,
     p, ws, s = sym.shape
     wo = ofs.shape[1]
     g = page_idx.shape[0]
+    v_min, ol, cum, table_idx = _as_table_stack(v_min, ol, cum, page_idx,
+                                                table_idx)
     kernel = functools.partial(_gather_decode_kernel, n_steps=n_steps,
                                bits=bits)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(g,),
         in_specs=[
-            pl.BlockSpec((1, ws, s), lambda i, idx: (idx[i], 0, 0)),
-            pl.BlockSpec((1, wo, s), lambda i, idx: (idx[i], 0, 0)),
-            pl.BlockSpec((1, s), lambda i, idx: (idx[i], 0)),
-            pl.BlockSpec((17,), lambda i, idx: (0,)),
-            pl.BlockSpec((16,), lambda i, idx: (0,)),
-            pl.BlockSpec((17,), lambda i, idx: (0,)),
+            pl.BlockSpec((1, ws, s), lambda i, idx, tid: (idx[i], 0, 0)),
+            pl.BlockSpec((1, wo, s), lambda i, idx, tid: (idx[i], 0, 0)),
+            pl.BlockSpec((1, s), lambda i, idx, tid: (idx[i], 0)),
+            pl.BlockSpec((1, 17), lambda i, idx, tid: (tid[i], 0)),
+            pl.BlockSpec((1, 16), lambda i, idx, tid: (tid[i], 0)),
+            pl.BlockSpec((1, 17), lambda i, idx, tid: (tid[i], 0)),
         ],
-        out_specs=pl.BlockSpec((1, s, n_steps), lambda i, idx: (i, 0, 0)),
+        out_specs=pl.BlockSpec((1, s, n_steps), lambda i, idx, tid: (i, 0, 0)),
     )
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((g, s, n_steps), I32),
         interpret=interpret,
-    )(page_idx.astype(I32), sym.astype(U32), ofs.astype(U32),
-      stored.astype(I32), v_min.astype(I32), ol.astype(I32), cum.astype(I32))
+    )(page_idx.astype(I32), table_idx.astype(I32), sym.astype(U32),
+      ofs.astype(U32), stored.astype(I32), v_min.astype(I32), ol.astype(I32),
+      cum.astype(I32))
 
 
 @functools.partial(jax.jit, static_argnames=("n_steps", "bits"))
 def gather_decode_ref(sym: jax.Array, ofs: jax.Array, stored: jax.Array,
                       page_idx: jax.Array, v_min: jax.Array, ol: jax.Array,
-                      cum: jax.Array, *, n_steps: int,
-                      bits: int = 8) -> jax.Array:
+                      cum: jax.Array, *, n_steps: int, bits: int = 8,
+                      table_idx: jax.Array | None = None) -> jax.Array:
     """jnp reference for ``gather_decode_pallas`` (bit-identical)."""
-    table = _ref.TableArrays(v_min.astype(I32), ol.astype(I32),
-                             cum.astype(I32))
+    v_min, ol, cum, table_idx = _as_table_stack(v_min, ol, cum, page_idx,
+                                                table_idx)
     sym_g = jnp.take(sym.astype(U32), page_idx, axis=0)
     ofs_g = jnp.take(ofs.astype(U32), page_idx, axis=0)
     st_g = jnp.take(stored.astype(bool), page_idx, axis=0)
+    vm_g = jnp.take(v_min.astype(I32), table_idx, axis=0)
+    ol_g = jnp.take(ol.astype(I32), table_idx, axis=0)
+    cum_g = jnp.take(cum.astype(I32), table_idx, axis=0)
     return jax.vmap(
-        lambda sp, op, st: _ref.decode(sp, op, st, table, n_steps, bits)
-    )(sym_g, ofs_g, st_g)
+        lambda sp, op, st, vm, olr, cm: _ref.decode(
+            sp, op, st, _ref.TableArrays(vm, olr, cm), n_steps, bits)
+    )(sym_g, ofs_g, st_g, vm_g, ol_g, cum_g)
 
 
 def gather_decode(sym, ofs, stored, page_idx, v_min, ol, cum, *,
-                  n_steps: int, bits: int = 8,
-                  backend: str | None = None) -> jax.Array:
+                  n_steps: int, bits: int = 8, backend: str | None = None,
+                  table_idx=None) -> jax.Array:
     """Backend dispatch, shared with ``ops``: pallas on TPU,
     pallas-interpret on CPU, ``backend="ref"`` for the pure-jnp path."""
     if backend is None:
@@ -129,7 +158,9 @@ def gather_decode(sym, ofs, stored, page_idx, v_min, ol, cum, *,
         backend = _default_backend()
     if backend == "ref":
         return gather_decode_ref(sym, ofs, stored, page_idx, v_min, ol, cum,
-                                 n_steps=n_steps, bits=bits)
+                                 n_steps=n_steps, bits=bits,
+                                 table_idx=table_idx)
     return gather_decode_pallas(sym, ofs, stored, page_idx, v_min, ol, cum,
                                 n_steps=n_steps, bits=bits,
-                                interpret=(backend == "pallas_interpret"))
+                                interpret=(backend == "pallas_interpret"),
+                                table_idx=table_idx)

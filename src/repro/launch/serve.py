@@ -31,12 +31,17 @@ def main() -> None:
                     choices=["bfloat16", "int8", "apack-int8"],
                     help="KV-cache mode (apack-int8 = paged + compressed)")
     ap.add_argument("--kv-page-size", type=int, default=16)
+    ap.add_argument("--window-size", type=int, default=None,
+                    help="override the rolling-attention window (small "
+                         "values demo page eviction on hybrid archs)")
     args = ap.parse_args()
 
     cfg = (configs.get_smoke_config(args.arch) if args.smoke
            else configs.get_config(args.arch))
     if args.kv:
         cfg = dataclasses.replace(cfg, kv_cache_dtype=args.kv)
+    if args.window_size is not None:
+        cfg = dataclasses.replace(cfg, window_size=args.window_size)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     if not args.no_compress:
         t0 = time.time()
@@ -65,12 +70,21 @@ def main() -> None:
           f"({engine.stats['generated']/max(dt,1e-9):.1f} tok/s)")
     if engine.paged:
         ks = engine.kv_stats()
+        ratio = ("n/a (no KV reads)" if ks["kv_ratio"] is None
+                 else f"{ks['kv_ratio']:.3f}")
         print(f"paged KV traffic: raw={ks['kv_raw_bytes']/1e3:.1f} kB -> "
               f"read={ks['kv_read_bytes']/1e3:.1f} kB "
               f"(+{ks['kv_table_bytes']} B tables) "
-              f"ratio={ks['kv_ratio']:.3f} "
+              f"ratio={ratio} "
               f"packed_pages={ks['kv_pages_packed']} "
+              f"evicted_pages={ks['kv_pages_evicted']} "
               f"pool={ks['kv_pages_high_water']}/{ks['kv_pool_pages']} pages")
+        for kind, st in ks["kv_streams"].items():
+            r = st.get("ratio")
+            print(f"  stream {kind:7s}: "
+                  + " ".join(f"{k}={v}" for k, v in st.items()
+                             if k != "ratio")
+                  + (f" ratio={r:.3f}" if r is not None else " ratio=n/a"))
     print("sample output:", reqs[0].tokens[:16])
 
 

@@ -381,47 +381,78 @@ def prefill(cfg: ModelConfig, params: dict, batch: dict,
 
 
 # ------------------------------------------------------- paged APack KV
+ATTN_KINDS = ("global", "local")
+STATE_KINDS = ("recurrent", "mlstm", "slstm")
+
+
+def _layer_kinds(cfg: ModelConfig) -> list[str]:
+    """Network-layer kind list: prefix layers first, then the scanned
+    stack in layer order ``n_prefix + j * n_cycle + c``."""
+    return list(cfg.prefix_pattern) + [
+        cfg.cycle[c] for j in range(cfg.n_cycles)
+        for c in range(len(cfg.cycle))]
+
+
 class PagedKVCache:
     """Paged, APack-compressed KV cache for ``kv_cache_dtype="apack-int8"``.
 
-    The off-chip store is a ``modules.KVPagePool`` shared by every
-    attention layer; each request owns a per-layer list of page ids (the
-    page table).  Token ``t`` of a sequence lives at page ``t // page_size``
-    offset ``t % page_size`` — the same absolute layout as the dense cache,
-    so ``materialize`` can rebuild the exact int8 cache pytree
-    ``decode_step`` consumes.
+    Supports heterogeneous stacks — any mix of ``global`` / ``local``
+    attention and ``recurrent`` / ``mlstm`` / ``slstm`` fixed-state layers,
+    scanned or prefix.  Three stream kinds:
 
-    Compression policy (paper §VI activations): each layer × {K, V} gets
-    its own activation-mode table, calibrated *online* from the histogram
-    of the first ``calib_pages`` sealed pages of that layer — the
-    probability slack for empty ranges guarantees any later, unprofiled
-    value stays encodable (lossless).  Pages sealed before calibration
-    completes stay COLD (uncompressed int8, page-granular scales) and are
-    retro-packed the moment the table exists.  Reads of PACKED pages go
-    through the Pallas gather-decode kernel (``kernels/paged_decode.py``)
-    — compressed words are the only thing that crosses the "off-chip"
-    boundary, which is where the traffic saving in ``self.traffic``
-    comes from.
+    * **global** attention layers: the off-chip store is a
+      ``modules.KVPagePool`` shared by every layer; each request owns a
+      per-layer list of page ids (the page table).  Token ``t`` of a
+      sequence lives at page ``t // page_size`` offset ``t % page_size`` —
+      the same absolute layout as the dense cache, so ``materialize`` can
+      rebuild the exact int8 cache pytree ``decode_step`` consumes.
+    * **local** (rolling-window) attention layers: same page layout, plus
+      page-granular eviction — once every token in the oldest page has
+      rolled out of the attention window the page returns to the free list
+      (``pool.evict``).  A rolling layer therefore holds at most
+      ``window_pages`` pages regardless of sequence length, and
+      ``materialize`` rebuilds the rolling *ring* layout (slot
+      ``pos % ring``) ``attention_step`` expects.
+    * **recurrent/mLSTM/sLSTM state** layers: fixed-size f32 states stay
+      dense on the hot path (stored per request, stitched into the
+      materialized pytree every step) and are APack-compressed losslessly
+      with weight-mode tables only at snapshot boundaries
+      (``snapshot_state`` / ``restore_state`` — the engine
+      checkpoint/preemption path).
+
+    Compression policy (paper §VI activations): each attention layer ×
+    {K, V} gets its own activation-mode table, calibrated *online* from
+    the histogram of the first ``calib_pages`` sealed pages of that layer
+    — the probability slack for empty ranges guarantees any later,
+    unprofiled value stays encodable (lossless).  Pages sealed before
+    calibration completes stay COLD (uncompressed int8, page-granular
+    scales) and are retro-packed the moment the table exists.  Reads of
+    PACKED pages go through the Pallas gather-decode kernel
+    (``kernels/paged_decode.py``), batched across *all* layers per K/V
+    kind via the per-page table-id prefetch vector — compressed words are
+    the only thing that crosses the "off-chip" boundary, which is where
+    the traffic saving in ``self.traffic`` comes from.
     """
 
     def __init__(self, cfg: ModelConfig, num_pages: int, *,
                  page_size: int = 16, calib_pages: int = 4,
                  elems_per_stream: int = 128, backend: str | None = None):
-        kinds = set(cfg.cycle)
-        if kinds != {"global"} or cfg.prefix_pattern:
-            raise NotImplementedError(
-                "paged apack-int8 KV supports prefix-free all-global-"
-                f"attention stacks; {cfg.name} has cycle={sorted(kinds)} "
-                f"prefix={cfg.prefix_pattern} (local/rolling and recurrent "
-                "states are fixed-size and stay dense; unscanned prefix "
-                "layers would need their own page tables)")
         self.cfg = cfg
         self.page_size = page_size
         self.calib_pages = calib_pages
         self.backend = backend
+        self.n_prefix = len(cfg.prefix_pattern)
         self.n_cycle = len(cfg.cycle)
         self.n_stack = cfg.n_cycles
-        self.n_layers = self.n_cycle * self.n_stack
+        self.layer_kinds = _layer_kinds(cfg)
+        self.n_layers = len(self.layer_kinds)
+        self.attn_layers = [i for i, k in enumerate(self.layer_kinds)
+                            if k in ATTN_KINDS]
+        self.local_layers = [i for i, k in enumerate(self.layer_kinds)
+                             if k == "local"]
+        self.state_layers = [i for i, k in enumerate(self.layer_kinds)
+                             if k in STATE_KINDS]
+        self.window = cfg.window_size
         self.pool = m.KVPagePool(num_pages, page_size, cfg.num_kv_heads,
                                  cfg.head_dim, elems_per_stream)
         # per (layer, kind=K/V): activation-mode table + calibration state
@@ -429,33 +460,91 @@ class PagedKVCache:
         self.hists = np.zeros((self.n_layers, 2, 256), np.int64)
         self.hist_pages = np.zeros((self.n_layers, 2), np.int32)
         self._cold: list[set[int]] = [set() for _ in range(self.n_layers)]
+        self._table_stack = None          # lazy [2*n_layers, ...] np stack
+        self._state_templates: dict[str, dict] = {}
         self.page_tables: dict[int, list[list[int]]] = {}
+        self.page_base: dict[int, list[int]] = {}   # evicted-page count
+        self.states: dict[int, dict[int, dict[str, np.ndarray]]] = {}
         self.seq_len: dict[int, int] = {}
         self.traffic = {"kv_raw_bytes": 0, "kv_read_bytes": 0,
-                        "kv_table_bytes": 0, "kv_pages_packed": 0}
+                        "kv_table_bytes": 0, "kv_pages_packed": 0,
+                        "kv_raw_bytes_global": 0, "kv_read_bytes_global": 0,
+                        "kv_raw_bytes_local": 0, "kv_read_bytes_local": 0,
+                        "state_raw_bytes": 0, "state_snapshot_bytes": 0,
+                        "state_snapshots": 0}
 
     # ------------------------------------------------------------ sizing
     def pages_per_seq(self, n_tokens: int) -> int:
         return -(-n_tokens // self.page_size)
 
+    @property
+    def window_pages(self) -> int:
+        """Max live pages of a rolling layer: the window can straddle one
+        more page boundary than ``ceil(window / page_size)`` covers."""
+        return -(-self.window // self.page_size) + 1
+
     def pages_needed(self, n_tokens: int) -> int:
-        """Pool pages a request storing ``n_tokens`` occupies (all layers)."""
-        return self.n_layers * self.pages_per_seq(n_tokens)
+        """Pool pages a request storing ``n_tokens`` occupies, summed over
+        layers with per-kind reservation: global layers hold the full
+        sequence, rolling layers at most ``window_pages``, recurrent-kind
+        layers none (their state is not paged)."""
+        return self.pages_for_config(self.cfg, n_tokens, self.page_size)
+
+    @staticmethod
+    def pages_for_config(cfg: ModelConfig, n_tokens: int,
+                         page_size: int) -> int:
+        """Worst-case per-request page count (shared with the engine's
+        pool sizing, so the default pool can be computed pre-construction)."""
+        full = -(-n_tokens // page_size)
+        rolling = min(full, -(-cfg.window_size // page_size) + 1)
+        total = 0
+        for kind in _layer_kinds(cfg):
+            if kind == "global":
+                total += full
+            elif kind == "local":
+                total += rolling
+        return total
 
     @property
     def free_pages(self) -> int:
         return self.pool.free_count
 
-    def kv_ratio(self) -> float:
-        """Cumulative compressed-vs-raw KV read traffic (< 1.0 is a win)."""
+    def kv_ratio(self) -> float | None:
+        """Cumulative compressed-vs-raw KV read traffic (< 1.0 is a win).
+
+        ``None`` before any read has moved a byte: reporting 1.0 there
+        would claim break-even for an engine that has not served anything
+        (and would hide table overhead already accrued)."""
         raw = self.traffic["kv_raw_bytes"]
-        read = self.traffic["kv_read_bytes"] + self.traffic["kv_table_bytes"]
-        return read / raw if raw else 1.0
+        if raw == 0:
+            return None
+        return (self.traffic["kv_read_bytes"]
+                + self.traffic["kv_table_bytes"]) / raw
+
+    def stream_stats(self) -> dict:
+        """Per-stream accounting: global KV reads, rolling/local KV reads,
+        recurrent-state snapshot bytes.  Stream ratios are payload-only
+        (table overhead is global, counted once in ``kv_ratio``)."""
+        out = {}
+        for kind in ("global", "local"):
+            raw = self.traffic[f"kv_raw_bytes_{kind}"]
+            read = self.traffic[f"kv_read_bytes_{kind}"]
+            out[kind] = {"raw_bytes": raw, "read_bytes": read,
+                         "ratio": (read / raw) if raw else None}
+        raw = self.traffic["state_raw_bytes"]
+        comp = self.traffic["state_snapshot_bytes"]
+        out["state"] = {"raw_bytes": raw, "snapshot_bytes": comp,
+                        "snapshots": self.traffic["state_snapshots"],
+                        "ratio": (comp / raw) if raw else None}
+        return out
 
     # ----------------------------------------------------------- requests
     def add_request(self, rid: int) -> None:
-        assert rid not in self.page_tables
+        if rid in self.page_tables:
+            raise ValueError(f"duplicate request id {rid}")
         self.page_tables[rid] = [[] for _ in range(self.n_layers)]
+        self.page_base[rid] = [0] * self.n_layers
+        self.states[rid] = {}
         self.seq_len[rid] = 0
 
     def release(self, rid: int) -> None:
@@ -463,70 +552,192 @@ class PagedKVCache:
             for pid in pids:
                 self._cold[layer].discard(pid)
                 self.pool.free(pid)
+        del self.page_base[rid]
+        del self.states[rid]
         del self.seq_len[rid]
+
+    # ------------------------------------------------------------ appends
+    def _append_layer_token(self, rid: int, layer: int, kq, vq, ks, vs,
+                            t: int) -> None:
+        pids = self.page_tables[rid][layer]
+        if t % self.page_size == 0:
+            if t // self.page_size != self.page_base[rid][layer] + len(pids):
+                raise RuntimeError(
+                    f"page-table desync for rid={rid} layer={layer}: token "
+                    f"{t} vs base={self.page_base[rid][layer]} "
+                    f"live={len(pids)}")
+            pid = self.pool.alloc()
+            if pid is None:
+                raise RuntimeError(
+                    "page pool exhausted mid-flight (admission must reserve)")
+            pids.append(pid)
+        pid = pids[-1]
+        self.pool.write_token(pid, kq, vq, ks, vs)
+        if int(self.pool.fill[pid]) == self.page_size:
+            self._seal(layer, pid)
 
     def append_token(self, rid: int, kq: np.ndarray, vq: np.ndarray,
                      ks: np.ndarray, vs: np.ndarray) -> None:
-        """Append one token's KV for every layer.  kq/vq: [n_layers, H, dh]
-        int8; ks/vs: [n_layers, H] f32 (the model's per-token scales)."""
+        """Append one token's KV for every attention layer.  kq/vq:
+        [n_layers, H, dh] int8; ks/vs: [n_layers, H] f32 (the model's
+        per-token scales).  Rows of recurrent-kind layers are ignored —
+        their state is not per-token (see ``append_step_tokens``)."""
         t = self.seq_len[rid]
-        new_page = t % self.page_size == 0
-        for layer in range(self.n_layers):
-            pids = self.page_tables[rid][layer]
-            if new_page:
-                pid = self.pool.alloc()
-                assert pid is not None, \
-                    "page pool exhausted mid-flight (admission must reserve)"
-                pids.append(pid)
-            pid = pids[-1]
-            self.pool.write_token(pid, kq[layer], vq[layer],
-                                  ks[layer], vs[layer])
-            if int(self.pool.fill[pid]) == self.page_size:
-                self._seal(layer, pid)
+        for layer in self.attn_layers:
+            self._append_layer_token(rid, layer, kq[layer], vq[layer],
+                                     ks[layer], vs[layer], t)
         self.seq_len[rid] = t + 1
+        self.evict_rolled(rid)
 
-    def _unstack(self, caches: dict, positions=None) -> dict[str, np.ndarray]:
-        """Fetch a dense int8 cache's leaves into network-layer order:
-        field -> [n_layers, B, (S,) ...] with layer = j*n_cycle + c.  This
-        is the single home of the stacked-cycle cache layout.  With
-        ``positions`` ([B] ints) the sequence axis is sliced to each
-        slot's position *on device* before the host fetch — one token per
-        slot instead of the whole [B, S] cache."""
-        out = {}
-        for f in ("k", "v", "k_scale", "v_scale"):
-            per_c = []
-            for c in range(self.n_cycle):
-                leaf = caches["blocks"][c][f]
-                if positions is not None:
-                    b = leaf.shape[1]
-                    leaf = leaf[:, jnp.arange(b),
-                                jnp.asarray(np.asarray(positions, np.int32))]
-                per_c.append(np.asarray(jax.device_get(leaf)))
-            out[f] = np.stack([per_c[c][j]
-                               for j in range(self.n_stack)
-                               for c in range(self.n_cycle)])
-        return out
+    def evict_rolled(self, rid: int) -> None:
+        """Rolling-window eviction: free every local-layer page whose
+        tokens have *all* left the attention window.  Page ``p`` holds
+        tokens ``[p*ps, (p+1)*ps)``; with the next decode position at
+        ``qpos = seq_len`` the attention mask keeps ``kpos > qpos -
+        window``, so the page is dead once ``(p+1)*ps - 1 <= qpos -
+        window``.  Only the oldest live page can die, and it is always
+        sealed (COLD/PACKED) because pages seal the moment they fill."""
+        qpos = self.seq_len[rid]
+        ps = self.page_size
+        for layer in self.local_layers:
+            pids = self.page_tables[rid][layer]
+            base = self.page_base[rid][layer]
+            while pids and (base + 1) * ps - 1 <= qpos - self.window:
+                pid = pids.pop(0)
+                self._cold[layer].discard(pid)
+                self.pool.evict(pid)
+                base += 1
+            self.page_base[rid][layer] = base
+
+    # --------------------------------------------------- cache plumbing
+    def _layer_cache(self, caches: dict, layer: int):
+        """(leaf-dict, stack-index) of one network layer in a cache pytree
+        — prefix leaves are [B, ...], scanned leaves [n_stack, B, ...]."""
+        if layer < self.n_prefix:
+            return caches["prefix"][layer], None
+        off = layer - self.n_prefix
+        return caches["blocks"][off % self.n_cycle], off // self.n_cycle
+
+    def _state_template(self, kind: str) -> dict[str, np.ndarray]:
+        """Init-value state leaves (batch dim stripped) for empty slots."""
+        if kind not in self._state_templates:
+            one = _init_block_cache(self.cfg, kind, 1, 1)
+            self._state_templates[kind] = {
+                f: np.asarray(jax.device_get(x))[0] for f, x in one.items()}
+        return self._state_templates[kind]
+
+    def _ring(self, max_len: int) -> int:
+        """Rolling-layer dense-cache width (matches init_attention_cache)."""
+        return min(self.window, max_len)
 
     def append_step_tokens(self, caches: dict, slot_rids: list,
                            positions) -> None:
-        """Extract the token a decode step wrote at ``positions[slot]`` for
-        every active slot of a dense cache pytree and append it to the
-        paged store (the dense view is then discarded)."""
-        arrs = self._unstack(caches, positions=positions)
+        """Extract what a decode step wrote for every active slot of a
+        dense cache pytree: the token at ``positions[slot]`` (ring slot
+        ``pos % ring`` for rolling layers) for attention layers, the whole
+        updated fixed-size state for recurrent-kind layers."""
+        b = len(slot_rids)
+        positions = np.asarray(positions, np.int32)
+        barange = jnp.arange(b)
+        fetched: dict[int, dict[str, np.ndarray]] = {}
+        done_groups = set()
+        for layer in range(self.n_layers):
+            kind = self.layer_kinds[layer]
+            leaf, j = self._layer_cache(caches, layer)
+            group = ("p", layer) if j is None else ("c",
+                                                    (layer - self.n_prefix)
+                                                    % self.n_cycle)
+            if group in done_groups:
+                continue
+            done_groups.add(group)
+            if kind in ATTN_KINDS:
+                sc = leaf["k"].shape[-3]
+                slot_idx = jnp.asarray(
+                    positions % sc if kind == "local" else positions)
+                vals = {}
+                for f in ("k", "v", "k_scale", "v_scale"):
+                    x = leaf[f]
+                    if j is None:
+                        vals[f] = np.asarray(
+                            jax.device_get(x[barange, slot_idx]))[None]
+                    else:
+                        vals[f] = np.asarray(
+                            jax.device_get(x[:, barange, slot_idx]))
+            else:
+                vals = {f: (np.asarray(jax.device_get(x))[None] if j is None
+                            else np.asarray(jax.device_get(x)))
+                        for f, x in leaf.items()}
+            # vals leaves are [n_stack(or 1), B, ...]; distribute to layers
+            if j is None:
+                fetched[layer] = {f: v[0] for f, v in vals.items()}
+            else:
+                c = (layer - self.n_prefix) % self.n_cycle
+                for jj in range(self.n_stack):
+                    fetched[self.n_prefix + jj * self.n_cycle + c] = {
+                        f: v[jj] for f, v in vals.items()}
+        h, dh = self.pool.kv_heads, self.pool.head_dim
         for slot, rid in enumerate(slot_rids):
             if rid is None:
                 continue
-            self.append_token(rid, arrs["k"][:, slot], arrs["v"][:, slot],
-                              arrs["k_scale"][:, slot],
-                              arrs["v_scale"][:, slot])
+            kq = np.zeros((self.n_layers, h, dh), np.int8)
+            vq = np.zeros((self.n_layers, h, dh), np.int8)
+            ks = np.zeros((self.n_layers, h), np.float32)
+            vs = np.zeros((self.n_layers, h), np.float32)
+            for layer in self.attn_layers:
+                kq[layer] = fetched[layer]["k"][slot]
+                vq[layer] = fetched[layer]["v"][slot]
+                ks[layer] = fetched[layer]["k_scale"][slot]
+                vs[layer] = fetched[layer]["v_scale"][slot]
+            self.append_token(rid, kq, vq, ks, vs)
+            for layer in self.state_layers:
+                self.states[rid][layer] = {
+                    f: v[slot].copy() for f, v in fetched[layer].items()}
 
     def ingest_prefill(self, rid: int, caches: dict, s: int) -> None:
-        """Chop a (batch-1) prefill cache into pages, token order."""
-        arrs = self._unstack(caches)
-        for t in range(s):
-            self.append_token(rid, arrs["k"][:, 0, t], arrs["v"][:, 0, t],
-                              arrs["k_scale"][:, 0, t],
-                              arrs["v_scale"][:, 0, t])
+        """Chop a (batch-1) prefill cache into pages, token order.
+
+        Global layers ingest every position.  Rolling layers only have
+        the last ``min(s, window)`` positions in the prefill cache (the
+        model emits the rolling ring, not the full sequence) — exactly
+        the live window: fully-dead leading pages are skipped outright
+        (``page_base`` starts past them) and in-page positions older than
+        the window ingest as zeros (dead by construction, never
+        materialized).  Recurrent-kind layers store their final state."""
+        ps = self.page_size
+        for layer in self.attn_layers:
+            kind = self.layer_kinds[layer]
+            leaf, j = self._layer_cache(caches, layer)
+
+            def one(f, leaf=leaf, j=j):
+                x = leaf[f] if j is None else leaf[f][j]
+                return np.asarray(jax.device_get(x))[0]
+
+            k, v = one("k"), one("v")                  # [S or window, H, dh]
+            ksc, vsc = one("k_scale"), one("v_scale")
+            if kind == "local":
+                w = k.shape[0]                         # ring width == window
+                start = (max(0, s - w) // ps) * ps
+                self.page_base[rid][layer] = start // ps
+            else:
+                w, start = None, 0
+            for t in range(start, s):
+                if kind == "local":
+                    if t < s - w:
+                        kq, vq = np.zeros_like(k[0]), np.zeros_like(v[0])
+                        kss, vss = np.zeros_like(ksc[0]), np.zeros_like(vsc[0])
+                    else:
+                        kq, vq = k[t % w], v[t % w]
+                        kss, vss = ksc[t % w], vsc[t % w]
+                else:
+                    kq, vq, kss, vss = k[t], v[t], ksc[t], vsc[t]
+                self._append_layer_token(rid, layer, kq, vq, kss, vss, t)
+        for layer in self.state_layers:
+            leaf, j = self._layer_cache(caches, layer)
+            self.states[rid][layer] = {
+                f: np.asarray(jax.device_get(x if j is None else x[j]))[0]
+                for f, x in leaf.items()}
+        self.seq_len[rid] = s
+        self.evict_rolled(rid)
 
     # ------------------------------------------------- seal/calibrate/pack
     def _seal(self, layer: int, pid: int) -> None:
@@ -558,6 +769,7 @@ class PagedKVCache:
             for kind in (0, 1):
                 self.tables[layer][kind] = ctables.find_table(
                     self.hists[layer, kind], bits=8, is_activation=True)
+            self._table_stack = None
             self.traffic["kv_table_bytes"] += 2 * TABLE_OVERHEAD_BITS // 8
             for cold_pid in sorted(self._cold[layer]):
                 self._pack(layer, cold_pid)
@@ -581,77 +793,208 @@ class PagedKVCache:
         self._cold[layer].discard(pid)
         self.traffic["kv_pages_packed"] += 1
 
+    def _tables_stacked(self):
+        """np table arrays stacked ``[2 * n_layers, ...]``, row
+        ``2*layer + kind`` — the per-page table-id space of the batched
+        gather-decode call.  Rebuilt lazily on calibration (tables are
+        immutable once created); uncalibrated rows stay zero and are never
+        referenced (PACKED requires a table)."""
+        if self._table_stack is None:
+            vm = np.zeros((2 * self.n_layers, 17), np.int32)
+            ol = np.zeros((2 * self.n_layers, 16), np.int32)
+            cm = np.zeros((2 * self.n_layers, 17), np.int32)
+            for layer in range(self.n_layers):
+                for kind in (0, 1):
+                    t = self.tables[layer][kind]
+                    if t is not None:
+                        a, b, c = t.as_arrays()
+                        row = 2 * layer + kind
+                        vm[row], ol[row], cm[row] = a, b, c
+            self._table_stack = (vm, ol, cm)
+        return self._table_stack
+
+    # ------------------------------------------------- state snapshots
+    def snapshot_state(self, rid: int) -> dict:
+        """Engine checkpoint/preemption path: APack-compress the request's
+        fixed-size recurrent/mLSTM/sLSTM states.  Bit-exact lossless — f32
+        byte planes through the coder with *weight-mode* tables (the full
+        state is profiled at snapshot time, so the §VI activation slack is
+        unnecessary; same heuristic choice as ``compress_params`` for
+        weights).  Attention KV needs no snapshotting: it already lives
+        compressed in the page pool."""
+        from repro.core import byteplane
+        manifest: list[tuple[int, str, tuple[int, ...]]] = []
+        parts: list[np.ndarray] = []
+        for layer in self.state_layers:
+            st = self.states[rid].get(layer)
+            if st is None:
+                raise RuntimeError(
+                    f"request {rid} has no state for layer {layer} "
+                    "(prefill not ingested?)")
+            for f in sorted(st):
+                arr = np.ascontiguousarray(st[f], np.float32)
+                manifest.append((layer, f, arr.shape))
+                parts.append(arr.reshape(-1))
+        if not parts:
+            return {"manifest": [], "planes": None}
+        # one stream per snapshot, not one per (field, plane): the 298-byte
+        # table overhead amortizes over the whole state, and every byte
+        # that will ever be encoded is in the histogram (weight mode)
+        flat = np.concatenate(parts)
+        planes = byteplane.compress_float(flat, table_mode="weight")
+        self.traffic["state_raw_bytes"] += flat.nbytes
+        self.traffic["state_snapshot_bytes"] += planes.total_bits // 8
+        self.traffic["state_snapshots"] += 1
+        return {"manifest": manifest, "planes": planes}
+
+    def restore_state(self, rid: int, snap: dict) -> None:
+        """Decompress a ``snapshot_state`` blob back into the request's
+        live state store (bit-exact: resumed decode == uninterrupted)."""
+        from repro.core import byteplane
+        if snap["planes"] is None:
+            return
+        flat = byteplane.decompress_float(snap["planes"])
+        off = 0
+        for layer, f, shape in snap["manifest"]:
+            n = int(np.prod(shape))
+            self.states[rid].setdefault(layer, {})[f] = \
+                flat[off:off + n].reshape(shape).copy()
+            off += n
+
     # -------------------------------------------------------- materialize
     def materialize(self, slot_rids: list, max_len: int) -> dict:
-        """Rebuild the dense int8 cache pytree for the active batch.
+        """Rebuild the dense cache pytree for the active batch.
 
-        HOT/COLD pages copy straight from the pool; PACKED pages are
-        decoded in batched per-(layer, kind) Pallas gather-decode calls
-        (page-index vectors padded to a jit bucket).  Also accrues the
-        raw-vs-actual read-traffic counters."""
+        Attention layers: HOT/COLD pages copy straight from the pool;
+        PACKED pages decode in ONE batched Pallas gather-decode call per
+        K/V kind (page-index + table-id vectors padded to a jit bucket),
+        spanning every layer.  Global layers land at absolute positions,
+        rolling layers in the ring slot ``pos % ring`` with dead positions
+        skipped.  Recurrent-kind layers stitch the stored per-request
+        states (init template for empty slots).  Also accrues the
+        per-stream raw-vs-actual read-traffic counters."""
         from repro.core import quant
         from repro.kernels.paged_decode import gather_bucket, gather_decode
         pool = self.pool
         b = len(slot_rids)
         h, dh, ps = pool.kv_heads, pool.head_dim, self.page_size
-        kvq = np.zeros((2, self.n_cycle, self.n_stack, b, max_len, h, dh),
-                       np.int8)
-        kvs = np.zeros((2, self.n_cycle, self.n_stack, b, max_len, h),
-                       np.float32)
-        jobs: dict[int, list] = {}
-        raw = read = 0
+
+        def span(kind):
+            return max_len if kind == "global" else self._ring(max_len)
+
+        kvq = {layer: np.zeros((2, b, span(self.layer_kinds[layer]), h, dh),
+                               np.int8) for layer in self.attn_layers}
+        kvs = {layer: np.zeros((2, b, span(self.layer_kinds[layer]), h),
+                               np.float32) for layer in self.attn_layers}
+
+        def place(layer, kind01, slot, t0, n_tok, q, sc, qpos):
+            """q: [n_tok, H, dh], sc: [n_tok, H] -> dense-cache layout."""
+            kind = self.layer_kinds[layer]
+            if kind == "global":
+                n_tok = min(n_tok, max_len - t0)
+                kvq[layer][kind01, slot, t0:t0 + n_tok] = q[:n_tok]
+                kvs[layer][kind01, slot, t0:t0 + n_tok] = sc[:n_tok]
+            else:
+                ring = kvq[layer].shape[2]
+                a = np.arange(t0, t0 + n_tok)
+                live = a >= qpos - ring
+                if live.any():
+                    kvq[layer][kind01, slot, a[live] % ring] = q[live]
+                    kvs[layer][kind01, slot, a[live] % ring] = sc[live]
+
+        jobs: list[tuple] = []           # (layer, pid, slot, t0, qpos)
+        raw = {"global": 0, "local": 0}
+        read = {"global": 0, "local": 0}
         for slot, rid in enumerate(slot_rids):
             if rid is None:
                 continue
-            for layer, pids in enumerate(self.page_tables[rid]):
-                c, j = layer % self.n_cycle, layer // self.n_cycle
-                for pno, pid in enumerate(pids):
-                    t0 = pno * ps
+            qpos = self.seq_len[rid]
+            for layer in self.attn_layers:
+                kind = self.layer_kinds[layer]
+                base = self.page_base[rid][layer]
+                for k_, pid in enumerate(self.page_tables[rid][layer]):
+                    t0 = (base + k_) * ps
                     state = pool.state[pid]
                     n_tok = (int(pool.fill[pid]) if state == m.PAGE_HOT
                              else ps)
-                    raw += pool.dense_bytes(n_tok)
-                    read += pool.page_bytes(pid)
-                    if state == m.PAGE_HOT:
-                        kvq[:, c, j, slot, t0:t0 + n_tok] = \
-                            pool.tok_q[:, pid, :n_tok]
-                        kvs[:, c, j, slot, t0:t0 + n_tok] = \
-                            pool.tok_scale[:, pid, :n_tok]
-                    elif state == m.PAGE_COLD:
-                        kvq[:, c, j, slot, t0:t0 + ps] = pool.cold_q[:, pid]
-                        kvs[:, c, j, slot, t0:t0 + ps] = \
-                            pool.page_scale[:, pid][:, None, :]
+                    if kind == "local":
+                        n_live = int(np.sum(np.arange(t0, t0 + n_tok)
+                                            >= qpos - self._ring(max_len)))
                     else:
-                        jobs.setdefault(layer, []).append((pid, slot, t0))
+                        n_live = n_tok
+                    raw[kind] += pool.dense_bytes(n_live)
+                    read[kind] += pool.page_bytes(pid)
+                    if state == m.PAGE_HOT:
+                        for kind01 in (0, 1):
+                            place(layer, kind01, slot, t0, n_tok,
+                                  pool.tok_q[kind01, pid, :n_tok],
+                                  pool.tok_scale[kind01, pid, :n_tok], qpos)
+                    elif state == m.PAGE_COLD:
+                        for kind01 in (0, 1):
+                            place(layer, kind01, slot, t0, ps,
+                                  pool.cold_q[kind01, pid],
+                                  np.broadcast_to(
+                                      pool.page_scale[kind01, pid][None],
+                                      (ps, h)), qpos)
+                    else:
+                        jobs.append((layer, pid, slot, t0, qpos))
         if jobs:
-            # one pool upload per step, shared by every (layer, kind) call
-            # (device-resident planes are a ROADMAP item)
-            sym_dev = [jnp.asarray(pool.sym[kind]) for kind in (0, 1)]
-            ofs_dev = [jnp.asarray(pool.ofs[kind]) for kind in (0, 1)]
-            st_dev = [jnp.asarray(pool.stored[kind]) for kind in (0, 1)]
-        for layer, items in jobs.items():
-            c, j = layer % self.n_cycle, layer // self.n_cycle
-            idx = np.asarray([pid for pid, _, _ in items], np.int32)
+            vm, ol, cm = self._tables_stacked()
+            idx = np.asarray([pid for _, pid, _, _, _ in jobs], np.int32)
             g = gather_bucket(len(idx))
-            idx_p = np.pad(idx, (0, g - len(idx)), mode="edge")
-            for kind in (0, 1):
-                v_min, ol, cum = self.tables[layer][kind].as_arrays()
+            pad = (0, g - len(idx))
+            idx_p = jnp.asarray(np.pad(idx, pad, mode="edge"))
+            for kind01 in (0, 1):
+                tid = np.asarray([2 * layer + kind01
+                                  for layer, *_ in jobs], np.int32)
                 out = gather_decode(
-                    sym_dev[kind], ofs_dev[kind], st_dev[kind],
-                    jnp.asarray(idx_p),
-                    jnp.asarray(v_min), jnp.asarray(ol), jnp.asarray(cum),
-                    n_steps=pool.elems_per_stream, backend=self.backend)
-                vals = np.asarray(out)[:len(items)].astype(np.uint8)
-                q = quant.from_unsigned(vals).reshape(len(items), ps, h, dh)
-                for i, (pid, slot, t0) in enumerate(items):
-                    kvq[kind, c, j, slot, t0:t0 + ps] = q[i]
-                    kvs[kind, c, j, slot, t0:t0 + ps] = \
-                        pool.page_scale[kind, pid][None, :]
-        self.traffic["kv_raw_bytes"] += raw
-        self.traffic["kv_read_bytes"] += read
-        blocks = tuple(
-            {"k": jnp.asarray(kvq[0, c]), "v": jnp.asarray(kvq[1, c]),
-             "k_scale": jnp.asarray(kvs[0, c]),
-             "v_scale": jnp.asarray(kvs[1, c])}
-            for c in range(self.n_cycle))
-        return {"prefix": [], "blocks": blocks}
+                    jnp.asarray(pool.sym[kind01]),
+                    jnp.asarray(pool.ofs[kind01]),
+                    jnp.asarray(pool.stored[kind01]), idx_p,
+                    jnp.asarray(vm), jnp.asarray(ol), jnp.asarray(cm),
+                    n_steps=pool.elems_per_stream, backend=self.backend,
+                    table_idx=jnp.asarray(np.pad(tid, pad, mode="edge")))
+                vals = np.asarray(out)[:len(jobs)].astype(np.uint8)
+                q = quant.from_unsigned(vals).reshape(len(jobs), ps, h, dh)
+                for i, (layer, pid, slot, t0, qpos) in enumerate(jobs):
+                    place(layer, kind01, slot, t0, ps, q[i],
+                          np.broadcast_to(pool.page_scale[kind01, pid][None],
+                                          (ps, h)), qpos)
+        for kind in ("global", "local"):
+            self.traffic[f"kv_raw_bytes_{kind}"] += raw[kind]
+            self.traffic[f"kv_read_bytes_{kind}"] += read[kind]
+        self.traffic["kv_raw_bytes"] += raw["global"] + raw["local"]
+        self.traffic["kv_read_bytes"] += read["global"] + read["local"]
+
+        def attn_leaves(layer):
+            return {"k": kvq[layer][0], "v": kvq[layer][1],
+                    "k_scale": kvs[layer][0], "v_scale": kvs[layer][1]}
+
+        def state_leaves(layer):
+            tmpl = self._state_template(self.layer_kinds[layer])
+            out = {}
+            for f, t0_ in tmpl.items():
+                rows = []
+                for rid in slot_rids:
+                    st = self.states[rid].get(layer) if rid is not None \
+                        else None
+                    rows.append(st[f] if st is not None else t0_)
+                out[f] = np.stack(rows)
+            return out
+
+        prefix = []
+        for i in range(self.n_prefix):
+            leaves = (attn_leaves(i) if self.layer_kinds[i] in ATTN_KINDS
+                      else state_leaves(i))
+            prefix.append({f: jnp.asarray(x) for f, x in leaves.items()})
+        blocks = []
+        for c in range(self.n_cycle):
+            layers = [self.n_prefix + j * self.n_cycle + c
+                      for j in range(self.n_stack)]
+            if self.cfg.cycle[c] in ATTN_KINDS:
+                per = [attn_leaves(l) for l in layers]
+            else:
+                per = [state_leaves(l) for l in layers]
+            blocks.append({f: jnp.asarray(np.stack([p[f] for p in per]))
+                           for f in per[0]})
+        return {"prefix": prefix, "blocks": tuple(blocks)}

@@ -645,9 +645,17 @@ def init_slstm_cache(cfg: ModelConfig, batch: int) -> dict:
 # int8 layout) -> PACKED (COLD payload APack-compressed with the layer's
 # activation-mode table into fixed-capacity word-interleaved planes, ready
 # for the Pallas gather-decode kernel).  Pages that fill before the layer's
-# table is calibrated stay COLD.
+# table is calibrated stay COLD.  Rolling-window (local-attention) layers
+# additionally take the COLD/PACKED -> FREE edge through ``evict`` once
+# every token in the page has rolled out of the attention window.
+#
+# Invariant violations raise ``ValueError``/``RuntimeError`` (never bare
+# ``assert``): a double free or an overfull page is data corruption, and
+# ``python -O`` strips asserts — the pool must stay loud under -O.
 
 PAGE_FREE, PAGE_HOT, PAGE_COLD, PAGE_PACKED = 0, 1, 2, 3
+PAGE_STATE_NAMES = {PAGE_FREE: "FREE", PAGE_HOT: "HOT",
+                    PAGE_COLD: "COLD", PAGE_PACKED: "PACKED"}
 
 
 class KVPagePool:
@@ -690,6 +698,12 @@ class KVPagePool:
         self.free_list: list[int] = list(range(num_pages - 1, -1, -1))
         self.alloc_count = 0                    # lifetime allocs (reuse proof)
         self.high_water = 0                     # max pages in use at once
+        self.evict_count = 0                    # rolling-window evictions
+
+    def _page_state(self, pid: int) -> str:
+        st = int(self.state[pid])
+        return (f"page {pid}: state={PAGE_STATE_NAMES.get(st, st)} "
+                f"fill={int(self.fill[pid])}/{self.page_size}")
 
     # ------------------------------------------------------------ free list
     @property
@@ -708,7 +722,8 @@ class KVPagePool:
         return pid
 
     def free(self, pid: int) -> None:
-        assert self.state[pid] != PAGE_FREE, f"double free of page {pid}"
+        if self.state[pid] == PAGE_FREE:
+            raise ValueError(f"double free of page ({self._page_state(pid)})")
         self.state[pid] = PAGE_FREE
         self.fill[pid] = 0
         # scrub so a stale read of a recycled page is loud, not subtle
@@ -723,14 +738,30 @@ class KVPagePool:
         self.stored[:, pid] = False
         self.free_list.append(pid)
 
+    def evict(self, pid: int) -> None:
+        """Rolling-window eviction hook: return a *sealed* page whose every
+        token has rolled out of its layer's attention window.  HOT pages
+        are never evictable — the newest tokens live there, and a policy
+        bug that tries is corruption, not cleanup."""
+        if self.state[pid] == PAGE_HOT:
+            raise RuntimeError(
+                f"evict of live HOT page ({self._page_state(pid)}); "
+                "rolling eviction may only free sealed COLD/PACKED pages")
+        self.free(pid)
+        self.evict_count += 1
+
     # ------------------------------------------------------------- writes
     def write_token(self, pid: int, kq: np.ndarray, vq: np.ndarray,
                     ks: np.ndarray, vs: np.ndarray) -> int:
         """Append one token's [H, dh] int8 K/V (+ [H] scales).  Returns the
         in-page offset written."""
-        assert self.state[pid] == PAGE_HOT
+        if self.state[pid] != PAGE_HOT:
+            raise ValueError(
+                f"write_token into non-HOT page ({self._page_state(pid)})")
         off = int(self.fill[pid])
-        assert off < self.page_size, f"page {pid} overfull"
+        if off >= self.page_size:
+            raise RuntimeError(
+                f"write_token into overfull page ({self._page_state(pid)})")
         self.tok_q[0, pid, off] = kq
         self.tok_q[1, pid, off] = vq
         self.tok_scale[0, pid, off] = ks
@@ -742,7 +773,9 @@ class KVPagePool:
         """HOT -> COLD: store the page-requantized payload (``q2``
         [2, page_size, H, dh] int8, ``scale2`` [2, H] f32) and drop the
         per-token copy."""
-        assert self.state[pid] == PAGE_HOT and self.fill[pid] == self.page_size
+        if self.state[pid] != PAGE_HOT or self.fill[pid] != self.page_size:
+            raise ValueError(
+                f"seal of non-full or non-HOT page ({self._page_state(pid)})")
         self.cold_q[:, pid] = q2
         self.page_scale[:, pid] = scale2
         self.tok_q[:, pid] = 0
@@ -754,7 +787,9 @@ class KVPagePool:
         (``planes`` = (sym[2,Ws,S], ofs[2,Wo,S], sym_bits[2,S],
         ofs_bits[2,S], stored[2,S])) and scrub the raw payload so any read
         that bypasses the decoder is visibly wrong."""
-        assert self.state[pid] == PAGE_COLD
+        if self.state[pid] != PAGE_COLD:
+            raise ValueError(
+                f"pack of non-COLD page ({self._page_state(pid)})")
         sym, ofs, sb, ob, st = planes
         self.sym[:, pid] = sym
         self.ofs[:, pid] = ofs

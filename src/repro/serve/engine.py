@@ -109,20 +109,26 @@ class ServeEngine:
         self.positions = np.zeros(max_batch, np.int32)
         self.last_tokens = np.zeros((max_batch, 1), np.int32)
         self.stats = {"steps": 0, "generated": 0, "completed": 0,
-                      "kv_admission_blocked": 0}
+                      "kv_admission_blocked": 0, "preempted": 0,
+                      "resumed": 0}
         # paged, APack-compressed KV mode: the dense cache is re-materialized
         # from the page pool every step; admission is keyed on free pages
         self.paged = cfg.kv_cache_dtype == "apack-int8"
         if self.paged:
-            n_layers = cfg.n_cycles * len(cfg.cycle)
             if kv_pages is None:
-                # enough for every slot at full context (slot-equivalent)
-                kv_pages = max_batch * n_layers * (-(-max_len // kv_page_size))
+                # enough for every slot at full context (slot-equivalent),
+                # per layer kind: rolling layers cap at their window pages,
+                # recurrent-kind layers take none
+                kv_pages = max_batch * M.PagedKVCache.pages_for_config(
+                    cfg, max_len, kv_page_size)
             self.kv = M.PagedKVCache(cfg, kv_pages, page_size=kv_page_size,
                                      calib_pages=kv_calib_pages,
                                      backend=kv_backend)
             self._reserved: dict[int, int] = {}
             self._reserved_total = 0
+            # rid -> (compressed state snapshot, position, last token):
+            # preempted requests resume without re-prefill
+            self._preempted: dict[int, tuple] = {}
             self.cache = None
         else:
             self.kv = None
@@ -154,7 +160,13 @@ class ServeEngine:
         for slot in range(self.max_batch):
             if self.active[slot] is None and self.queue:
                 if self.paged:
-                    need = self._pages_for(self.queue[0])
+                    head = self.queue[0]
+                    if head.rid in self._preempted:
+                        # resuming: pages + reservation were kept across
+                        # the preemption, only the slot was given up
+                        self._resume_into_slot(slot, self.queue.popleft())
+                        continue
+                    need = self._pages_for(head)
                     if self._reserved_total + need > self.kv.pool.num_pages:
                         # free slot but no pages: request waits (FIFO)
                         self.stats["kv_admission_blocked"] += 1
@@ -206,6 +218,42 @@ class ServeEngine:
             return batch_leaf                          # scalar stats etc.
 
         self.cache = jax.tree.map(put, self.cache, caches)
+
+    def preempt(self, slot: int) -> dict:
+        """Checkpoint/preemption path (paged mode): kick an in-flight
+        request out of its decode slot and back to the queue head.
+
+        Its attention KV stays where it is — already APack-compressed in
+        the page pool, reservation held — while the dense
+        recurrent/mLSTM/sLSTM hot-path states are snapshot-compressed
+        (``PagedKVCache.snapshot_state``, weight-mode tables, bit-exact).
+        Re-admission restores the snapshot and resumes decoding at the
+        same position: no re-prefill, byte-identical continuation.
+        Returns the compressed snapshot (also kept internally)."""
+        if not self.paged:
+            raise RuntimeError("preempt requires the paged apack-int8 KV")
+        req = self.active[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} is idle, nothing to preempt")
+        snap = self.kv.snapshot_state(req.rid)
+        # drop the dense copy: the compressed snapshot is now the only
+        # home of the state, so preemption actually reclaims the memory
+        # (and the restore path is load-bearing, not a formality)
+        self.kv.states[req.rid] = {}
+        self._preempted[req.rid] = (snap, int(self.positions[slot]),
+                                    int(self.last_tokens[slot, 0]))
+        self.active[slot] = None
+        self.queue.appendleft(req)
+        self.stats["preempted"] += 1
+        return snap
+
+    def _resume_into_slot(self, slot: int, req: Request) -> None:
+        snap, pos, last = self._preempted.pop(req.rid)
+        self.kv.restore_state(req.rid, snap)
+        self.active[slot] = req
+        self.positions[slot] = pos
+        self.last_tokens[slot, 0] = last
+        self.stats["resumed"] += 1
 
     def _retire(self) -> None:
         for slot, req in enumerate(self.active):
@@ -271,12 +319,19 @@ class ServeEngine:
                 break
 
     def kv_stats(self) -> dict:
-        """Raw-vs-compressed KV traffic + pool occupancy (paged mode)."""
+        """Raw-vs-compressed KV traffic + pool occupancy (paged mode).
+
+        ``kv_ratio`` is ``None`` until a read has actually moved bytes —
+        an engine that has served nothing must not report break-even.
+        ``kv_streams`` splits the accounting into the three stream kinds
+        (global KV, rolling/local KV, recurrent-state snapshots)."""
         if not self.paged:
             return {}
         out = dict(self.kv.traffic)
         out["kv_ratio"] = self.kv.kv_ratio()
+        out["kv_streams"] = self.kv.stream_stats()
         out["kv_pool_pages"] = self.kv.pool.num_pages
         out["kv_pages_allocated"] = self.kv.pool.alloc_count
         out["kv_pages_high_water"] = self.kv.pool.high_water
+        out["kv_pages_evicted"] = self.kv.pool.evict_count
         return out

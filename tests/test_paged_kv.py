@@ -111,8 +111,22 @@ class TestKVPagePool:
         s = np.zeros(2, np.float32)
         for _ in range(4):
             pool.write_token(pid, k, k, s, s)
-        with pytest.raises(AssertionError):
+        # real exceptions, not bare asserts: -O must not strip the guard
+        with pytest.raises(RuntimeError, match="overfull"):
             pool.write_token(pid, k, k, s, s)
+
+    def test_double_free_and_bad_seal_rejected(self):
+        pool = self.make()
+        pid = pool.alloc()
+        k = np.zeros((2, 8), np.int8)
+        s = np.zeros(2, np.float32)
+        pool.write_token(pid, k, k, s, s)
+        with pytest.raises(ValueError, match="non-full or non-HOT"):
+            pool.seal(pid, np.zeros((2, 4, 2, 8), np.int8),
+                      np.zeros((2, 2), np.float32))
+        pool.free(pid)
+        with pytest.raises(ValueError, match="double free"):
+            pool.free(pid)
 
 
 # ------------------------------------------------- gather-decode kernel

@@ -1,0 +1,454 @@
+"""Heterogeneous-stack paged KV tests: rolling-window page eviction,
+recurrent-state snapshot compression (engine checkpoint/preemption),
+per-kind admission reservation, multi-table gather-decode, pool-invariant
+hardening under ``python -O``, and teacher-forced decode parity on a
+global + local + recurrent cycle."""
+import dataclasses
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro import configs
+from repro.core import tables
+from repro.kernels import ref as _ref
+from repro.kernels.paged_decode import gather_decode
+from repro.models import model as M
+from repro.models import modules as m
+from repro.serve import Request, ServeEngine
+
+KEY = jax.random.PRNGKey(0)
+# repro is a namespace package (no top-level __init__): use __path__
+SRC = Path(list(repro.__path__)[0]).resolve().parent
+
+
+def hetero_cfg(**kw):
+    return dataclasses.replace(configs.get_hetero_smoke_config(),
+                               kv_cache_dtype="apack-int8", **kw)
+
+
+def _random_token(rng, kv, lo=0.01, hi=0.02):
+    h, dh = kv.pool.kv_heads, kv.pool.head_dim
+    n = kv.n_layers
+    return (rng.integers(-127, 128, (n, h, dh)).astype(np.int8),
+            rng.integers(-127, 128, (n, h, dh)).astype(np.int8),
+            rng.uniform(lo, hi, (n, h)).astype(np.float32),
+            rng.uniform(lo, hi, (n, h)).astype(np.float32))
+
+
+# ------------------------------------------------------ rolling eviction
+class TestRollingEviction:
+    def test_eviction_frees_exactly_the_rolled_out_page(self):
+        """Alloc/free trace of a rolling layer: the oldest page frees the
+        step its last token leaves the window, newer pages are untouched,
+        and the live set never exceeds ``window_pages``."""
+        cfg = dataclasses.replace(
+            configs.get_smoke_config("qwen3-1.7b"), num_layers=1,
+            block_pattern=("local",), window_size=8,
+            kv_cache_dtype="apack-int8")
+        kv = M.PagedKVCache(cfg, num_pages=16, page_size=4, calib_pages=1)
+        kv.add_request(0)
+        rng = np.random.default_rng(0)
+        trace = []                       # (seq_len, base, live pids, free)
+        for t in range(24):
+            kv.append_token(0, *_random_token(rng, kv))
+            trace.append((kv.seq_len[0], kv.page_base[0][0],
+                          list(kv.page_tables[0][0]), kv.pool.free_count))
+        first_pid = trace[0][2][0]
+        for seq_len, base, pids, _ in trace:
+            # page p (tokens [4p, 4p+4)) dies once 4p+3 <= seq_len - 8:
+            # the page table's base must track that frontier exactly
+            assert base == max(0, (seq_len - 8 + 1) // 4), (seq_len, base)
+            assert len(pids) <= kv.window_pages
+            # the oldest page is evicted precisely at seq_len = 11 (it may
+            # legitimately reappear later, recycled off the free list)
+            if seq_len <= 10:
+                assert first_pid in pids, (seq_len, pids)
+            elif seq_len <= 12:
+                assert first_pid not in pids, (seq_len, pids)
+        # only eviction frees pages here, and the free count visibly
+        # increases while the sequence grows (the acceptance observable)
+        rises = [(a, b) for (_, _, _, a), (_, _, _, b)
+                 in zip(trace, trace[1:]) if b > a]
+        assert rises, "free count never increased while growing"
+        assert kv.pool.evict_count == trace[-1][1]      # evictions == base
+        kv.release(0)
+        assert kv.pool.free_count == kv.pool.num_pages
+
+    def test_evicted_tokens_never_materialized(self):
+        """Materialize after eviction rebuilds only the ring; the rolled
+        out tokens' pages are gone from the table entirely."""
+        cfg = dataclasses.replace(
+            configs.get_smoke_config("qwen3-1.7b"), num_layers=1,
+            block_pattern=("local",), window_size=8,
+            kv_cache_dtype="apack-int8")
+        kv = M.PagedKVCache(cfg, num_pages=16, page_size=4, calib_pages=1)
+        kv.add_request(0)
+        rng = np.random.default_rng(1)
+        toks = [_random_token(rng, kv) for _ in range(20)]
+        for t in toks:
+            kv.append_token(0, *t)
+        cache = kv.materialize([0], 32)
+        ring = min(8, 32)
+        got_k = np.asarray(cache["blocks"][0]["k"])[0, 0]      # [ring, H, dh]
+        assert got_k.shape[0] == ring
+        # slot a % ring holds token a for a in [20 - ring, 20)
+        pool = kv.pool
+        live_pids = kv.page_tables[0][0]
+        assert all(int(pool.state[p]) != m.PAGE_FREE for p in live_pids)
+        # nothing outside the live window was read
+        assert kv.traffic["kv_raw_bytes_local"] > 0
+        assert kv.traffic["kv_raw_bytes_global"] == 0
+
+
+# ------------------------------------------------- per-kind reservation
+class TestPerKindAdmission:
+    def test_pages_needed_per_layer_kind(self):
+        """global layers reserve the full sequence, rolling layers cap at
+        ceil(window/page)+1, recurrent-kind layers reserve nothing."""
+        cfg = hetero_cfg()           # prefix recurrent + (global,local,rec)
+        kv = M.PagedKVCache(cfg, num_pages=4, page_size=4)
+        assert kv.window_pages == 8 // 4 + 1
+        assert kv.pages_needed(32) == 32 // 4 + kv.window_pages   # 8 + 3
+        assert kv.pages_needed(4) == 1 + 1                        # both tiny
+        assert M.PagedKVCache.pages_for_config(cfg, 32, 4) == 11
+        # all-recurrent stack needs no pages at all
+        xc = dataclasses.replace(configs.get_smoke_config("xlstm-125m"),
+                                 kv_cache_dtype="apack-int8")
+        assert M.PagedKVCache.pages_for_config(xc, 128, 4) == 0
+
+    def test_engine_reserves_per_kind_and_recovers(self):
+        """Pool sized for exactly one heterogeneous request: admission
+        blocks the second despite free slots, and eviction churn does not
+        corrupt the reservation accounting."""
+        cfg = hetero_cfg()
+        params = M.init_params(configs.get_hetero_smoke_config(), KEY)
+        # each request stores min(max_len, prompt 8 + new 4) = 12 tokens
+        per_req = M.PagedKVCache.pages_for_config(cfg, 12, 4)
+        eng = ServeEngine(cfg, params, max_batch=4, max_len=16,
+                          kv_page_size=4, kv_calib_pages=2,
+                          kv_pages=per_req)
+        rng = np.random.default_rng(5)
+        reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 8)
+                        .astype(np.int32), max_new_tokens=4)
+                for i in range(2)]
+        for r in reqs:
+            eng.submit(r)
+        eng._retire()
+        eng._admit()
+        assert sum(r is not None for r in eng.active) == 1
+        assert eng._reserved_total == per_req
+        assert eng.stats["kv_admission_blocked"] > 0
+        eng.run_until_drained(max_steps=300)
+        assert all(r.done for r in reqs)
+        assert eng._reserved_total == 0
+        assert eng.kv.pool.free_count == eng.kv.pool.num_pages
+
+
+# ------------------------------------------------- state snapshots
+class TestStateSnapshots:
+    def test_snapshot_roundtrip_bit_exact(self):
+        """compress -> decompress of every recurrent-kind state is
+        bit-identical, including the -1e30 mLSTM/sLSTM stabilizer init."""
+        cfg = dataclasses.replace(configs.get_smoke_config("xlstm-125m"),
+                                  kv_cache_dtype="apack-int8")
+        kv = M.PagedKVCache(cfg, num_pages=0, page_size=4)
+        kv.add_request(0)
+        rng = np.random.default_rng(2)
+        for layer in kv.state_layers:
+            kind = kv.layer_kinds[layer]
+            tmpl = kv._state_template(kind)
+            kv.states[0][layer] = {
+                f: (rng.normal(0, 3, v.shape).astype(np.float32)
+                    if rng.uniform() < 0.8 else v.copy())
+                for f, v in tmpl.items()}
+        before = {l: {f: v.copy() for f, v in st.items()}
+                  for l, st in kv.states[0].items()}
+        snap = kv.snapshot_state(0)
+        assert kv.traffic["state_snapshots"] == 1
+        assert kv.traffic["state_raw_bytes"] > 0
+        kv.add_request(1)
+        kv.restore_state(1, snap)
+        for layer, fields in before.items():
+            for f, want in fields.items():
+                got = kv.states[1][layer][f]
+                assert got.dtype == np.float32
+                assert np.array_equal(
+                    got.view(np.uint32), want.view(np.uint32)), (layer, f)
+
+    def test_snapshot_uses_weight_mode_tables(self):
+        """Snapshot-time tables come from the paper's weight-mode
+        heuristic (full profile, no activation slack) — stored-mode
+        (near-uniform mantissa) planes excepted."""
+        cfg = hetero_cfg()
+        kv = M.PagedKVCache(cfg, num_pages=8, page_size=4)
+        kv.add_request(0)
+        rng = np.random.default_rng(3)
+        for layer in kv.state_layers:
+            tmpl = kv._state_template(kv.layer_kinds[layer])
+            kv.states[0][layer] = {
+                f: rng.normal(0, 1, v.shape).astype(np.float32)
+                for f, v in tmpl.items()}
+        snap = kv.snapshot_state(0)
+        coded = [p for p in snap["planes"].planes if not p.stored.all()]
+        assert coded, "every snapshot plane fell back to stored mode"
+        assert all(p.table.mode == "weight" for p in coded)
+
+    def test_engine_preempt_resume_is_bit_exact(self):
+        """Preempting a heterogeneous request mid-decode (snapshot the
+        recurrent states compressed, give up the slot) and resuming it
+        produces exactly the uninterrupted token stream."""
+        cfg = hetero_cfg()
+        params = M.init_params(configs.get_hetero_smoke_config(), KEY)
+        rng = np.random.default_rng(7)
+        prompt = rng.integers(0, cfg.vocab_size, 10).astype(np.int32)
+
+        def run(preempt_at=None):
+            eng = ServeEngine(cfg, params, max_batch=2, max_len=40,
+                              kv_page_size=4, kv_calib_pages=2)
+            r = Request(rid=0, prompt=prompt.copy(), max_new_tokens=10)
+            eng.submit(r)
+            for step in range(100):
+                if r.done:
+                    break
+                if step == preempt_at and eng.active[0] is not None:
+                    eng.preempt(0)
+                eng.step()
+                eng._retire()
+            return r.tokens, eng
+
+        base_toks, _ = run()
+        toks, eng = run(preempt_at=4)
+        assert toks == base_toks
+        assert eng.stats["preempted"] == 1 and eng.stats["resumed"] == 1
+        st = eng.kv_stats()["kv_streams"]["state"]
+        assert st["snapshots"] == 1 and st["raw_bytes"] > 0
+        assert eng.kv.pool.free_count == eng.kv.pool.num_pages
+
+
+# ------------------------------------------ multi-table gather-decode
+class TestMultiTableGatherDecode:
+    def test_one_call_decodes_pages_with_different_tables(self):
+        """The per-page table-id prefetch vector: pages encoded with two
+        different activation tables decode bit-exactly in a single call."""
+        rng = np.random.default_rng(11)
+        e, s = 32, 4
+        pages = np.stack([rng.normal(40, 10, (s, e)).astype(np.int64) & 0xFF,
+                          rng.normal(200, 10, (s, e)).astype(np.int64) & 0xFF,
+                          rng.normal(40, 10, (s, e)).astype(np.int64) & 0xFF])
+        t_low = tables.table_for(pages[0].reshape(-1), is_activation=True)
+        t_high = tables.table_for(pages[1].reshape(-1), is_activation=True)
+        tabs = [t_low, t_high, t_low]
+        planes = []
+        for i in range(3):
+            ta = _ref.TableArrays.from_table(tabs[i])
+            planes.append(tuple(np.asarray(x) for x in
+                                _ref.encode(jnp.asarray(pages[i]), ta, e, 8)))
+        pooled = tuple(np.stack([p[i] for p in planes]) for i in range(5))
+        sym, ofs, _, _, stored = pooled
+        stack = [np.stack(x) for x in zip(*(t.as_arrays() for t in
+                                            (t_low, t_high)))]
+        idx = np.asarray([2, 1, 0], np.int32)
+        tid = np.asarray([0, 1, 0], np.int32)
+        for backend in ("ref", "pallas_interpret"):
+            out = np.asarray(gather_decode(
+                jnp.asarray(sym), jnp.asarray(ofs), jnp.asarray(stored),
+                jnp.asarray(idx), jnp.asarray(stack[0]),
+                jnp.asarray(stack[1]), jnp.asarray(stack[2]),
+                n_steps=e, backend=backend, table_idx=jnp.asarray(tid)))
+            for g, pid in enumerate(idx):
+                assert np.array_equal(out[g], pages[pid]), (backend, g)
+
+
+# ------------------------------------------------- -O invariant smoke
+def test_pool_invariants_raise_under_python_O():
+    """Bare asserts vanish under ``python -O``; the pool's invariant
+    checks must not (they guard against silent data corruption)."""
+    code = """
+import numpy as np
+from repro.models import modules as m
+if __debug__:
+    raise SystemExit("test harness error: -O not active")
+pool = m.KVPagePool(2, 4, 2, 8, elems_per_stream=16)
+pid = pool.alloc()
+k = np.zeros((2, 8), np.int8); s = np.zeros(2, np.float32)
+for _ in range(4):
+    pool.write_token(pid, k, k, s, s)
+try:
+    pool.write_token(pid, k, k, s, s)
+except RuntimeError as e:
+    if "overfull" not in str(e):
+        raise SystemExit("overfull raised without page state: %s" % e)
+else:
+    raise SystemExit("overfull write did not raise")
+try:
+    pool.seal(pid, np.zeros((2, 4, 2, 8), np.int8),
+              np.zeros((2, 2), np.float32))
+    pool.seal(pid, np.zeros((2, 4, 2, 8), np.int8),
+              np.zeros((2, 2), np.float32))
+except ValueError as e:
+    pass
+else:
+    raise SystemExit("double seal did not raise")
+pool.free(pid)
+try:
+    pool.free(pid)
+except ValueError as e:
+    if "double free" not in str(e):
+        raise SystemExit("double free raised without page state: %s" % e)
+else:
+    raise SystemExit("double free did not raise")
+pid2 = pool.alloc()
+pool.write_token(pid2, k, k, s, s)
+try:
+    pool.evict(pid2)
+except RuntimeError:
+    pass
+else:
+    raise SystemExit("evict of HOT page did not raise")
+print("POOL_INVARIANTS_OK")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(SRC) + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-O", "-c", code], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, (out.stdout, out.stderr)
+    assert "POOL_INVARIANTS_OK" in out.stdout
+
+
+# --------------------------------------------------- no-traffic ratio
+class TestNoTrafficRatio:
+    def test_kv_ratio_none_before_any_read(self):
+        """Table bytes can accrue (pages seal during appends) before a
+        single read happens; the ratio must say "no data" — not 1.0."""
+        cfg = hetero_cfg()
+        kv = M.PagedKVCache(cfg, num_pages=32, page_size=4, calib_pages=1)
+        kv.add_request(0)
+        rng = np.random.default_rng(4)
+        for _ in range(8):
+            kv.append_token(0, *_random_token(rng, kv))
+        assert kv.traffic["kv_table_bytes"] > 0        # calibrated already
+        assert kv.traffic["kv_raw_bytes"] == 0         # ...but zero reads
+        assert kv.kv_ratio() is None
+        kv.materialize([0], 16)
+        assert kv.kv_ratio() is not None
+
+    def test_engine_with_no_attention_reports_none(self):
+        """xLSTM stack: no attention layers, no pages, no KV reads — the
+        engine serves fine and kv_stats reports the n/a ratio and the
+        state stream explicitly."""
+        base = configs.get_smoke_config("xlstm-125m")
+        cfg = dataclasses.replace(base, kv_cache_dtype="apack-int8")
+        params = M.init_params(base, KEY)
+        eng = ServeEngine(cfg, params, max_batch=2, max_len=24,
+                          kv_page_size=4)
+        rng = np.random.default_rng(6)
+        reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 8)
+                        .astype(np.int32), max_new_tokens=4)
+                for i in range(2)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_drained(max_steps=100)
+        assert all(r.done for r in reqs)
+        ks = eng.kv_stats()
+        assert ks["kv_ratio"] is None
+        assert ks["kv_pool_pages"] == 0
+        assert ks["kv_streams"]["state"]["ratio"] is None
+
+
+# ----------------------------------------- heterogeneous decode parity
+class TestHeteroDecodeParity:
+    def test_teacher_forced_logits_and_eviction(self):
+        """The acceptance gate: a global + local + recurrent cycle decodes
+        through the paged compressed cache within the raw-int8 envelope
+        (0.35), rolling layers demonstrably free pages while the sequence
+        grows, and the measured read ratio is < 1.0."""
+        cfg16 = configs.get_hetero_smoke_config()
+        cfg8 = dataclasses.replace(cfg16, kv_cache_dtype="int8")
+        cfga = hetero_cfg()
+        params = M.init_params(cfg16, KEY)
+        b, s = 2, 16
+        rng = np.random.default_rng(1)
+        tokens = jnp.asarray(rng.integers(0, cfg16.vocab_size, (b, s)))
+        kv = M.PagedKVCache(
+            cfga, num_pages=b * M.PagedKVCache.pages_for_config(cfga, s, 4),
+            page_size=4, calib_pages=2)
+        rids = list(range(b))
+        for rid in rids:
+            kv.add_request(rid)
+        cache16 = M.init_cache(cfg16, b, s)
+        cache8 = M.init_cache(cfg8, b, s)
+        l16s, l8s, las, free_trace = [], [], [], []
+        for t in range(s):
+            tok = tokens[:, t:t + 1]
+            l16, cache16 = M.decode_step(cfg16, params, cache16, tok,
+                                         jnp.asarray(t))
+            l8, cache8 = M.decode_step(cfg8, params, cache8, tok,
+                                       jnp.asarray(t))
+            la, new_a = M.decode_step(cfga, params, kv.materialize(rids, s),
+                                      tok, jnp.asarray(t))
+            kv.append_step_tokens(new_a, rids, [t] * b)
+            free_trace.append(kv.pool.free_count)
+            l16s.append(l16)
+            l8s.append(l8)
+            las.append(la)
+        d16 = np.asarray(jnp.concatenate(l16s, 1), np.float32)
+        d8 = np.asarray(jnp.concatenate(l8s, 1), np.float32)
+        da = np.asarray(jnp.concatenate(las, 1), np.float32)
+        # compression ran and rolling eviction fired mid-decode
+        assert kv.traffic["kv_pages_packed"] > 0
+        assert kv.pool.evict_count > 0
+        assert any(b2 > a2 for a2, b2 in zip(free_trace, free_trace[1:])), \
+            free_trace
+        assert kv.kv_ratio() < 1.0
+        # all three stream kinds accounted
+        st = kv.stream_stats()
+        assert st["global"]["raw_bytes"] > 0
+        assert st["local"]["raw_bytes"] > 0
+        assert np.abs(da - d8).max() < 0.35, np.abs(da - d8).max()
+        assert np.abs(da - d16).max() < 0.35, np.abs(da - d16).max()
+
+
+# ------------------------------------------- every config constructs
+class TestEveryConfigConstructs:
+    @pytest.mark.parametrize("arch", configs.all_arch_ids())
+    def test_paged_kv_constructs_for_every_config(self, arch):
+        """The PR-2 constructor guard is gone: every config in
+        ``src/repro/configs`` builds a PagedKVCache (pool sized per kind)."""
+        cfg = dataclasses.replace(configs.get_smoke_config(arch),
+                                  kv_cache_dtype="apack-int8")
+        pages = M.PagedKVCache.pages_for_config(cfg, 32, 4)
+        kv = M.PagedKVCache(cfg, num_pages=pages, page_size=4)
+        assert kv.n_layers == cfg.num_layers
+        assert len(kv.attn_layers) + len(kv.state_layers) == kv.n_layers
+
+    @pytest.mark.parametrize("arch", ["recurrentgemma-9b", "kimi-k2-1t-a32b"])
+    def test_engine_serves_hybrid_and_prefix_stacks(self, arch):
+        """End-to-end decode through ServeEngine for a rolling+recurrent
+        hybrid (window shrunk so eviction fires) and a global-prefix MoE."""
+        base = configs.get_smoke_config(arch)
+        if arch == "recurrentgemma-9b":
+            base = dataclasses.replace(base, window_size=8)
+        cfg = dataclasses.replace(base, kv_cache_dtype="apack-int8")
+        params = M.init_params(base, KEY)
+        eng = ServeEngine(cfg, params, max_batch=2, max_len=32,
+                          kv_page_size=4, kv_calib_pages=2)
+        rng = np.random.default_rng(8)
+        reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 9)
+                        .astype(np.int32), max_new_tokens=6)
+                for i in range(3)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_drained(max_steps=300)
+        assert all(r.done for r in reqs)
+        assert eng.kv.pool.free_count == eng.kv.pool.num_pages
+        ks = eng.kv_stats()
+        assert ks["kv_ratio"] is not None and ks["kv_ratio"] < 1.2
+        if arch == "recurrentgemma-9b":
+            assert ks["kv_pages_evicted"] > 0
