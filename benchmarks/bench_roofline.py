@@ -25,7 +25,34 @@ def load_cells(mesh: str | None = None) -> list[dict]:
     return cells
 
 
+# decode-phase KV-stream roofline (Fig. 7 analogue): the decode step is
+# memory-bound on the KV read, so the bandwidth-bound step-time speedup of
+# serving through the compressed pool is 1/ratio at either technology
+MEM_GBPS = {"ddr4-3200": 25.6, "hbm2e": 450.0}
+
+
+def decode_kv_rows(emit) -> None:
+    from .common import measured_kv_stats
+    kv = measured_kv_stats()
+    if kv.get("kv_ratio") is None:
+        emit("roofline/decode_kv/missing", 0.0, "no measured KV reads")
+        return
+    steps = max(kv["steps"], 1)
+    raw_b = kv["kv_raw_bytes"] / steps
+    comp_b = (kv["kv_read_bytes"] + kv["kv_table_bytes"]) / steps
+    for tech, gbps in MEM_GBPS.items():
+        t_raw = raw_b / (gbps * 1e9)
+        t_comp = comp_b / (gbps * 1e9)
+        emit(f"roofline/decode_kv/{tech}", t_comp * 1e6,
+             f"KV-stream bandwidth-bound decode: raw={t_raw * 1e6:.3f}"
+             f"us/step apack={t_comp * 1e6:.3f}us/step "
+             f"speedup={t_raw / t_comp:.3f}x "
+             f"(measured kv_ratio={kv['kv_ratio']:.3f})",
+             value=t_raw / t_comp)
+
+
 def main(emit) -> None:
+    decode_kv_rows(emit)
     cells = load_cells()
     if not cells:
         emit("roofline/missing", 0.0, "run launch.dryrun first")

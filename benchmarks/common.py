@@ -12,6 +12,20 @@ from repro.core import quant
 from repro.models import model as M
 
 
+_KV_STATS: dict[str, dict] = {}
+
+
+def measured_kv_stats(arch: str = "qwen3-1.7b") -> dict:
+    """One paged-KV serve measurement (``bench_traffic.kv_cache_traffic``)
+    shared by the traffic, energy, and roofline sections — the measured
+    ``kv_ratio`` feeds the Fig. 6/7 analogues, so the decode KV stream is
+    priced from real engine traffic, not a synthetic distribution."""
+    if arch not in _KV_STATS:
+        from . import bench_traffic
+        _KV_STATS[arch] = bench_traffic.kv_cache_traffic(arch)
+    return _KV_STATS[arch]
+
+
 def timed(fn, *args, repeat: int = 3, **kw):
     fn(*args, **kw)                      # warmup / compile
     t0 = time.perf_counter()

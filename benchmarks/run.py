@@ -24,8 +24,8 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from . import (bench_distributions, bench_tablegen, bench_traffic,
-                   bench_energy, bench_speedup, bench_codec, bench_roofline,
-                   bench_trained)
+                   bench_energy, bench_speedup, bench_codec, bench_decode,
+                   bench_roofline, bench_trained)
     mods = [
         ("distributions(Fig2)", bench_distributions),
         ("tablegen(TableI)", bench_tablegen),
@@ -33,6 +33,7 @@ def main(argv=None) -> None:
         ("energy(Fig6)", bench_energy),
         ("speedup(Fig7/8)", bench_speedup),
         ("codec(§VII-B)", bench_codec),
+        ("decode(§Serving)", bench_decode),
         ("trained(§VII-A)", bench_trained),
         ("roofline(§Roofline)", bench_roofline),
     ]

@@ -1,0 +1,354 @@
+"""Fused paged gather-decode + attention Pallas kernel.
+
+Decode-side analogue of ``decompress_matmul``: the APack-compressed KV page
+pool stays in HBM and each grid step decodes ONE page tile into VMEM
+scratch and immediately computes its QK^T / PV contribution with an
+online-softmax accumulator — attention never reads a dense materialized
+cache for PACKED pages, so the off-chip KV stream is the *compressed*
+footprint (paper Fig. 1 applied to the decode read path).
+
+Grid is ``(jobs, pages)`` with pages innermost; a job is one (batch slot)
+of one attention layer.  Two scalar-prefetch vectors drive the BlockSpec
+index maps exactly like ``kernels/paged_decode.py``: ``page_idx`` selects
+which pool page each grid step DMAs, ``table_idx`` selects the K-table row
+of the stacked per-(layer, kind) activation tables (the V row is always
+``table_idx + 1`` — tables are stacked ``[2 * n_layers, ...]`` with row
+``2 * layer + kind``).
+
+Per-page state dispatch happens in-kernel (``pl.when`` on the page
+lifecycle):
+
+* ``HOT``    — raw per-token int8 + per-(token, head) scales, read directly
+               (the newest, not-yet-sealed tokens);
+* ``COLD``   — page-requantized int8 + per-(page, head) scales;
+* ``PACKED`` — APack planes, decoded via the shared ``decode_block`` body.
+
+Masking is by *absolute* token position: ``t0 + offset < qpos`` (causal;
+the current token's contribution is merged by the caller, see
+``modules.paged_attention_step``) and ``t0 + offset > qpos - window`` for
+rolling layers — evicted and partially-rolled-out pages mask in-kernel, no
+ring buffer is ever materialized.  The online-softmax accumulator
+``(acc, m, l)`` is returned *unnormalized* so the caller can merge the
+current token's self-attention term before dividing.
+
+Interpret mode is the validated contract on CPU (bit-identical to the
+pure-jnp ``fused_page_attention_ref``); the same kernel compiles on TPU
+with the pool planes resident in HBM.  The output block for a job is
+revisited across the page-innermost grid steps — the same Mosaic revisit
+caveat as ``decompress_matmul`` applies before enabling compiled mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import ref as _ref
+from .apack_decode import decode_block
+
+I32 = jnp.int32
+U32 = jnp.uint32
+F32 = jnp.float32
+
+# page lifecycle states — must match models/modules.py (re-declared here so
+# the kernel module has no model dependency)
+PAGE_FREE, PAGE_HOT, PAGE_COLD, PAGE_PACKED = 0, 1, 2, 3
+
+NEG_INF = -1e30          # same mask value as the dense attention paths
+
+
+def _page_tile(state, tok_ref, tok_s_ref, cold_ref, pscale_ref, sym_ref,
+               ofs_ref, stored_ref, vm_ref, ol_ref, cum_ref, tile_ref, *,
+               ps, h, dh, n_steps, bits):
+    """Fill ``tile_ref`` ([ps, H, dh] f32 VMEM scratch) with the
+    dequantized K or V payload of the current page, by lifecycle state."""
+
+    @pl.when(state == PAGE_HOT)
+    def _hot():
+        tile_ref[...] = (tok_ref[0].astype(F32)
+                         * tok_s_ref[0].astype(F32)[..., None])
+
+    @pl.when(state == PAGE_COLD)
+    def _cold():
+        tile_ref[...] = (cold_ref[0].astype(F32)
+                         * pscale_ref[0].astype(F32)[None, :, None])
+
+    @pl.when(state == PAGE_PACKED)
+    def _packed():
+        u = decode_block(sym_ref[0].astype(U32), ofs_ref[0].astype(U32),
+                         stored_ref[0] != 0, vm_ref[0], ol_ref[0],
+                         cum_ref[0], n_steps=n_steps, bits=bits)
+        signed = jnp.where(u >= 128, u - 256, u).astype(F32)
+        tile_ref[...] = (signed.reshape(ps, h, dh)
+                         * pscale_ref[0].astype(F32)[None, :, None])
+
+
+def _fused_kernel(idx_ref, tid_ref, q_ref, jm_ref, meta_ref,
+                  tok_k_ref, tok_sk_ref, tok_v_ref, tok_sv_ref,
+                  cold_k_ref, cold_v_ref, pscale_k_ref, pscale_v_ref,
+                  sym_k_ref, ofs_k_ref, st_k_ref,
+                  sym_v_ref, ofs_v_ref, st_v_ref,
+                  vm_k_ref, ol_k_ref, cum_k_ref,
+                  vm_v_ref, ol_v_ref, cum_v_ref,
+                  acc_ref, m_ref, l_ref,
+                  kt_ref, vt_ref, acc_s, m_s, l_s, *,
+                  ps: int, hkv: int, g: int, dh: int, n_steps: int,
+                  bits: int, softcap: float):
+    del idx_ref, tid_ref                 # consumed by BlockSpec index_maps
+    p = pl.program_id(1)
+    n_pages = pl.num_programs(1)
+
+    @pl.when(p == 0)
+    def _init():
+        acc_s[...] = jnp.zeros((hkv, g, dh), F32)
+        m_s[...] = jnp.full((hkv, g), NEG_INF, F32)
+        l_s[...] = jnp.zeros((hkv, g), F32)
+
+    state = meta_ref[0, 0, 0]
+    t0 = meta_ref[0, 0, 1]
+    qpos = jm_ref[0, 0]
+    window = jm_ref[0, 1]
+
+    _page_tile(state, tok_k_ref, tok_sk_ref, cold_k_ref, pscale_k_ref,
+               sym_k_ref, ofs_k_ref, st_k_ref, vm_k_ref, ol_k_ref,
+               cum_k_ref, kt_ref, ps=ps, h=hkv, dh=dh, n_steps=n_steps,
+               bits=bits)
+    _page_tile(state, tok_v_ref, tok_sv_ref, cold_v_ref, pscale_v_ref,
+               sym_v_ref, ofs_v_ref, st_v_ref, vm_v_ref, ol_v_ref,
+               cum_v_ref, vt_ref, ps=ps, h=hkv, dh=dh, n_steps=n_steps,
+               bits=bits)
+
+    q = q_ref[0].reshape(hkv, g, dh).astype(F32)
+    k_tile = kt_ref[...]                                     # [ps, H, dh]
+    v_tile = vt_ref[...]
+    scores = jnp.einsum("kgd,skd->kgs", q, k_tile) * (dh ** -0.5)
+    pos = t0 + jnp.arange(ps, dtype=I32)
+    valid = (pos < qpos) & (state != PAGE_FREE)
+    valid &= jnp.where(window > 0, pos > qpos - window, True)
+    scores = jnp.where(valid[None, None, :], scores, NEG_INF)
+    if softcap > 0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    m_new = jnp.maximum(m_s[...], jnp.max(scores, axis=-1))
+    # explicit * valid: with a fully-masked page m stays at NEG_INF and
+    # exp(NEG_INF - NEG_INF) == 1 would otherwise pollute l
+    w = jnp.exp(scores - m_new[..., None]) * valid[None, None, :]
+    alpha = jnp.exp(m_s[...] - m_new)
+    l_s[...] = l_s[...] * alpha + jnp.sum(w, axis=-1)
+    acc_s[...] = (acc_s[...] * alpha[..., None]
+                  + jnp.einsum("kgs,skd->kgd", w, v_tile))
+    m_s[...] = m_new
+
+    @pl.when(p == n_pages - 1)
+    def _flush():
+        acc_ref[0] = acc_s[...].reshape(hkv * g, dh)
+        m_ref[0] = m_s[...].reshape(hkv * g)
+        l_ref[0] = l_s[...].reshape(hkv * g)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_steps", "num_heads", "bits", "softcap",
+                              "interpret"))
+def fused_page_attention_pallas(
+        q: jax.Array, page_idx: jax.Array, table_idx: jax.Array,
+        meta: jax.Array, jobmeta: jax.Array,
+        tok_k, tok_sk, tok_v, tok_sv, cold_k, cold_v, pscale_k, pscale_v,
+        sym_k, ofs_k, stored_k, sym_v, ofs_v, stored_v, vm, ol, cum, *,
+        n_steps: int, num_heads: int, bits: int = 8, softcap: float = 0.0,
+        interpret: bool = True):
+    """Fused paged attention over a job batch.
+
+    Args:
+      q:         f32[J, Hq, dh] per-job queries (rope'd, unscaled).
+      page_idx:  i32[J, P] pool page id per (job, page slot); padding slots
+                 may carry any in-range id — they are masked by state.
+      table_idx: i32[J, P] K-table row in the stacked table arrays
+                 (``2 * layer``); the V row is ``table_idx + 1``.
+      meta:      i32[J, P, 2] per-(job, page): (lifecycle state, absolute
+                 position of the page's first token).
+      jobmeta:   i32[J, 2] per job: (qpos, window) — ``window == 0`` means
+                 global (no lower bound).
+      tok_* / cold_* / pscale_* / sym_* / ofs_* / stored_*: per-kind pool
+                 planes ([P_pool, ...], kind split by the caller).
+      vm/ol/cum: stacked table arrays [T, 17] / [T, 16] / [T, 17].
+
+    Returns (acc f32[J, Hq, dh], m f32[J, Hq], l f32[J, Hq]) — the
+    *unnormalized* online-softmax state; callers merge the current token
+    and divide (see ``modules.paged_attention_step``).
+    """
+    j, hq, dh = q.shape
+    p_slots = page_idx.shape[1]
+    ps = tok_k.shape[1]
+    hkv = tok_k.shape[2]
+    g = hq // hkv
+    ws, s = sym_k.shape[1], sym_k.shape[2]
+    wo = ofs_k.shape[1]
+    idx_flat = page_idx.reshape(-1).astype(I32)
+    tid_flat = table_idx.reshape(-1).astype(I32)
+    kernel = functools.partial(
+        _fused_kernel, ps=ps, hkv=hkv, g=g, dh=dh, n_steps=n_steps,
+        bits=bits, softcap=float(softcap))
+
+    def page_spec(shape):
+        return pl.BlockSpec((1, *shape),
+                            lambda i, p, idx, tid:
+                            (idx[i * p_slots + p],) + (0,) * len(shape))
+
+    def ktab_spec(n):
+        return pl.BlockSpec((1, n),
+                            lambda i, p, idx, tid: (tid[i * p_slots + p], 0))
+
+    def vtab_spec(n):
+        return pl.BlockSpec(
+            (1, n), lambda i, p, idx, tid: (tid[i * p_slots + p] + 1, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(j, p_slots),
+        in_specs=[
+            pl.BlockSpec((1, hq, dh), lambda i, p, idx, tid: (i, 0, 0)),
+            pl.BlockSpec((1, 2), lambda i, p, idx, tid: (i, 0)),
+            pl.BlockSpec((1, 1, 2), lambda i, p, idx, tid: (i, p, 0)),
+            page_spec((ps, hkv, dh)),          # tok_k
+            page_spec((ps, hkv)),              # tok_sk
+            page_spec((ps, hkv, dh)),          # tok_v
+            page_spec((ps, hkv)),              # tok_sv
+            page_spec((ps, hkv, dh)),          # cold_k
+            page_spec((ps, hkv, dh)),          # cold_v
+            page_spec((hkv,)),                 # pscale_k
+            page_spec((hkv,)),                 # pscale_v
+            page_spec((ws, s)),                # sym_k
+            page_spec((wo, s)),                # ofs_k
+            page_spec((s,)),                   # stored_k
+            page_spec((ws, s)),                # sym_v
+            page_spec((wo, s)),                # ofs_v
+            page_spec((s,)),                   # stored_v
+            ktab_spec(17), ktab_spec(16), ktab_spec(17),
+            vtab_spec(17), vtab_spec(16), vtab_spec(17),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, hq, dh), lambda i, p, idx, tid: (i, 0, 0)),
+            pl.BlockSpec((1, hq), lambda i, p, idx, tid: (i, 0)),
+            pl.BlockSpec((1, hq), lambda i, p, idx, tid: (i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((ps, hkv, dh), F32),    # k tile
+            pltpu.VMEM((ps, hkv, dh), F32),    # v tile
+            pltpu.VMEM((hkv, g, dh), F32),     # acc
+            pltpu.VMEM((hkv, g), F32),         # m
+            pltpu.VMEM((hkv, g), F32),         # l
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((j, hq, dh), F32),
+            jax.ShapeDtypeStruct((j, hq), F32),
+            jax.ShapeDtypeStruct((j, hq), F32),
+        ],
+        interpret=interpret,
+    )(idx_flat, tid_flat, q.astype(F32), jobmeta.astype(I32),
+      meta.astype(I32), tok_k, tok_sk.astype(F32), tok_v,
+      tok_sv.astype(F32), cold_k, cold_v, pscale_k.astype(F32),
+      pscale_v.astype(F32), sym_k.astype(U32), ofs_k.astype(U32),
+      stored_k.astype(I32), sym_v.astype(U32), ofs_v.astype(U32),
+      stored_v.astype(I32), vm.astype(I32), ol.astype(I32), cum.astype(I32),
+      vm.astype(I32), ol.astype(I32), cum.astype(I32))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_steps", "num_heads", "bits", "softcap"))
+def fused_page_attention_ref(
+        q, page_idx, table_idx, meta, jobmeta,
+        tok_k, tok_sk, tok_v, tok_sv, cold_k, cold_v, pscale_k, pscale_v,
+        sym_k, ofs_k, stored_k, sym_v, ofs_v, stored_v, vm, ol, cum, *,
+        n_steps: int, num_heads: int, bits: int = 8, softcap: float = 0.0):
+    """jnp reference for the fused kernel: identical page-by-page
+    online-softmax update order (bit-comparable in interpret mode)."""
+    j, hq, dh = q.shape
+    p_slots = page_idx.shape[1]
+    ps, hkv = tok_k.shape[1], tok_k.shape[2]
+    g = hq // hkv
+
+    def dequant_page(pid, tid, state):
+        hot = tok_k[pid].astype(F32), tok_v[pid].astype(F32)
+        hot = (hot[0] * tok_sk[pid].astype(F32)[..., None],
+               hot[1] * tok_sv[pid].astype(F32)[..., None])
+        cold = (cold_k[pid].astype(F32)
+                * pscale_k[pid].astype(F32)[None, :, None],
+                cold_v[pid].astype(F32)
+                * pscale_v[pid].astype(F32)[None, :, None])
+
+        def dec(sym, ofs, stored, t):
+            u = _ref.decode(sym[pid].astype(U32), ofs[pid].astype(U32),
+                            stored[pid].astype(bool),
+                            _ref.TableArrays(vm[t], ol[t], cum[t]),
+                            n_steps, bits)
+            sgn = jnp.where(u >= 128, u - 256, u).astype(F32)
+            return sgn.reshape(ps, hkv, dh)
+
+        packed = (dec(sym_k, ofs_k, stored_k, tid)
+                  * pscale_k[pid].astype(F32)[None, :, None],
+                  dec(sym_v, ofs_v, stored_v, tid + 1)
+                  * pscale_v[pid].astype(F32)[None, :, None])
+        kt = jnp.where(state == PAGE_HOT, hot[0],
+                       jnp.where(state == PAGE_COLD, cold[0], packed[0]))
+        vt = jnp.where(state == PAGE_HOT, hot[1],
+                       jnp.where(state == PAGE_COLD, cold[1], packed[1]))
+        return kt, vt
+
+    def one_job(qj, pids, tids, mj, jm):
+        q3 = qj.reshape(hkv, g, dh).astype(F32)
+        acc = jnp.zeros((hkv, g, dh), F32)
+        m_run = jnp.full((hkv, g), NEG_INF, F32)
+        l_run = jnp.zeros((hkv, g), F32)
+        for p in range(p_slots):
+            state, t0 = mj[p, 0], mj[p, 1]
+            kt, vt = dequant_page(pids[p], tids[p], state)
+            scores = jnp.einsum("kgd,skd->kgs", q3, kt) * (dh ** -0.5)
+            pos = t0 + jnp.arange(ps, dtype=I32)
+            valid = (pos < jm[0]) & (state != PAGE_FREE)
+            valid &= jnp.where(jm[1] > 0, pos > jm[0] - jm[1], True)
+            scores = jnp.where(valid[None, None, :], scores, NEG_INF)
+            if softcap > 0:
+                scores = softcap * jnp.tanh(scores / softcap)
+            m_new = jnp.maximum(m_run, jnp.max(scores, axis=-1))
+            w = jnp.exp(scores - m_new[..., None]) * valid[None, None, :]
+            alpha = jnp.exp(m_run - m_new)
+            l_run = l_run * alpha + jnp.sum(w, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum("kgs,skd->kgd", w, vt)
+            m_run = m_new
+        return (acc.reshape(hq, dh), m_run.reshape(hq), l_run.reshape(hq))
+
+    return jax.vmap(one_job)(q.astype(F32), page_idx.astype(I32),
+                             table_idx.astype(I32), meta.astype(I32),
+                             jobmeta.astype(I32))
+
+
+def fused_page_attention(q, page_idx, table_idx, meta, jobmeta, planes, *,
+                         n_steps: int, num_heads: int, bits: int = 8,
+                         softcap: float = 0.0, backend: str | None = None):
+    """Backend dispatch (mirrors ``paged_decode.gather_decode``): pallas on
+    TPU, pallas-interpret on CPU, ``backend="ref"`` for the pure-jnp path.
+    ``planes`` is the device plane dict built by
+    ``model.DevicePoolPlanes`` (kind-split pool arrays + table stacks)."""
+    if backend is None:
+        from .ops import _default_backend
+        backend = _default_backend()
+    args = (q, page_idx, table_idx, meta, jobmeta,
+            planes["tok_k"], planes["tok_sk"], planes["tok_v"],
+            planes["tok_sv"], planes["cold_k"], planes["cold_v"],
+            planes["pscale_k"], planes["pscale_v"],
+            planes["sym_k"], planes["ofs_k"], planes["stored_k"],
+            planes["sym_v"], planes["ofs_v"], planes["stored_v"],
+            planes["vm"], planes["ol"], planes["cum"])
+    if backend == "ref":
+        return fused_page_attention_ref(
+            *args, n_steps=n_steps, num_heads=num_heads, bits=bits,
+            softcap=softcap)
+    return fused_page_attention_pallas(
+        *args, n_steps=n_steps, num_heads=num_heads, bits=bits,
+        softcap=softcap, interpret=(backend == "pallas_interpret"))

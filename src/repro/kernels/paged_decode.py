@@ -25,6 +25,7 @@ resident in HBM.
 from __future__ import annotations
 
 import functools
+import logging
 
 import jax
 import jax.numpy as jnp
@@ -36,18 +37,44 @@ from .apack_decode import decode_block
 
 I32 = jnp.int32
 U32 = jnp.uint32
+_log = logging.getLogger(__name__)
 
 # jit-compile buckets for the gather size: pad the page-index vector up to
 # the next bucket so a serving loop with a growing working set compiles
-# O(log pages) kernels, not one per distinct page count.
+# O(log pages) kernels, not one per distinct page count.  Beyond the fixed
+# table the bucket keeps doubling (next power of two) — the compiled-size
+# set stays O(log pages) for arbitrarily large pools instead of one kernel
+# per 1024-page increment.
 GATHER_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024)
+
+# recompile-storm guard: a long-running serve should settle into a handful
+# of gather sizes; warn (once per new size past the threshold) if the set
+# of distinct buckets keeps growing — each one is a fresh XLA compile.
+# Deliberately process-global (not per pool/engine): the jit cache whose
+# growth this tracks is process-global too.
+GATHER_BUCKET_WARN_THRESHOLD = 12
+_seen_buckets: set[int] = set()
 
 
 def gather_bucket(n: int) -> int:
     for b in GATHER_BUCKETS:
         if n <= b:
-            return b
-    return -(-n // GATHER_BUCKETS[-1]) * GATHER_BUCKETS[-1]
+            bucket = b
+            break
+    else:
+        bucket = GATHER_BUCKETS[-1]
+        while bucket < n:
+            bucket *= 2
+    if bucket not in _seen_buckets:
+        _seen_buckets.add(bucket)
+        if len(_seen_buckets) > GATHER_BUCKET_WARN_THRESHOLD:
+            _log.warning(
+                "gather_decode has now been asked for %d distinct jit "
+                "bucket sizes (latest: %d) — each is a fresh kernel "
+                "compile; a long-running serve hitting this repeatedly "
+                "indicates a recompile storm (consider a larger fixed "
+                "bucket or pre-warming)", len(_seen_buckets), bucket)
+    return bucket
 
 
 def _as_table_stack(v_min, ol, cum, page_idx, table_idx):

@@ -34,6 +34,10 @@ def main() -> None:
     ap.add_argument("--window-size", type=int, default=None,
                     help="override the rolling-attention window (small "
                          "values demo page eviction on hybrid archs)")
+    ap.add_argument("--kv-materialize", action="store_true",
+                    help="use the legacy materialize decode path (dense "
+                         "cache rebuilt from the pool every step) instead "
+                         "of the default device-resident fused path")
     args = ap.parse_args()
 
     cfg = (configs.get_smoke_config(args.arch) if args.smoke
@@ -53,7 +57,8 @@ def main() -> None:
 
     engine = ServeEngine(cfg, params, max_batch=args.max_batch,
                          max_len=args.prompt_len + args.max_new + 8,
-                         kv_page_size=args.kv_page_size)
+                         kv_page_size=args.kv_page_size,
+                         kv_fused=not args.kv_materialize)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab_size,
@@ -85,6 +90,12 @@ def main() -> None:
                   + " ".join(f"{k}={v}" for k, v in st.items()
                              if k != "ratio")
                   + (f" ratio={r:.3f}" if r is not None else " ratio=n/a"))
+        tr = ks["transfers"]
+        mode = "fused (device-resident)" if ks["kv_fused"] else "materialize"
+        print(f"decode path: {mode}; host<->device "
+              f"h2d={tr['h2d_bytes']/1e3:.1f} kB "
+              f"d2h={tr['d2h_bytes']/1e3:.1f} kB "
+              f"({tr['h2d_calls']}/{tr['d2h_calls']} calls)")
     print("sample output:", reqs[0].tokens[:16])
 
 

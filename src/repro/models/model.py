@@ -153,6 +153,19 @@ def block_full(cfg: ModelConfig, kind: str, p: dict, h: jax.Array,
     return h, cache, aux
 
 
+def _join_block(cfg: ModelConfig, p: dict, h: jax.Array, hn: jax.Array,
+                inner: jax.Array) -> jax.Array:
+    """Residual + FFN tail shared by the dense and paged decode blocks."""
+    if "ffn" in p:
+        if cfg.parallel_block:
+            f, _ = _ffn(cfg, p, hn)
+            return h + inner + f
+        h = h + inner
+        f, _ = _ffn(cfg, p, m.rms_norm(h, p["norm2"], cfg.norm_eps))
+        return h + f
+    return h + inner
+
+
 def block_step(cfg: ModelConfig, kind: str, p: dict, h: jax.Array,
                cache, pos):
     """Single-token decode block.  Returns (h, new_cache)."""
@@ -168,17 +181,24 @@ def block_step(cfg: ModelConfig, kind: str, p: dict, h: jax.Array,
         inner, cache = m.slstm_step(p["inner"], hn, cache, cfg)
     else:
         raise ValueError(kind)
-    if "ffn" in p:
-        if cfg.parallel_block:
-            f, _ = _ffn(cfg, p, hn)
-            h = h + inner + f
-        else:
-            h = h + inner
-            f, _ = _ffn(cfg, p, m.rms_norm(h, p["norm2"], cfg.norm_eps))
-            h = h + f
-    else:
-        h = h + inner
-    return h, cache
+    return _join_block(cfg, p, h, hn, inner), cache
+
+
+def block_step_paged(cfg: ModelConfig, kind: str, p: dict, h: jax.Array,
+                     planes: dict, meta, cache, pos,
+                     backend: str | None = None):
+    """Decode block against the device-resident paged KV store.
+
+    Attention kinds read pages through the fused gather-decode kernel and
+    return the new token's quantized K/V (for the on-device append);
+    recurrent-kind blocks are unchanged — their fixed-size state rides in
+    ``cache`` (the device state store) exactly like the dense path."""
+    if kind not in ATTN_KINDS:
+        return block_step(cfg, kind, p, h, cache, pos)
+    hn = m.rms_norm(h, p["norm1"], cfg.norm_eps)
+    inner, new_kv = m.paged_attention_step(p["inner"], hn, planes, meta,
+                                           pos, cfg, backend=backend)
+    return _join_block(cfg, p, h, hn, inner), new_kv
 
 
 # ---------------------------------------------------------------- forward
@@ -346,6 +366,128 @@ def decode_step(cfg: ModelConfig, params: dict, caches: dict,
     return logits, {"prefix": new_prefix, "blocks": new_caches}
 
 
+def decode_step_paged(cfg: ModelConfig, params: dict, planes: dict,
+                      states: dict, meta: dict, tokens: jax.Array,
+                      pos: jax.Array, backend: str | None = None):
+    """One decode step with the KV cache *device-resident in page form*.
+
+    The dense-cache pytree of ``decode_step`` is replaced by:
+
+    * ``planes`` — the ``DevicePoolPlanes`` dict (pool payload + stacked
+      activation tables), shared by every attention layer;
+    * ``states`` — the device state store (``init_state_store``): dense
+      fixed-size recurrent/mLSTM/sLSTM states, ``{}`` at attention
+      positions;
+    * ``meta``  — per-step page-table metadata (``PagedKVCache.step_meta``):
+      tiny i32 arrays, the only per-step host->device upload.
+
+    Attention layers read pages through the fused gather-decode+attention
+    kernel and *return* the new token's quantized K/V instead of writing a
+    dense cache; the engine scatters those into the pool planes on-device
+    (``device_append``).  Returns (logits, new_cache) where new_cache
+    holds kv dicts at attention positions and updated states elsewhere.
+    """
+    h = params["embed"][tokens].astype(jnp.bfloat16)
+    if cfg.frontend == "vision":
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    new_prefix = []
+    for kind, p, mt, st in zip(cfg.prefix_pattern, params.get("prefix", []),
+                               meta["prefix"], states["prefix"]):
+        h, new = block_step_paged(cfg, kind, p, h, planes, mt, st, pos,
+                                  backend)
+        new_prefix.append(new)
+
+    def cycle_fn(h, xs):
+        p_cycle, m_cycle, s_cycle = xs
+        news = []
+        for i, kind in enumerate(cfg.cycle):
+            h, new = block_step_paged(cfg, kind, p_cycle[i], h, planes,
+                                      m_cycle[i], s_cycle[i], pos, backend)
+            news.append(new)
+        return h, tuple(news)
+
+    h, new_blocks = jax.lax.scan(
+        cycle_fn, h, (params["blocks"], meta["blocks"], states["blocks"]))
+    h = m.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = _head(cfg, params, h)
+    return logits, {"prefix": new_prefix, "blocks": new_blocks}
+
+
+def init_state_store(cfg: ModelConfig, batch: int) -> dict:
+    """Device-resident store for recurrent-kind layer states (the paged
+    decode path keeps them on device between steps — no per-step
+    ``device_get``/re-upload).  Attention positions hold ``{}``: their
+    state lives in the page pool."""
+    n = cfg.n_cycles
+    prefix = [({} if kind in ATTN_KINDS
+               else _init_block_cache(cfg, kind, batch, 1))
+              for kind in cfg.prefix_pattern]
+    blocks = []
+    for kind in cfg.cycle:
+        if kind in ATTN_KINDS:
+            blocks.append({})
+        else:
+            one = _init_block_cache(cfg, kind, batch, 1)
+            blocks.append(jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (n, *x.shape)), one))
+    return {"prefix": prefix, "blocks": tuple(blocks)}
+
+
+def states_from_step(cfg: ModelConfig, new_cache: dict) -> dict:
+    """Project ``decode_step_paged``'s output onto the state-store shape:
+    keep the updated recurrent-kind states (still on device), drop the
+    attention entries (their K/V went to the pool via the append)."""
+    prefix = [({} if kind in ATTN_KINDS else c)
+              for kind, c in zip(cfg.prefix_pattern, new_cache["prefix"])]
+    blocks = tuple(({} if kind in ATTN_KINDS else c)
+                   for kind, c in zip(cfg.cycle, new_cache["blocks"]))
+    return {"prefix": prefix, "blocks": blocks}
+
+
+def device_append(cfg: ModelConfig, planes: dict, new_cache: dict,
+                  targets: dict) -> dict:
+    """On-device page append: scatter every attention layer's new-token
+    K/V (from ``decode_step_paged``) into the HOT token planes at the
+    (page, offset) slots claimed by ``PagedKVCache.claim_append_targets``.
+
+    Pure jnp under jit — one dynamic-slice scatter per plane per step, no
+    host round-trip.  Inactive slots carry the out-of-range page sentinel
+    and are dropped by ``mode="drop"``."""
+    rows = {"k": [], "v": [], "k_scale": [], "v_scale": []}
+    pids, offs = [], []
+
+    def add(entry, tg):
+        pid, off = tg
+        for f in rows:
+            x = entry[f]                 # [B, ...] or [n_stack, B, ...]
+            tail = 2 if f in ("k", "v") else 1    # [H, dh] vs [H]
+            rows[f].append(x.reshape(-1, *x.shape[x.ndim - tail:]))
+        pids.append(jnp.asarray(pid).reshape(-1))
+        offs.append(jnp.asarray(off).reshape(-1))
+
+    for kind, entry, tg in zip(cfg.prefix_pattern, new_cache["prefix"],
+                               targets["prefix"]):
+        if kind in ATTN_KINDS:
+            add(entry, tg)
+    for c, kind in enumerate(cfg.cycle):
+        if kind in ATTN_KINDS:
+            add(new_cache["blocks"][c], targets["blocks"][c])
+    if not pids:
+        return planes
+    pid = jnp.concatenate(pids).astype(jnp.int32)
+    off = jnp.concatenate(offs).astype(jnp.int32)
+    out = dict(planes)
+    out["tok_k"] = planes["tok_k"].at[pid, off].set(
+        jnp.concatenate(rows["k"]), mode="drop")
+    out["tok_v"] = planes["tok_v"].at[pid, off].set(
+        jnp.concatenate(rows["v"]), mode="drop")
+    out["tok_sk"] = planes["tok_sk"].at[pid, off].set(
+        jnp.concatenate(rows["k_scale"]), mode="drop")
+    out["tok_sv"] = planes["tok_sv"].at[pid, off].set(
+        jnp.concatenate(rows["v_scale"]), mode="drop")
+    return out
+
+
 def extend_caches(cfg: ModelConfig, caches: dict, max_len: int) -> dict:
     """Pad prefill caches (global-attention k/v of length S) to decode
     capacity ``max_len``.  Rolling/local and recurrent caches are already
@@ -391,6 +533,42 @@ def _layer_kinds(cfg: ModelConfig) -> list[str]:
     return list(cfg.prefix_pattern) + [
         cfg.cycle[c] for j in range(cfg.n_cycles)
         for c in range(len(cfg.cycle))]
+
+
+class DevicePoolPlanes:
+    """Device-resident mirror of the ``KVPagePool`` storage planes.
+
+    Kind-split (``_k`` / ``_v`` arrays instead of a leading kind axis) so
+    the fused kernel's BlockSpecs index pages directly.  The decode hot
+    path reads these and the on-device append writes them; the host pool
+    stays the metadata + seal/pack source of truth, synced per *page
+    event* (seal, pack, calibration, prefill ingest) rather than per step
+    — that sync is the only payload that ever crosses host<->device in
+    steady-state decode."""
+
+    def __init__(self, pool: m.KVPagePool, n_tables: int):
+        p, ps = pool.num_pages, pool.page_size
+        h, dh, s = pool.kv_heads, pool.head_dim, pool.n_streams
+        z = jnp.zeros
+        self.planes: dict[str, jax.Array] = {
+            "tok_k": z((p, ps, h, dh), jnp.int8),
+            "tok_v": z((p, ps, h, dh), jnp.int8),
+            "tok_sk": z((p, ps, h), F32),
+            "tok_sv": z((p, ps, h), F32),
+            "cold_k": z((p, ps, h, dh), jnp.int8),
+            "cold_v": z((p, ps, h, dh), jnp.int8),
+            "pscale_k": z((p, h), F32),
+            "pscale_v": z((p, h), F32),
+            "sym_k": z((p, pool.sym_words, s), jnp.uint32),
+            "sym_v": z((p, pool.sym_words, s), jnp.uint32),
+            "ofs_k": z((p, pool.ofs_words, s), jnp.uint32),
+            "ofs_v": z((p, pool.ofs_words, s), jnp.uint32),
+            "stored_k": z((p, s), jnp.int32),
+            "stored_v": z((p, s), jnp.int32),
+            "vm": z((n_tables, 17), jnp.int32),
+            "ol": z((n_tables, 16), jnp.int32),
+            "cum": z((n_tables, 17), jnp.int32),
+        }
 
 
 class PagedKVCache:
@@ -472,6 +650,16 @@ class PagedKVCache:
                         "kv_raw_bytes_local": 0, "kv_read_bytes_local": 0,
                         "state_raw_bytes": 0, "state_snapshot_bytes": 0,
                         "state_snapshots": 0}
+        # host<->device transfer accounting: every byte the KV path moves
+        # across the boundary goes through _fetch/_put so the decode bench
+        # and the steady-state zero-device_get guard have ground truth
+        self.transfers = {"h2d_bytes": 0, "d2h_bytes": 0,
+                          "h2d_calls": 0, "d2h_calls": 0}
+        # device-resident mode (fused decode): plane mirror + state store
+        self.dev: DevicePoolPlanes | None = None
+        self.dev_states: dict | None = None
+        self._dirty: set[int] = set()       # pages needing a device sync
+        self._tables_dirty = False
 
     # ------------------------------------------------------------ sizing
     def pages_per_seq(self, n_tokens: int) -> int:
@@ -557,8 +745,10 @@ class PagedKVCache:
         del self.seq_len[rid]
 
     # ------------------------------------------------------------ appends
-    def _append_layer_token(self, rid: int, layer: int, kq, vq, ks, vs,
-                            t: int) -> None:
+    def _claim_page(self, rid: int, layer: int, t: int) -> int:
+        """Page that token ``t`` of (rid, layer) writes into, allocating a
+        fresh one at page boundaries (shared by the host append path and
+        the on-device append's target claim)."""
         pids = self.page_tables[rid][layer]
         if t % self.page_size == 0:
             if t // self.page_size != self.page_base[rid][layer] + len(pids):
@@ -571,7 +761,11 @@ class PagedKVCache:
                 raise RuntimeError(
                     "page pool exhausted mid-flight (admission must reserve)")
             pids.append(pid)
-        pid = pids[-1]
+        return pids[-1]
+
+    def _append_layer_token(self, rid: int, layer: int, kq, vq, ks, vs,
+                            t: int) -> None:
+        pid = self._claim_page(rid, layer, t)
         self.pool.write_token(pid, kq, vq, ks, vs)
         if int(self.pool.fill[pid]) == self.page_size:
             self._seal(layer, pid)
@@ -659,13 +853,13 @@ class PagedKVCache:
                     x = leaf[f]
                     if j is None:
                         vals[f] = np.asarray(
-                            jax.device_get(x[barange, slot_idx]))[None]
+                            self._fetch(x[barange, slot_idx]))[None]
                     else:
                         vals[f] = np.asarray(
-                            jax.device_get(x[:, barange, slot_idx]))
+                            self._fetch(x[:, barange, slot_idx]))
             else:
-                vals = {f: (np.asarray(jax.device_get(x))[None] if j is None
-                            else np.asarray(jax.device_get(x)))
+                vals = {f: (np.asarray(self._fetch(x))[None] if j is None
+                            else np.asarray(self._fetch(x)))
                         for f, x in leaf.items()}
             # vals leaves are [n_stack(or 1), B, ...]; distribute to layers
             if j is None:
@@ -710,7 +904,7 @@ class PagedKVCache:
 
             def one(f, leaf=leaf, j=j):
                 x = leaf[f] if j is None else leaf[f][j]
-                return np.asarray(jax.device_get(x))[0]
+                return np.asarray(self._fetch(x))[0]
 
             k, v = one("k"), one("v")                  # [S or window, H, dh]
             ksc, vsc = one("k_scale"), one("v_scale")
@@ -734,7 +928,7 @@ class PagedKVCache:
         for layer in self.state_layers:
             leaf, j = self._layer_cache(caches, layer)
             self.states[rid][layer] = {
-                f: np.asarray(jax.device_get(x if j is None else x[j]))[0]
+                f: np.asarray(self._fetch(x if j is None else x[j]))[0]
                 for f, x in leaf.items()}
         self.seq_len[rid] = s
         self.evict_rolled(rid)
@@ -758,6 +952,7 @@ class PagedKVCache:
             scale2[kind] = sc
         pool.seal(pid, q2, scale2)
         self._cold[layer].add(pid)
+        self._mark_dirty(pid)
         if self.tables[layer][0] is not None:
             self._pack(layer, pid)
             return
@@ -770,6 +965,7 @@ class PagedKVCache:
                 self.tables[layer][kind] = ctables.find_table(
                     self.hists[layer, kind], bits=8, is_activation=True)
             self._table_stack = None
+            self._tables_dirty = True
             self.traffic["kv_table_bytes"] += 2 * TABLE_OVERHEAD_BITS // 8
             for cold_pid in sorted(self._cold[layer]):
                 self._pack(layer, cold_pid)
@@ -791,6 +987,7 @@ class PagedKVCache:
         pool.pack(pid, tuple(np.stack([o[i] for o in outs])
                              for i in range(5)))
         self._cold[layer].discard(pid)
+        self._mark_dirty(pid)
         self.traffic["kv_pages_packed"] += 1
 
     def _tables_stacked(self):
@@ -861,6 +1058,333 @@ class PagedKVCache:
                 flat[off:off + n].reshape(shape).copy()
             off += n
 
+    # ---------------------------------------------- device-resident mode
+    def _fetch(self, tree):
+        """``jax.device_get`` with transfer accounting (pytrees allowed,
+        one call).  Every device->host byte the KV path moves goes
+        through here — the decode bench and the steady-state
+        zero-``device_get`` guard read these counters."""
+        out = jax.device_get(tree)
+        self.transfers["d2h_calls"] += 1
+        self.transfers["d2h_bytes"] += sum(
+            np.asarray(x).nbytes for x in jax.tree.leaves(out))
+        return out
+
+    def _put(self, x):
+        """host -> device with transfer accounting (counterpart of
+        ``_fetch``)."""
+        arr = jnp.asarray(x)
+        self.transfers["h2d_calls"] += 1
+        self.transfers["h2d_bytes"] += int(arr.size) * arr.dtype.itemsize
+        return arr
+
+    def enable_device_pool(self, max_batch: int) -> None:
+        """Switch to device-resident decode: mirror the pool planes on
+        device (read by the fused kernel, written by the on-device
+        append) and allocate the device state store for recurrent-kind
+        layers.  Host numpy remains the seal/pack + invariant mirror."""
+        self.dev = DevicePoolPlanes(self.pool, max(1, 2 * self.n_layers))
+        self.dev_states = init_state_store(self.cfg, max_batch)
+        self._sync_tables_to_device()
+
+    def _mark_dirty(self, pid: int) -> None:
+        if self.dev is not None:
+            self._dirty.add(pid)
+
+    def _sync_tables_to_device(self) -> None:
+        vm, ol, cm = self._tables_stacked()
+        d = self.dev.planes
+        n = vm.shape[0]
+        d["vm"] = d["vm"].at[:n].set(self._put(vm))
+        d["ol"] = d["ol"].at[:n].set(self._put(ol))
+        d["cum"] = d["cum"].at[:n].set(self._put(cm))
+        self._tables_dirty = False
+
+    def sync_pages_to_device(self, pids) -> None:
+        """Push pages' current-state payloads into the device mirror —
+        called at page *events* (seal, pack, prefill ingest), never in
+        the steady-state decode loop.  Batched per lifecycle state: one
+        scatter per plane per group, not per page (a seal step syncs
+        every layer's page at once)."""
+        pool, d = self.pool, self.dev.planes
+        groups: dict[int, list[int]] = {}
+        for pid in pids:
+            groups.setdefault(int(pool.state[pid]), []).append(pid)
+        for st, group in groups.items():
+            if st == m.PAGE_FREE:
+                continue
+            idx = jnp.asarray(np.asarray(group, np.int32))
+            if st == m.PAGE_HOT:
+                d["tok_k"] = d["tok_k"].at[idx].set(
+                    self._put(pool.tok_q[0, group]))
+                d["tok_v"] = d["tok_v"].at[idx].set(
+                    self._put(pool.tok_q[1, group]))
+                d["tok_sk"] = d["tok_sk"].at[idx].set(
+                    self._put(pool.tok_scale[0, group]))
+                d["tok_sv"] = d["tok_sv"].at[idx].set(
+                    self._put(pool.tok_scale[1, group]))
+            elif st == m.PAGE_COLD:
+                d["cold_k"] = d["cold_k"].at[idx].set(
+                    self._put(pool.cold_q[0, group]))
+                d["cold_v"] = d["cold_v"].at[idx].set(
+                    self._put(pool.cold_q[1, group]))
+            elif st == m.PAGE_PACKED:
+                d["sym_k"] = d["sym_k"].at[idx].set(
+                    self._put(pool.sym[0, group]))
+                d["sym_v"] = d["sym_v"].at[idx].set(
+                    self._put(pool.sym[1, group]))
+                d["ofs_k"] = d["ofs_k"].at[idx].set(
+                    self._put(pool.ofs[0, group]))
+                d["ofs_v"] = d["ofs_v"].at[idx].set(
+                    self._put(pool.ofs[1, group]))
+                d["stored_k"] = d["stored_k"].at[idx].set(
+                    self._put(pool.stored[0, group].astype(np.int32)))
+                d["stored_v"] = d["stored_v"].at[idx].set(
+                    self._put(pool.stored[1, group].astype(np.int32)))
+            if st in (m.PAGE_COLD, m.PAGE_PACKED):
+                d["pscale_k"] = d["pscale_k"].at[idx].set(
+                    self._put(pool.page_scale[0, group]))
+                d["pscale_v"] = d["pscale_v"].at[idx].set(
+                    self._put(pool.page_scale[1, group]))
+
+    def _flush_device(self) -> None:
+        if self.dev is None:
+            return
+        if self._tables_dirty:
+            self._sync_tables_to_device()
+        if self._dirty:
+            self.sync_pages_to_device(sorted(self._dirty))
+            self._dirty.clear()
+
+    def sync_request_to_device(self, rid: int) -> None:
+        """Admission-time push: every page of a freshly-ingested request
+        (HOT partials included) plus any pending seal/pack results."""
+        if self.dev is None:
+            return
+        self._flush_device()
+        self.sync_pages_to_device(sorted(
+            {pid for layer in self.attn_layers
+             for pid in self.page_tables[rid][layer]}))
+
+    def sync_hot_to_host(self, slot_rids=None) -> None:
+        """Pull device-resident HOT page payloads back into the host pool
+        mirror — the materialize/oracle path and state snapshots need the
+        host view; a steady-state decode step never calls this."""
+        if self.dev is None:
+            return
+        rids = [r for r in (slot_rids if slot_rids is not None
+                            else list(self.page_tables)) if r is not None]
+        pids = sorted({pid for rid in rids for layer in self.attn_layers
+                       for pid in self.page_tables[rid][layer]
+                       if self.pool.state[pid] == m.PAGE_HOT
+                       and self.pool.fill[pid] > 0})
+        if not pids:
+            return
+        d = self.dev.planes
+        idx = jnp.asarray(np.asarray(pids, np.int32))
+        kq, vq, ks, vs = self._fetch((d["tok_k"][idx], d["tok_v"][idx],
+                                      d["tok_sk"][idx], d["tok_sv"][idx]))
+        for i, pid in enumerate(pids):
+            self.pool.tok_q[0, pid] = kq[i]
+            self.pool.tok_q[1, pid] = vq[i]
+            self.pool.tok_scale[0, pid] = ks[i]
+            self.pool.tok_scale[1, pid] = vs[i]
+
+    # ------------------------------------------- device-resident appends
+    def claim_append_targets(self, slot_rids: list) -> dict:
+        """Host-metadata half of the on-device append: allocate/locate the
+        (page, offset) each attention layer's new token scatters into.
+        Returns a pytree shaped like ``decode_step_paged``'s new-cache
+        (``None`` at recurrent-kind positions); idle slots carry the
+        out-of-range page sentinel, dropped by the scatter."""
+        b = len(slot_rids)
+        sentinel = self.pool.num_pages
+        per_layer = {layer: (np.full(b, sentinel, np.int32),
+                             np.zeros(b, np.int32))
+                     for layer in self.attn_layers}
+        for slot, rid in enumerate(slot_rids):
+            if rid is None:
+                continue
+            t = self.seq_len[rid]
+            for layer in self.attn_layers:
+                per_layer[layer][0][slot] = self._claim_page(rid, layer, t)
+                per_layer[layer][1][slot] = t % self.page_size
+        prefix = [(self._put(per_layer[i][0]), self._put(per_layer[i][1]))
+                  if kind in ATTN_KINDS else None
+                  for i, kind in enumerate(self.cfg.prefix_pattern)]
+        blocks = []
+        for c, kind in enumerate(self.cfg.cycle):
+            if kind not in ATTN_KINDS:
+                blocks.append(None)
+                continue
+            layers = [self.n_prefix + j * self.n_cycle + c
+                      for j in range(self.n_stack)]
+            blocks.append((self._put(np.stack([per_layer[l][0]
+                                               for l in layers])),
+                           self._put(np.stack([per_layer[l][1]
+                                               for l in layers]))))
+        return {"prefix": prefix, "blocks": tuple(blocks)}
+
+    def note_appended(self, slot_rids: list) -> None:
+        """Metadata half of the on-device append (fused-path analogue of
+        ``append_token``): advance fills and sequence lengths, seal pages
+        that just filled (pulling their payload from the device mirror —
+        the only steady-state d2h, amortized over ``page_size`` steps),
+        evict rolled-out pages, and push freshly sealed/packed planes
+        back to the device."""
+        for slot, rid in enumerate(slot_rids):
+            if rid is None:
+                continue
+            for layer in self.attn_layers:
+                pid = self.page_tables[rid][layer][-1]
+                self.pool.note_device_write(pid)
+                if int(self.pool.fill[pid]) == self.page_size:
+                    self._seal_from_device(layer, pid)
+            self.seq_len[rid] += 1
+            self.evict_rolled(rid)
+        self._flush_device()
+
+    def _seal_from_device(self, layer: int, pid: int) -> None:
+        d = self.dev.planes
+        kq, vq, ks, vs = self._fetch((d["tok_k"][pid], d["tok_v"][pid],
+                                      d["tok_sk"][pid], d["tok_sv"][pid]))
+        self.pool.tok_q[0, pid] = kq
+        self.pool.tok_q[1, pid] = vq
+        self.pool.tok_scale[0, pid] = ks
+        self.pool.tok_scale[1, pid] = vs
+        self._seal(layer, pid)
+
+    # ------------------------------------------- device-resident states
+    def read_state_slot(self, slot: int) -> dict:
+        """Fetch one slot's recurrent-kind states from the device store
+        (preemption/snapshot boundary — never the steady-state loop)."""
+        picked = {}
+        for layer in self.state_layers:
+            leaf, j = self._layer_cache(self.dev_states, layer)
+            picked[layer] = {f: (x[slot] if j is None else x[j, slot])
+                             for f, x in leaf.items()}
+        fetched = self._fetch(picked)
+        return {layer: {f: np.asarray(v) for f, v in d.items()}
+                for layer, d in fetched.items()}
+
+    def write_state_slot(self, slot: int, rid: int) -> None:
+        """Push ``self.states[rid]`` (prefill ingest / snapshot restore)
+        into the device state store at ``slot``."""
+        for layer in self.state_layers:
+            st = self.states[rid].get(layer)
+            if st is None:
+                raise RuntimeError(
+                    f"request {rid} has no state for layer {layer} "
+                    "(prefill not ingested?)")
+            leaf, j = self._layer_cache(self.dev_states, layer)
+            for f, v in st.items():
+                arr = self._put(np.ascontiguousarray(v))
+                leaf[f] = (leaf[f].at[slot].set(arr) if j is None
+                           else leaf[f].at[j, slot].set(arr))
+
+    def _pull_states(self, slot_rids: list) -> None:
+        if self.dev_states is None or not self.state_layers:
+            return
+        for slot, rid in enumerate(slot_rids):
+            if rid is not None and rid in self.states:
+                self.states[rid] = self.read_state_slot(slot)
+
+    # --------------------------------------------------- step metadata
+    def meta_pages(self, max_len: int) -> int:
+        """Static page-slot count of the fused kernel's grid: sized once
+        for the full context so the decode jit compiles exactly once (no
+        per-length recompiles; unused slots mask via state == FREE)."""
+        return max(1, self.pages_per_seq(max_len))
+
+    def step_meta(self, slot_rids: list, max_len: int) -> dict:
+        """Per-step page-table metadata for ``decode_step_paged`` — the
+        only per-step host->device upload of the fused path (a few i32
+        per page slot).  Also accrues the read-traffic counters the
+        materialize path would have charged (same pages are read, just
+        decoded at point of use)."""
+        b = len(slot_rids)
+        pmax = self.meta_pages(max_len)
+        ps = self.page_size
+        per_layer = {}
+        for layer in self.attn_layers:
+            per_layer[layer] = {
+                "pid": np.zeros((b, pmax), np.int32),
+                "tid": np.full((b, pmax), 2 * layer, np.int32),
+                "state": np.zeros((b, pmax), np.int32),     # FREE: masked
+                "t0": np.zeros((b, pmax), np.int32),
+                "qw": np.zeros((b, 2), np.int32),
+            }
+        for slot, rid in enumerate(slot_rids):
+            if rid is None:
+                continue
+            qpos = self.seq_len[rid]
+            for layer in self.attn_layers:
+                kind = self.layer_kinds[layer]
+                d = per_layer[layer]
+                base = self.page_base[rid][layer]
+                for k_, pid in enumerate(self.page_tables[rid][layer]):
+                    d["pid"][slot, k_] = pid
+                    d["state"][slot, k_] = int(self.pool.state[pid])
+                    d["t0"][slot, k_] = (base + k_) * ps
+                d["qw"][slot] = (qpos, self._ring(max_len)
+                                 if kind == "local" else 0)
+        self._accrue_read_traffic(slot_rids, max_len)
+
+        def pack(layer_arrs):
+            return {k: self._put(v) for k, v in layer_arrs.items()}
+
+        prefix = [pack(per_layer[i]) if kind in ATTN_KINDS else {}
+                  for i, kind in enumerate(self.cfg.prefix_pattern)]
+        blocks = []
+        for c, kind in enumerate(self.cfg.cycle):
+            if kind not in ATTN_KINDS:
+                blocks.append({})
+                continue
+            layers = [self.n_prefix + j * self.n_cycle + c
+                      for j in range(self.n_stack)]
+            blocks.append({k: self._put(np.stack([per_layer[l][k]
+                                                  for l in layers]))
+                           for k in per_layer[layers[0]]})
+        return {"prefix": prefix, "blocks": tuple(blocks)}
+
+    def _accrue_read_traffic(self, slot_rids: list, max_len: int) -> None:
+        """Charge the per-step KV read traffic (shared by materialize and
+        the fused path — both read the same pages, the fused path just
+        decodes them at point of use).  Partially-rolled-out pages of
+        local layers charge only their *live token range* — the sub-page
+        read accounting that reclaims the ``(ps-1)/window`` overhead
+        (sub-page decode itself stays whole-page)."""
+        pool, ps = self.pool, self.page_size
+        raw = {"global": 0, "local": 0}
+        read = {"global": 0, "local": 0}
+        for slot, rid in enumerate(slot_rids):
+            if rid is None:
+                continue
+            qpos = self.seq_len[rid]
+            for layer in self.attn_layers:
+                kind = self.layer_kinds[layer]
+                base = self.page_base[rid][layer]
+                for k_, pid in enumerate(self.page_tables[rid][layer]):
+                    t0 = (base + k_) * ps
+                    state = pool.state[pid]
+                    n_tok = (int(pool.fill[pid]) if state == m.PAGE_HOT
+                             else ps)
+                    if kind == "local":
+                        n_live = int(np.sum(np.arange(t0, t0 + n_tok)
+                                            >= qpos - self._ring(max_len)))
+                    else:
+                        n_live = n_tok
+                    raw[kind] += pool.dense_bytes(n_live)
+                    charged = pool.page_bytes(pid)
+                    if n_live < n_tok:
+                        charged = -(-charged * n_live // n_tok)
+                    read[kind] += charged
+        for kind in ("global", "local"):
+            self.traffic[f"kv_raw_bytes_{kind}"] += raw[kind]
+            self.traffic[f"kv_read_bytes_{kind}"] += read[kind]
+        self.traffic["kv_raw_bytes"] += raw["global"] + raw["local"]
+        self.traffic["kv_read_bytes"] += read["global"] + read["local"]
+
     # -------------------------------------------------------- materialize
     def materialize(self, slot_rids: list, max_len: int) -> dict:
         """Rebuild the dense cache pytree for the active batch.
@@ -876,6 +1400,12 @@ class PagedKVCache:
         from repro.core import quant
         from repro.kernels.paged_decode import gather_bucket, gather_decode
         pool = self.pool
+        if self.dev is not None:
+            # device-resident mode: HOT payloads + states live on device;
+            # the materialize/oracle path needs the host mirror current
+            self.sync_hot_to_host(slot_rids)
+            self._pull_states(slot_rids)
+        self._accrue_read_traffic(slot_rids, max_len)
         b = len(slot_rids)
         h, dh, ps = pool.kv_heads, pool.head_dim, self.page_size
 
@@ -903,8 +1433,6 @@ class PagedKVCache:
                     kvs[layer][kind01, slot, a[live] % ring] = sc[live]
 
         jobs: list[tuple] = []           # (layer, pid, slot, t0, qpos)
-        raw = {"global": 0, "local": 0}
-        read = {"global": 0, "local": 0}
         for slot, rid in enumerate(slot_rids):
             if rid is None:
                 continue
@@ -917,13 +1445,6 @@ class PagedKVCache:
                     state = pool.state[pid]
                     n_tok = (int(pool.fill[pid]) if state == m.PAGE_HOT
                              else ps)
-                    if kind == "local":
-                        n_live = int(np.sum(np.arange(t0, t0 + n_tok)
-                                            >= qpos - self._ring(max_len)))
-                    else:
-                        n_live = n_tok
-                    raw[kind] += pool.dense_bytes(n_live)
-                    read[kind] += pool.page_bytes(pid)
                     if state == m.PAGE_HOT:
                         for kind01 in (0, 1):
                             place(layer, kind01, slot, t0, n_tok,
@@ -943,28 +1464,23 @@ class PagedKVCache:
             idx = np.asarray([pid for _, pid, _, _, _ in jobs], np.int32)
             g = gather_bucket(len(idx))
             pad = (0, g - len(idx))
-            idx_p = jnp.asarray(np.pad(idx, pad, mode="edge"))
+            idx_p = self._put(np.pad(idx, pad, mode="edge"))
             for kind01 in (0, 1):
                 tid = np.asarray([2 * layer + kind01
                                   for layer, *_ in jobs], np.int32)
                 out = gather_decode(
-                    jnp.asarray(pool.sym[kind01]),
-                    jnp.asarray(pool.ofs[kind01]),
-                    jnp.asarray(pool.stored[kind01]), idx_p,
-                    jnp.asarray(vm), jnp.asarray(ol), jnp.asarray(cm),
+                    self._put(pool.sym[kind01]),
+                    self._put(pool.ofs[kind01]),
+                    self._put(pool.stored[kind01]), idx_p,
+                    self._put(vm), self._put(ol), self._put(cm),
                     n_steps=pool.elems_per_stream, backend=self.backend,
-                    table_idx=jnp.asarray(np.pad(tid, pad, mode="edge")))
-                vals = np.asarray(out)[:len(jobs)].astype(np.uint8)
+                    table_idx=self._put(np.pad(tid, pad, mode="edge")))
+                vals = self._fetch(out)[:len(jobs)].astype(np.uint8)
                 q = quant.from_unsigned(vals).reshape(len(jobs), ps, h, dh)
                 for i, (layer, pid, slot, t0, qpos) in enumerate(jobs):
                     place(layer, kind01, slot, t0, ps, q[i],
                           np.broadcast_to(pool.page_scale[kind01, pid][None],
                                           (ps, h)), qpos)
-        for kind in ("global", "local"):
-            self.traffic[f"kv_raw_bytes_{kind}"] += raw[kind]
-            self.traffic[f"kv_read_bytes_{kind}"] += read[kind]
-        self.traffic["kv_raw_bytes"] += raw["global"] + raw["local"]
-        self.traffic["kv_read_bytes"] += read["global"] + read["local"]
 
         def attn_leaves(layer):
             return {"k": kvq[layer][0], "v": kvq[layer][1],
@@ -986,7 +1502,7 @@ class PagedKVCache:
         for i in range(self.n_prefix):
             leaves = (attn_leaves(i) if self.layer_kinds[i] in ATTN_KINDS
                       else state_leaves(i))
-            prefix.append({f: jnp.asarray(x) for f, x in leaves.items()})
+            prefix.append({f: self._put(x) for f, x in leaves.items()})
         blocks = []
         for c in range(self.n_cycle):
             layers = [self.n_prefix + j * self.n_cycle + c
@@ -995,6 +1511,6 @@ class PagedKVCache:
                 per = [attn_leaves(l) for l in layers]
             else:
                 per = [state_leaves(l) for l in layers]
-            blocks.append({f: jnp.asarray(np.stack([p[f] for p in per]))
+            blocks.append({f: self._put(np.stack([p[f] for p in per]))
                            for f in per[0]})
         return {"prefix": prefix, "blocks": tuple(blocks)}

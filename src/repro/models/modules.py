@@ -219,6 +219,82 @@ def attention_step(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
     return y, {"k": kc, "v": vc}
 
 
+def paged_attention_step(p: dict, x: jax.Array, planes: dict, meta: dict,
+                         pos: jax.Array, cfg: ModelConfig, *,
+                         backend: str | None = None
+                         ) -> tuple[jax.Array, dict]:
+    """Single-token decode step against the *paged* APack KV store.
+
+    The device-resident page pool (``planes``, see
+    ``model.DevicePoolPlanes``) replaces the dense cache: sealed/compressed
+    pages are read by the fused gather-decode + attention kernel
+    (``kernels/fused_page_attention.py``) which decodes each PACKED page
+    tile into VMEM scratch and accumulates its QK^T / PV contribution with
+    an online softmax — no dense cache is ever materialized.  The current
+    token's K/V is quantized exactly like the dense int8 path
+    (``_kv_quantize``), its self-attention term is merged into the
+    kernel's unnormalized ``(acc, m, l)`` state here, and the quantized
+    K/V is *returned* so the engine can append it to the pool on-device
+    (``model.device_append``) — the decode hot path never touches host
+    memory.
+
+    ``meta`` carries the per-slot page tables: ``pid``/``tid``/``state``/
+    ``t0`` i32[B, P] and ``qw`` i32[B, 2] (qpos, window — 0 for global
+    layers, the ring width for rolling ones, decided by
+    ``PagedKVCache.step_meta``); rolling layers mask evicted and
+    partially-rolled-out pages in-kernel via the absolute-position
+    window, so no ring buffer exists either.
+
+    Returns (y [B, 1, D], new-token cache dict {k, v, k_scale, v_scale}).
+    """
+    from repro.kernels.fused_page_attention import fused_page_attention
+    b = x.shape[0]
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // hkv
+    pos = jnp.broadcast_to(jnp.asarray(pos), (b,))
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    posb = pos[:, None]
+    q = rope(q, posb, cfg.rope_theta)
+    k = rope(k, posb, cfg.rope_theta)
+    qk, sk = _kv_quantize(k[:, 0])
+    qv, sv = _kv_quantize(v[:, 0])
+    kd = _kv_dequantize(qk, sk)                             # [B, Hkv, dh]
+    vd = _kv_dequantize(qv, sv)
+    ps_sz = planes["tok_k"].shape[1]
+    n_streams = planes["sym_k"].shape[2]
+    n_steps = (ps_sz * hkv * dh) // max(n_streams, 1)
+    kmeta = jnp.stack([meta["state"], meta["t0"]], axis=-1)
+    acc, m_run, l_run = fused_page_attention(
+        q[:, 0].astype(F32), meta["pid"], meta["tid"], kmeta, meta["qw"],
+        planes, n_steps=n_steps, num_heads=h,
+        softcap=float(cfg.logit_softcap), backend=backend)
+    # merge the current token's self-attention term (position == qpos,
+    # always in-window) into the unnormalized online-softmax state, then
+    # normalize — the kernel never divides, so fully-masked page sets
+    # (fresh slots) are safe.
+    q3 = q[:, 0].reshape(b, hkv, g, dh).astype(F32)
+    s_self = jnp.einsum("bkgd,bkd->bkg", q3, kd) * (dh ** -0.5)
+    if cfg.logit_softcap > 0:
+        s_self = cfg.logit_softcap * jnp.tanh(s_self / cfg.logit_softcap)
+    accr = acc.reshape(b, hkv, g, dh)
+    mr = m_run.reshape(b, hkv, g)
+    lr = l_run.reshape(b, hkv, g)
+    m_tot = jnp.maximum(mr, s_self)
+    alpha = jnp.exp(mr - m_tot)
+    w_self = jnp.exp(s_self - m_tot)
+    l_tot = lr * alpha + w_self
+    out = (accr * alpha[..., None] + w_self[..., None] * vd[:, :, None, :]) \
+        / l_tot[..., None]
+    y = jnp.einsum("bhk,hkd->bd", out.reshape(b, h, dh).astype(x.dtype),
+                   p["wo"].astype(x.dtype))[:, None, :]
+    return y, {"k": qk, "v": qv, "k_scale": sk, "v_scale": sv}
+
+
 def init_attention_cache(cfg: ModelConfig, batch: int, seq_len: int, *,
                          local: bool, dtype=BF16) -> dict:
     sc = min(cfg.window_size, seq_len) if local else seq_len
@@ -766,6 +842,23 @@ class KVPagePool:
         self.tok_q[1, pid, off] = vq
         self.tok_scale[0, pid, off] = ks
         self.tok_scale[1, pid, off] = vs
+        self.fill[pid] = off + 1
+        return off
+
+    def note_device_write(self, pid: int) -> int:
+        """Metadata half of an *on-device* token append: the value was
+        scatter-written into the device plane mirror
+        (``model.device_append``), the host only advances the fill count.
+        Same invariants as ``write_token`` — the host pool stays the
+        source of truth for page lifecycle even when payloads live on
+        device."""
+        if self.state[pid] != PAGE_HOT:
+            raise ValueError(
+                f"device write into non-HOT page ({self._page_state(pid)})")
+        off = int(self.fill[pid])
+        if off >= self.page_size:
+            raise RuntimeError(
+                f"device write into overfull page ({self._page_state(pid)})")
         self.fill[pid] = off + 1
         return off
 

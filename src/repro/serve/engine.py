@@ -98,7 +98,8 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params: Any, *, max_batch: int = 8,
                  max_len: int = 256, eos_id: int | None = None,
                  kv_pages: int | None = None, kv_page_size: int = 16,
-                 kv_calib_pages: int = 4, kv_backend: str | None = None):
+                 kv_calib_pages: int = 4, kv_backend: str | None = None,
+                 kv_fused: bool | None = None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -108,12 +109,18 @@ class ServeEngine:
         self.active: list[Request | None] = [None] * max_batch
         self.positions = np.zeros(max_batch, np.int32)
         self.last_tokens = np.zeros((max_batch, 1), np.int32)
+        self.last_logits = None              # device array, step output
         self.stats = {"steps": 0, "generated": 0, "completed": 0,
                       "kv_admission_blocked": 0, "preempted": 0,
                       "resumed": 0}
-        # paged, APack-compressed KV mode: the dense cache is re-materialized
-        # from the page pool every step; admission is keyed on free pages
+        # paged, APack-compressed KV mode.  Default (fused=True): the pool
+        # planes stay device-resident, attention reads pages through the
+        # fused gather-decode kernel and the new token appends on-device —
+        # no per-step host<->device payload traffic.  kv_fused=False keeps
+        # the legacy materialize path (dense cache rebuilt from the pool
+        # every step) as the parity oracle.
         self.paged = cfg.kv_cache_dtype == "apack-int8"
+        self.fused = bool(kv_fused) if kv_fused is not None else self.paged
         if self.paged:
             if kv_pages is None:
                 # enough for every slot at full context (slot-equivalent),
@@ -130,7 +137,15 @@ class ServeEngine:
             # preempted requests resume without re-prefill
             self._preempted: dict[int, tuple] = {}
             self.cache = None
+            if self.fused:
+                self.kv.enable_device_pool(max_batch)
+                self._decode_paged = jax.jit(
+                    lambda p, pl, st, mt, t, pos: M.decode_step_paged(
+                        cfg, p, pl, st, mt, t, pos, backend=kv_backend))
+                self._append = jax.jit(
+                    lambda pl, nc, tg: M.device_append(cfg, pl, nc, tg))
         else:
+            self.fused = False
             self.kv = None
             self.cache = M.init_cache(cfg, max_batch, max_len)
         self._decode = jax.jit(
@@ -191,6 +206,13 @@ class ServeEngine:
             self._reserved[req.rid] = self._pages_for(req)
             self._reserved_total += self._reserved[req.rid]
             self.kv.ingest_prefill(req.rid, caches, s)
+            if self.fused:
+                # admission-time device sync: pages (HOT partials
+                # included) + recurrent-kind states move once, here — the
+                # decode loop itself never uploads payloads
+                self.kv.sync_request_to_device(req.rid)
+                if self.kv.state_layers:
+                    self.kv.write_state_slot(slot, req.rid)
         else:
             self._write_prefill_cache(slot, caches)
         next_tok = int(jnp.argmax(logits[0, -1]))
@@ -235,6 +257,10 @@ class ServeEngine:
         req = self.active[slot]
         if req is None:
             raise ValueError(f"slot {slot} is idle, nothing to preempt")
+        if self.fused and self.kv.state_layers:
+            # states live on device in fused mode; pull this slot's copy
+            # into the host store the snapshot reads (boundary transfer)
+            self.kv.states[req.rid] = self.kv.read_state_slot(slot)
         snap = self.kv.snapshot_state(req.rid)
         # drop the dense copy: the compressed snapshot is now the only
         # home of the state, so preemption actually reclaims the memory
@@ -250,6 +276,8 @@ class ServeEngine:
     def _resume_into_slot(self, slot: int, req: Request) -> None:
         snap, pos, last = self._preempted.pop(req.rid)
         self.kv.restore_state(req.rid, snap)
+        if self.fused and self.kv.state_layers:
+            self.kv.write_state_slot(slot, req.rid)
         self.active[slot] = req
         self.positions[slot] = pos
         self.last_tokens[slot, 0] = last
@@ -282,27 +310,43 @@ class ServeEngine:
             return 0
         # per-slot positions: every sequence advances at its own offset
         # (attention_step takes a [B] position vector)
-        if self.paged:
-            # attention read: rebuild the dense int8 cache from the page
-            # pool (compressed pages decode through the Pallas kernel)
-            self.cache = self.kv.materialize(
-                [r.rid if r is not None else None for r in self.active],
-                self.max_len)
-        logits, new_cache = self._decode(self.params, self.cache,
-                                         jnp.asarray(self.last_tokens),
-                                         jnp.asarray(self.positions))
-        toks = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
-        if self.paged:
-            # the decode wrote each slot's quantized K/V at its position;
-            # extract into the paged store and drop the dense view (it is
-            # re-materialized from pages next step)
-            self.kv.append_step_tokens(
-                new_cache,
-                [r.rid if r is not None else None for r in self.active],
-                self.positions)
-            self.cache = None
+        slot_rids = [r.rid if r is not None else None for r in self.active]
+        if self.fused:
+            # device-resident hot path: pages stay on device, attention
+            # gather-decodes them in the fused kernel, and the new token's
+            # K/V scatters into the pool planes on-device — the only
+            # per-step host<->device traffic is the i32 page-table meta
+            # up and the sampled logits down
+            meta = self.kv.step_meta(slot_rids, self.max_len)
+            logits, new_cache = self._decode_paged(
+                self.params, self.kv.dev.planes, self.kv.dev_states, meta,
+                jnp.asarray(self.last_tokens), jnp.asarray(self.positions))
+            targets = self.kv.claim_append_targets(slot_rids)
+            self.kv.dev.planes = self._append(self.kv.dev.planes,
+                                              new_cache, targets)
+            self.kv.dev_states = M.states_from_step(self.cfg, new_cache)
+            self.kv.note_appended(slot_rids)
+            toks = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
         else:
-            self.cache = new_cache
+            if self.paged:
+                # attention read: rebuild the dense int8 cache from the
+                # page pool (compressed pages decode through the Pallas
+                # kernel)
+                self.cache = self.kv.materialize(slot_rids, self.max_len)
+            logits, new_cache = self._decode(self.params, self.cache,
+                                             jnp.asarray(self.last_tokens),
+                                             jnp.asarray(self.positions))
+            toks = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+            if self.paged:
+                # the decode wrote each slot's quantized K/V at its
+                # position; extract into the paged store and drop the
+                # dense view (re-materialized from pages next step)
+                self.kv.append_step_tokens(new_cache, slot_rids,
+                                           self.positions)
+                self.cache = None
+            else:
+                self.cache = new_cache
+        self.last_logits = logits
         for slot, req in enumerate(self.active):
             if req is None:
                 continue
@@ -334,4 +378,16 @@ class ServeEngine:
         out["kv_pages_allocated"] = self.kv.pool.alloc_count
         out["kv_pages_high_water"] = self.kv.pool.high_water
         out["kv_pages_evicted"] = self.kv.pool.evict_count
+        out["kv_fused"] = self.fused
+        out["transfers"] = dict(self.kv.transfers)
         return out
+
+    def sync_host_mirror(self) -> None:
+        """Fused mode: pull device-resident HOT pages and recurrent states
+        into the host mirror so ``kv.materialize`` / snapshots see the
+        live data (tests + oracle path; never called by ``step``)."""
+        if not self.fused:
+            return
+        slot_rids = [r.rid if r is not None else None for r in self.active]
+        self.kv.sync_hot_to_host(slot_rids)
+        self.kv._pull_states(slot_rids)
