@@ -94,6 +94,103 @@ def decode_throughput(arch: str = "qwen3-1.7b", fused: bool = True, *,
     }
 
 
+def drift_scenario(arch: str = "qwen3-1.7b", *, requests: int = 4,
+                   prompt_len: int = 9, max_new: int = 24) -> dict:
+    """Two-phase drifting workload: diverse prompts, then a repetitive hot
+    prompt (serving traffic narrowing onto one workload).  Runs a
+    refresh-enabled engine (adaptive table refresh + budgeted page
+    re-pack) and a frozen-table control over identical requests and
+    reports per-phase *windowed* KV read ratios — read + shipped-table
+    bytes over raw bytes moved inside the phase, so the pre-refresh window
+    is not averaged away by cumulative accounting — plus the re-pack
+    overhead per decode step and the steady-state d2h-call floor with
+    refresh active (must stay 0: sketches are fed at page-seal time and
+    re-pack reads the host pool mirror)."""
+    import jax
+    from repro import configs
+    from repro.models import model as M
+    from repro.serve import Request, ServeEngine
+
+    base = configs.get_smoke_config(arch)
+    cfg = dataclasses.replace(base, kv_cache_dtype="apack-int8")
+    params = M.init_params(base, jax.random.PRNGKey(0))
+
+    def run(refresh: bool):
+        rng = np.random.default_rng(7)
+        eng = ServeEngine(cfg, params, max_batch=requests,
+                          max_len=prompt_len + max_new + 8, kv_page_size=4,
+                          kv_calib_pages=1, kv_refresh=refresh,
+                          kv_refresh_every_pages=24, kv_refresh_min_pages=8,
+                          kv_repack_budget=32)
+        phases = ([rng.integers(0, cfg.vocab_size, prompt_len)
+                   .astype(np.int32) for _ in range(requests)],
+                  [np.full(prompt_len, 7, np.int32)
+                   for _ in range(requests)])
+        ratios, tokens, d2h_steps = [], [], []
+        for p, prompts in enumerate(phases):
+            t0 = dict(eng.kv.traffic)
+            reqs = [Request(rid=100 * p + i, prompt=pr,
+                            max_new_tokens=max_new)
+                    for i, pr in enumerate(prompts)]
+            for r in reqs:
+                eng.submit(r)
+            for _ in range(500):
+                before = eng.kv.transfers["d2h_calls"]
+                n = eng.step()
+                if n == 0 and not eng.queue:
+                    break
+                if p == 1:
+                    d2h_steps.append(eng.kv.transfers["d2h_calls"] - before)
+            else:
+                raise RuntimeError("drift engine failed to drain")
+            d = lambda k: eng.kv.traffic[k] - t0[k]
+            ratios.append((d("kv_read_bytes") + d("kv_table_bytes"))
+                          / max(d("kv_raw_bytes"), 1))
+            tokens.extend(r.tokens for r in reqs)
+        return eng, ratios, tokens, min(d2h_steps) if d2h_steps else 0
+
+    eng_f, (fa, fb), toks_f, _ = run(False)
+    eng_r, (ra, rb), toks_r, d2h = run(True)
+    if toks_f != toks_r:
+        # refresh must be invisible to sampling (losslessness) — a token
+        # divergence is a correctness bug, not a perf regression
+        raise RuntimeError("greedy tokens diverged between refresh and "
+                           "frozen-table runs")
+    steps = max(eng_r.stats["steps"], 1)
+    t = eng_r.kv.traffic
+    return {
+        "pre_refresh_ratio": ra, "post_refresh_ratio": rb,
+        "frozen_pre_ratio": fa, "frozen_post_ratio": fb,
+        "refreshes": eng_r.stats["kv_refreshes"],
+        "pages_repacked": eng_r.stats["kv_pages_repacked"],
+        "repack_bytes_per_step": (t["kv_repack_read_bytes"]
+                                  + t["kv_repack_write_bytes"]) / steps,
+        "steady_d2h_calls": d2h,
+        "generation": eng_r.kv.generation,
+    }
+
+
+def emit_drift(emit, d: dict) -> None:
+    emit("decode/drift_kv_ratio/pre_refresh", 0.0,
+         f"phase-A window ratio, refresh engine "
+         f"(frozen control: {d['frozen_pre_ratio']:.4f})",
+         value=d["pre_refresh_ratio"])
+    emit("decode/drift_kv_ratio/post_refresh", 0.0,
+         f"phase-B window ratio after {d['refreshes']} refreshes / "
+         f"{d['pages_repacked']} re-packed pages (gen {d['generation']})",
+         value=d["post_refresh_ratio"])
+    emit("decode/drift_kv_ratio/frozen_control", 0.0,
+         "phase-B window ratio with tables frozen at first calibration",
+         value=d["frozen_post_ratio"])
+    emit("decode/drift_repack_bytes_per_step", 0.0,
+         "re-pack read+write overhead amortized over decode steps",
+         value=float(d["repack_bytes_per_step"]))
+    emit("decode/drift_steady_d2h_calls", 0.0,
+         "min per-step device_get calls with refresh active (0 = "
+         "device-resident loop survives refresh)",
+         value=float(d["steady_d2h_calls"]))
+
+
 def main(emit) -> None:
     rows = {}
     for fused in (False, True):
@@ -115,3 +212,24 @@ def main(emit) -> None:
     emit("decode/fused_speedup", 0.0,
          f"materialize/fused step-time ratio; transfer shrink "
          f"{shrink:.1f}x", value=speedup)
+    emit_drift(emit, drift_scenario())
+
+
+if __name__ == "__main__":
+    # standalone entry: `python -m benchmarks.bench_decode --drift` runs
+    # just the drift scenario (the full module runs via benchmarks.run)
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--drift", action="store_true",
+                    help="run only the two-phase drift workload")
+    args = ap.parse_args()
+
+    def _emit(name, us, derived, value=None):
+        print(f"{name},{us:.1f},{derived}"
+              + (f",value={value}" if value is not None else ""), flush=True)
+
+    if args.drift:
+        emit_drift(_emit, drift_scenario())
+    else:
+        main(_emit)

@@ -259,6 +259,38 @@ def find_table(hist: np.ndarray, bits: int = 8, is_activation: bool = False,
                       mode="activation" if is_activation else "weight")
 
 
+def expected_bits_per_value(hist: np.ndarray, table: ApackTable) -> float:
+    """Entropy-model estimate of coded bits/value for data distributed as
+    ``hist`` when coded with ``table``.
+
+    Per value ``v`` in symbol range ``s``: ``-log2(pcount[s] / 1024)``
+    ideal-AC symbol bits plus ``ol[s]`` verbatim offset bits.  Values whose
+    range holds zero probability counts are unencodable in AC; the encoder
+    falls back to stored mode for such streams, so the estimate clamps at
+    ``bits`` (the stored-mode width) — this is exactly the "degrade toward
+    stored-mode widths" failure mode of a drifted table, which makes the
+    clamped estimate the drift-monitor cost function: the ratio of this
+    number on a *recent* histogram vs. the histogram the table was built
+    from is the compression-ratio regression a refresh trigger watches.
+
+    O(2^bits) numpy; cheap enough to run per drift check."""
+    hist = np.asarray(hist, np.float64)
+    total = hist.sum()
+    if total == 0:
+        return 0.0
+    nvals = hist.shape[0]
+    v_min = np.asarray(table.v_min[:N_SYMBOLS])
+    # symbol_of(v): largest s with v_min[s] <= v
+    sym = np.searchsorted(v_min, np.arange(nvals), side="right") - 1
+    pcount = np.diff(np.asarray(table.cum, np.float64))
+    ol = np.asarray(table.ol, np.float64)
+    per_sym = np.where(pcount > 0,
+                       -np.log2(np.maximum(pcount, 1) / PCOUNT_TOTAL)
+                       + ol, np.inf)
+    per_val = np.minimum(per_sym[sym], float(table.bits))
+    return float(np.sum(hist * per_val) / total)
+
+
 def uniform_table(bits: int = 8) -> ApackTable:
     """The search's starting point — also the worst-case/fallback table."""
     nvals = 1 << bits

@@ -11,9 +11,13 @@ Grid is ``(jobs, pages)`` with pages innermost; a job is one (batch slot)
 of one attention layer.  Two scalar-prefetch vectors drive the BlockSpec
 index maps exactly like ``kernels/paged_decode.py``: ``page_idx`` selects
 which pool page each grid step DMAs, ``table_idx`` selects the K-table row
-of the stacked per-(layer, kind) activation tables (the V row is always
-``table_idx + 1`` — tables are stacked ``[2 * n_layers, ...]`` with row
-``2 * layer + kind``).
+of the stacked activation tables (the V row is always ``table_idx + 1``).
+Table rows are the flat ``(generation, layer, kind)`` address of
+``paged_decode.table_row`` — the pool is ``[(G+1) * 2 * n_layers, ...]``
+with one generation appended per table refresh, so pages packed before and
+after a refresh attend side by side in one launch, each decoding with the
+table generation it was coded under (the per-page id rides the scalar
+prefetch, nothing in the kernel body changes across refreshes).
 
 Per-page state dispatch happens in-kernel (``pl.when`` on the page
 lifecycle):

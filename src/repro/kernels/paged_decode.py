@@ -12,11 +12,20 @@ the BlockSpec index_map, so grid program ``g`` DMAs exactly page
 ``page_idx[g]``'s compressed words HBM->VMEM and decodes it with the shared
 ``decode_block`` body (one stream per lane, ``fori_loop`` over symbols).
 A *second* scalar-prefetch vector carries a per-page table id into the
-table-array BlockSpecs: pages encoded with different (layer, K/V) tables
-batch into ONE kernel launch — the engine issues two calls per step (one
-per K/V kind) instead of two per layer.  Off-chip traffic is the
-*compressed* footprint — the paper's Figure-1 saving applied to KV-cache
-decode reads instead of weight reads.
+table-array BlockSpecs: pages encoded with different tables batch into ONE
+kernel launch — the engine issues two calls per step (one per K/V kind)
+instead of two per layer.  Off-chip traffic is the *compressed* footprint —
+the paper's Figure-1 saving applied to KV-cache decode reads instead of
+weight reads.
+
+The table id is a flat ``(generation, layer, kind)`` address (``table_row``
+below) into the stacked table pool: activation tables are *refreshed* on
+drifting serving traffic (``model.PagedKVCache.maybe_refresh``), each
+refresh appending a new generation of ``2 * n_layers`` rows, and every
+PACKED page carries the generation it was coded under — so pages from
+before and after a refresh coexist in one gather/attention call and decode
+bit-exactly with *their own* table while the background re-pack migrates
+them generation by generation.
 
 Interpret mode is bit-exact with ``fastpath.decompress_np`` per page
 (tests/test_paged_kv.py); on TPU the same kernel compiles with the pages
@@ -54,6 +63,18 @@ GATHER_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024)
 # growth this tracks is process-global too.
 GATHER_BUCKET_WARN_THRESHOLD = 12
 _seen_buckets: set[int] = set()
+
+
+def table_row(gen: int, layer: int, kind: int, n_layers: int) -> int:
+    """Flat row of table ``(generation, layer, kind)`` in the stacked
+    ``[(G+1) * 2 * n_layers, ...]`` table pool.
+
+    ``kind`` (0 = K, 1 = V) is the fastest-varying axis — a hard contract:
+    ``kernels/fused_page_attention.py`` receives only the K row per page
+    and addresses the V table as ``row + 1``.  Generation is the slowest
+    axis so a refresh appends rows without renumbering existing pages'
+    table ids (old PACKED pages stay decodable mid-refresh)."""
+    return (gen * n_layers + layer) * 2 + kind
 
 
 def gather_bucket(n: int) -> int:

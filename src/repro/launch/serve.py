@@ -38,6 +38,22 @@ def main() -> None:
                     help="use the legacy materialize decode path (dense "
                          "cache rebuilt from the pool every step) instead "
                          "of the default device-resident fused path")
+    ap.add_argument("--kv-refresh", action="store_true",
+                    help="adaptive table refresh: re-calibrate activation "
+                         "tables from drift sketches and re-pack pages "
+                         "when serving traffic drifts")
+    ap.add_argument("--kv-refresh-every", type=int, default=None,
+                    metavar="PAGES",
+                    help="also refresh unconditionally every PAGES sealed "
+                         "pages per layer (default: regression trigger "
+                         "only)")
+    ap.add_argument("--kv-refresh-threshold", type=float, default=0.15,
+                    help="refresh when the drift sketch's expected coded "
+                         "size regresses this fraction past the "
+                         "calibration-time expectation")
+    ap.add_argument("--kv-repack-budget", type=int, default=4,
+                    help="max pages re-packed per decode step (amortizes "
+                         "a refresh over the serve instead of stalling)")
     args = ap.parse_args()
 
     cfg = (configs.get_smoke_config(args.arch) if args.smoke
@@ -58,7 +74,11 @@ def main() -> None:
     engine = ServeEngine(cfg, params, max_batch=args.max_batch,
                          max_len=args.prompt_len + args.max_new + 8,
                          kv_page_size=args.kv_page_size,
-                         kv_fused=not args.kv_materialize)
+                         kv_fused=not args.kv_materialize,
+                         kv_refresh=args.kv_refresh,
+                         kv_refresh_every_pages=args.kv_refresh_every,
+                         kv_refresh_threshold=args.kv_refresh_threshold,
+                         kv_repack_budget=args.kv_repack_budget)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab_size,
@@ -85,11 +105,21 @@ def main() -> None:
               f"evicted_pages={ks['kv_pages_evicted']} "
               f"pool={ks['kv_pages_high_water']}/{ks['kv_pool_pages']} pages")
         for kind, st in ks["kv_streams"].items():
+            if kind == "repack":        # dedicated refresh line below
+                continue
             r = st.get("ratio")
             print(f"  stream {kind:7s}: "
                   + " ".join(f"{k}={v}" for k, v in st.items()
                              if k != "ratio")
                   + (f" ratio={r:.3f}" if r is not None else " ratio=n/a"))
+        rp = ks["kv_repack"]
+        print(f"table refresh: {'on' if args.kv_refresh else 'off'}; "
+              f"generation={rp['generation']} "
+              f"refreshes={rp['refreshes']} "
+              f"repacked={rp['pages']} pages "
+              f"({rp['read_bytes']/1e3:.1f} kB read + "
+              f"{rp['write_bytes']/1e3:.1f} kB written, "
+              f"{rp['pending']} pending)")
         tr = ks["transfers"]
         mode = "fused (device-resident)" if ks["kv_fused"] else "materialize"
         print(f"decode path: {mode}; host<->device "

@@ -9,12 +9,15 @@ dry-run compiles and for the roofline's while-body accounting.
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from functools import partial
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.kernels.paged_decode import table_row
 
 from . import modules as m
 from . import sharding as shd
@@ -549,6 +552,7 @@ class DevicePoolPlanes:
     def __init__(self, pool: m.KVPagePool, n_tables: int):
         p, ps = pool.num_pages, pool.page_size
         h, dh, s = pool.kv_heads, pool.head_dim, pool.n_streams
+        self.n_tables = n_tables
         z = jnp.zeros
         self.planes: dict[str, jax.Array] = {
             "tok_k": z((p, ps, h, dh), jnp.int8),
@@ -569,6 +573,24 @@ class DevicePoolPlanes:
             "ol": z((n_tables, 16), jnp.int32),
             "cum": z((n_tables, 17), jnp.int32),
         }
+
+    def ensure_table_capacity(self, n_rows: int) -> bool:
+        """Grow the device table planes to hold ``n_rows`` rows (doubling,
+        so a long-running refresh schedule causes O(log generations) plane
+        reallocations / decode-jit recompiles, each at a refresh boundary
+        — never in the steady-state loop).  Returns True if reallocated;
+        the caller must then re-upload every table row."""
+        if n_rows <= self.n_tables:
+            return False
+        cap = self.n_tables
+        while cap < n_rows:
+            cap *= 2
+        self.n_tables = cap
+        z = jnp.zeros
+        self.planes["vm"] = z((cap, 17), jnp.int32)
+        self.planes["ol"] = z((cap, 16), jnp.int32)
+        self.planes["cum"] = z((cap, 17), jnp.int32)
+        return True
 
 
 class PagedKVCache:
@@ -614,11 +636,25 @@ class PagedKVCache:
 
     def __init__(self, cfg: ModelConfig, num_pages: int, *,
                  page_size: int = 16, calib_pages: int = 4,
-                 elems_per_stream: int = 128, backend: str | None = None):
+                 elems_per_stream: int = 128, backend: str | None = None,
+                 refresh_every_pages: int | None = None,
+                 refresh_threshold: float = 0.15,
+                 refresh_min_pages: int = 4):
         self.cfg = cfg
         self.page_size = page_size
         self.calib_pages = calib_pages
         self.backend = backend
+        # table-refresh policy (drift-adaptive serving): refresh a layer's
+        # tables when the drift sketch's expected coded size regresses
+        # ``refresh_threshold`` past the calibration-time expectation, or
+        # unconditionally every ``refresh_every_pages`` sealed pages; both
+        # triggers arm only after ``refresh_min_pages`` pages of sketch.
+        # Triggers are only *checked* when maybe_refresh()/refresh_step()
+        # is called (the engine's kv_refresh knob) — sketches always
+        # accumulate, so enabling refresh mid-serve needs no warmup.
+        self.refresh_every_pages = refresh_every_pages
+        self.refresh_threshold = refresh_threshold
+        self.refresh_min_pages = refresh_min_pages
         self.n_prefix = len(cfg.prefix_pattern)
         self.n_cycle = len(cfg.cycle)
         self.n_stack = cfg.n_cycles
@@ -638,7 +674,25 @@ class PagedKVCache:
         self.hists = np.zeros((self.n_layers, 2, 256), np.int64)
         self.hist_pages = np.zeros((self.n_layers, 2), np.int32)
         self._cold: list[set[int]] = [set() for _ in range(self.n_layers)]
-        self._table_stack = None          # lazy [2*n_layers, ...] np stack
+        self._packed: list[set[int]] = [set() for _ in range(self.n_layers)]
+        self._table_stack = None   # lazy [(G+1)*2*n_layers, ...] np stack
+        # generation-versioned table pool: ``self.tables`` is always the
+        # *current* generation; each refresh snapshots the previous set so
+        # pages packed under older tables keep decoding bit-exactly while
+        # the budgeted re-pack migrates them.  Table row addressing is
+        # ``paged_decode.table_row(gen, layer, kind, n_layers)``.
+        self.generation = 0
+        self._gen_snapshots: list[list[list]] = []   # per past gen: [L][2]
+        self.table_gen = np.zeros(self.n_layers, np.int32)
+        self.page_gen = np.zeros(num_pages, np.int32)
+        # drift monitor: symbol-frequency sketch of pages sealed since the
+        # layer's last (re)calibration + the expected bits/value its
+        # current table promised on the histogram it was built from
+        self.drift_hists = np.zeros((self.n_layers, 2, 256), np.int64)
+        self.drift_pages = np.zeros(self.n_layers, np.int32)
+        self.calib_bits = np.zeros((self.n_layers, 2), np.float64)
+        self._drift_changed: set[int] = set()   # sketch moved since check
+        self._repack_queue: deque[tuple[int, int]] = deque()
         self._state_templates: dict[str, dict] = {}
         self.page_tables: dict[int, list[list[int]]] = {}
         self.page_base: dict[int, list[int]] = {}   # evicted-page count
@@ -649,7 +703,15 @@ class PagedKVCache:
                         "kv_raw_bytes_global": 0, "kv_read_bytes_global": 0,
                         "kv_raw_bytes_local": 0, "kv_read_bytes_local": 0,
                         "state_raw_bytes": 0, "state_snapshot_bytes": 0,
-                        "state_snapshots": 0}
+                        "state_snapshots": 0,
+                        # table-refresh re-pack traffic: the read of the
+                        # old planes + write of the new ones.  Kept OUT of
+                        # kv_read_bytes/kv_raw_bytes — a re-pack is not an
+                        # attention read, and folding it in would
+                        # double-count the page against the stream ratios
+                        "kv_repack_read_bytes": 0, "kv_repack_write_bytes": 0,
+                        "kv_repack_pages": 0, "kv_repack_kept": 0,
+                        "kv_refresh_count": 0}
         # host<->device transfer accounting: every byte the KV path moves
         # across the boundary goes through _fetch/_put so the decode bench
         # and the steady-state zero-device_get guard have ground truth
@@ -724,6 +786,16 @@ class PagedKVCache:
         out["state"] = {"raw_bytes": raw, "snapshot_bytes": comp,
                         "snapshots": self.traffic["state_snapshots"],
                         "ratio": (comp / raw) if raw else None}
+        # table-refresh re-pack overhead: its own stream (read old planes
+        # + write new ones), never folded into the read-path ratios above
+        out["repack"] = {
+            "read_bytes": self.traffic["kv_repack_read_bytes"],
+            "write_bytes": self.traffic["kv_repack_write_bytes"],
+            "pages": self.traffic["kv_repack_pages"],
+            "kept": self.traffic["kv_repack_kept"],
+            "refreshes": self.traffic["kv_refresh_count"],
+            "generation": self.generation,
+            "pending": len(self._repack_queue)}
         return out
 
     # ----------------------------------------------------------- requests
@@ -739,6 +811,8 @@ class PagedKVCache:
         for layer, pids in enumerate(self.page_tables.pop(rid)):
             for pid in pids:
                 self._cold[layer].discard(pid)
+                self._packed[layer].discard(pid)
+                self.page_gen[pid] = 0
                 self.pool.free(pid)
         del self.page_base[rid]
         del self.states[rid]
@@ -799,6 +873,8 @@ class PagedKVCache:
             while pids and (base + 1) * ps - 1 <= qpos - self.window:
                 pid = pids.pop(0)
                 self._cold[layer].discard(pid)
+                self._packed[layer].discard(pid)
+                self.page_gen[pid] = 0
                 self.pool.evict(pid)
                 base += 1
             self.page_base[rid][layer] = base
@@ -954,6 +1030,17 @@ class PagedKVCache:
         self._cold[layer].add(pid)
         self._mark_dirty(pid)
         if self.tables[layer][0] is not None:
+            # drift monitor: every post-calibration sealed page feeds the
+            # layer's symbol-frequency sketch — the same 256-bin histogram
+            # calibration used, accumulated here where the page payload is
+            # already in host memory (zero extra transfers; in fused mode
+            # this rides the amortized seal pull)
+            for kind in (0, 1):
+                u = quant.to_unsigned(q2[kind]).reshape(-1)
+                self.drift_hists[layer, kind] += np.bincount(u,
+                                                             minlength=256)
+            self.drift_pages[layer] += 1
+            self._drift_changed.add(layer)
             self._pack(layer, pid)
             return
         for kind in (0, 1):
@@ -964,6 +1051,13 @@ class PagedKVCache:
             for kind in (0, 1):
                 self.tables[layer][kind] = ctables.find_table(
                     self.hists[layer, kind], bits=8, is_activation=True)
+                self.calib_bits[layer, kind] = \
+                    ctables.expected_bits_per_value(self.hists[layer, kind],
+                                                    self.tables[layer][kind])
+            # a late-calibrating layer installs into the *current*
+            # generation (its rows in older generations stay zero and are
+            # never referenced: no page of this layer is PACKED yet)
+            self.table_gen[layer] = self.generation
             self._table_stack = None
             self._tables_dirty = True
             self.traffic["kv_table_bytes"] += 2 * TABLE_OVERHEAD_BITS // 8
@@ -987,28 +1081,221 @@ class PagedKVCache:
         pool.pack(pid, tuple(np.stack([o[i] for o in outs])
                              for i in range(5)))
         self._cold[layer].discard(pid)
+        self._packed[layer].add(pid)
+        # stamp the generation the coding table belongs to (earliest
+        # generation holding this content — stays valid across later
+        # refreshes of *other* layers thanks to copy-forward stacking)
+        self.page_gen[pid] = int(self.table_gen[layer])
         self._mark_dirty(pid)
         self.traffic["kv_pages_packed"] += 1
 
+    @property
+    def n_table_rows(self) -> int:
+        """Rows in the stacked table pool: one ``2 * n_layers`` block per
+        generation (``table_row(gen, layer, kind)`` addressing)."""
+        return 2 * self.n_layers * (self.generation + 1)
+
+    def _table_at(self, gen: int, layer: int, kind: int):
+        """The table a page packed at generation ``gen`` was coded with."""
+        if gen < len(self._gen_snapshots):
+            return self._gen_snapshots[gen][layer][kind]
+        return self.tables[layer][kind]
+
     def _tables_stacked(self):
-        """np table arrays stacked ``[2 * n_layers, ...]``, row
-        ``2*layer + kind`` — the per-page table-id space of the batched
-        gather-decode call.  Rebuilt lazily on calibration (tables are
-        immutable once created); uncalibrated rows stay zero and are never
-        referenced (PACKED requires a table)."""
+        """np table arrays stacked ``[(G+1) * 2 * n_layers, ...]``, row
+        ``table_row(gen, layer, kind)`` — the per-page table-id space of
+        the batched gather-decode and fused-attention calls.  Generation
+        ``G`` (the last block) is the live ``self.tables``; earlier blocks
+        come from the refresh snapshots (copy-forward: a layer that did
+        not refresh at generation g repeats its previous table there, so
+        any (gen, layer) a PACKED page can reference is populated).
+        Rebuilt lazily on calibration/refresh — individual tables are
+        immutable.  Uncalibrated rows stay zero and are never referenced
+        (PACKED requires a table)."""
         if self._table_stack is None:
-            vm = np.zeros((2 * self.n_layers, 17), np.int32)
-            ol = np.zeros((2 * self.n_layers, 16), np.int32)
-            cm = np.zeros((2 * self.n_layers, 17), np.int32)
-            for layer in range(self.n_layers):
-                for kind in (0, 1):
-                    t = self.tables[layer][kind]
-                    if t is not None:
-                        a, b, c = t.as_arrays()
-                        row = 2 * layer + kind
-                        vm[row], ol[row], cm[row] = a, b, c
+            rows = self.n_table_rows
+            vm = np.zeros((rows, 17), np.int32)
+            ol = np.zeros((rows, 16), np.int32)
+            cm = np.zeros((rows, 17), np.int32)
+            for gen in range(self.generation + 1):
+                for layer in range(self.n_layers):
+                    for kind in (0, 1):
+                        t = self._table_at(gen, layer, kind)
+                        if t is not None:
+                            a, b, c = t.as_arrays()
+                            row = table_row(gen, layer, kind, self.n_layers)
+                            vm[row], ol[row], cm[row] = a, b, c
             self._table_stack = (vm, ol, cm)
         return self._table_stack
+
+    # ------------------------------------------- table refresh / re-pack
+    def drift_status(self, layer: int) -> dict | None:
+        """Drift-monitor readout for one layer: expected bits/value of the
+        post-calibration sketch under the layer's *current* table vs. what
+        the table promised on the histogram it was built from.  ``None``
+        until the layer is calibrated and ``refresh_min_pages`` pages of
+        sketch exist."""
+        from repro.core import tables as ctables
+        if self.tables[layer][0] is None:
+            return None
+        pages = int(self.drift_pages[layer])
+        if pages < self.refresh_min_pages:
+            return None
+        cur = [ctables.expected_bits_per_value(self.drift_hists[layer, k],
+                                               self.tables[layer][k])
+               for k in (0, 1)]
+        regress = max(cur[k] / max(float(self.calib_bits[layer, k]), 1e-9)
+                      for k in (0, 1))
+        return {"pages": pages, "cur_bits": cur,
+                "calib_bits": [float(b) for b in self.calib_bits[layer]],
+                "regression": regress}
+
+    def check_refresh(self) -> list[int]:
+        """Layers whose refresh trigger fired: sketch compression regressed
+        ``refresh_threshold`` past the calibration-time expectation, or
+        ``refresh_every_pages`` pages sealed since the last
+        (re)calibration.  Only layers whose sketch *moved* since the last
+        check are evaluated (triggers can only change state at a page
+        seal), so the per-decode-step call is O(1) host work on non-seal
+        steps.  ``maybe_refresh`` acts on the result."""
+        due = []
+        for layer in sorted(self._drift_changed):
+            st = self.drift_status(layer)
+            if st is None:
+                continue
+            if (self.refresh_every_pages is not None
+                    and st["pages"] >= self.refresh_every_pages):
+                due.append(layer)
+            elif st["regression"] > 1.0 + self.refresh_threshold:
+                due.append(layer)
+        self._drift_changed.clear()
+        return due
+
+    def maybe_refresh(self) -> list[int]:
+        """Check drift triggers and re-calibrate every due layer under a
+        single generation bump.  Returns the refreshed layers."""
+        due = self.check_refresh()
+        if due:
+            self._refresh(due)
+        return due
+
+    def _refresh(self, layers: list[int]) -> None:
+        """Re-calibrate ``layers`` from their drift sketches: snapshot the
+        current table set as generation ``G`` (copy-forward — unrefreshed
+        layers repeat their table there), bump to ``G+1``, install new
+        activation-mode tables via the same ``find_table`` heuristic
+        calibration used, and queue every PACKED page of the refreshed
+        layers for re-pack.  Old pages stay decodable throughout: their
+        ``page_gen`` keeps addressing the snapshot rows until the
+        (budgeted, incremental) re-pack atomically swaps their planes."""
+        from repro.core import tables as ctables
+        from repro.core.tables import TABLE_OVERHEAD_BITS
+        self._gen_snapshots.append([list(t) for t in self.tables])
+        self.generation += 1
+        for layer in layers:
+            for kind in (0, 1):
+                self.tables[layer][kind] = ctables.find_table(
+                    self.drift_hists[layer, kind], bits=8,
+                    is_activation=True)
+                self.calib_bits[layer, kind] = \
+                    ctables.expected_bits_per_value(
+                        self.drift_hists[layer, kind],
+                        self.tables[layer][kind])
+            self.table_gen[layer] = self.generation
+            self.drift_hists[layer] = 0
+            self.drift_pages[layer] = 0
+            # a refreshed table ships off-chip like the original did
+            self.traffic["kv_table_bytes"] += 2 * TABLE_OVERHEAD_BITS // 8
+            self.traffic["kv_refresh_count"] += 1
+            # newest-first: recently sealed pages are the ones whose
+            # content resembles the sketch the new table was fitted to,
+            # so they gain the most from migrating early (pool ids are
+            # allocation-ordered — an approximate recency order)
+            for pid in sorted(self._packed[layer], reverse=True):
+                self._repack_queue.append((layer, pid))
+        self._table_stack = None
+        self._tables_dirty = True
+
+    def repack_pending(self, budget: int | None = None, *,
+                       force: bool = False) -> int:
+        """Re-code up to ``budget`` queued stale pages (all of them when
+        ``budget`` is None) under their layer's current tables.  The queue
+        drains across decode steps so refresh never stalls serving; pages
+        freed/evicted or already re-packed since being queued are skipped.
+        Returns the number of pages processed (swapped + size-gate kept;
+        see ``_repack``).  ``force=True`` migrates unconditionally (e.g.
+        to drain a generation for compaction)."""
+        done = 0
+        while self._repack_queue and (budget is None or done < budget):
+            layer, pid = self._repack_queue.popleft()
+            if pid not in self._packed[layer]:
+                continue                      # freed/evicted since queued
+            if int(self.page_gen[pid]) >= int(self.table_gen[layer]):
+                continue                      # already current
+            self._repack(layer, pid, force=force)
+            done += 1
+        return done
+
+    def _repack(self, layer: int, pid: int, *, force: bool = False) -> bool:
+        """Decode one PACKED page with the table generation it was coded
+        under and re-encode with the layer's current tables.  The swap is
+        **size-gated**: if the re-code came out larger the old planes are
+        kept and ``page_gen`` stays put — an old page whose content still
+        matches its old table is already optimally coded, and the
+        generation-versioned pool exists precisely so it can stay there
+        (a later refresh re-queues and re-evaluates it).  When the swap
+        happens it is atomic (whole planes + ``page_gen`` in one host-side
+        critical section): pages are immutable and independently coded, so
+        every reader sees a consistent (planes, table) pair and decode
+        stays bit-exact mid-refresh.  Returns True if swapped."""
+        from repro.kernels import ref as _codec
+        pool = self.pool
+        old_gen = int(self.page_gen[pid])
+        old_bytes = pool.page_bytes(pid)
+        old_payload = int(pool.sym_bits[:, pid].sum()
+                          + pool.ofs_bits[:, pid].sum())
+        outs = []
+        for kind in (0, 1):
+            old_t = self._table_at(old_gen, layer, kind)
+            vals = np.asarray(_codec.decode(
+                jnp.asarray(pool.sym[kind, pid]),
+                jnp.asarray(pool.ofs[kind, pid]),
+                jnp.asarray(pool.stored[kind, pid]),
+                _codec.TableArrays.from_table(old_t),
+                pool.elems_per_stream, 8))
+            ta = _codec.TableArrays.from_table(self.tables[layer][kind])
+            planes = _codec.encode(jnp.asarray(vals.astype(np.int32)), ta,
+                                   pool.elems_per_stream, 8)
+            outs.append(tuple(np.asarray(p) for p in planes))
+        # the decode read happened regardless of the gate's verdict
+        self.traffic["kv_repack_read_bytes"] += old_bytes
+        new_payload = int(sum(int(o[2].sum()) + int(o[3].sum())
+                              for o in outs))
+        if not force and new_payload >= old_payload:
+            self.traffic["kv_repack_kept"] += 1
+            return False
+        pool.repack(pid, tuple(np.stack([o[i] for o in outs])
+                               for i in range(5)))
+        self.page_gen[pid] = int(self.table_gen[layer])
+        self._mark_dirty(pid)
+        # the re-pack write is off-chip traffic too — both legs accounted
+        # under their own counters, never folded into the attention-read
+        # stream ratios (see traffic init)
+        self.traffic["kv_repack_write_bytes"] += pool.page_bytes(pid)
+        self.traffic["kv_repack_pages"] += 1
+        return True
+
+    def refresh_step(self, budget: int | None = None) -> dict:
+        """Engine decode-loop hook: check triggers, refresh due tables
+        (one generation bump for the whole batch), re-pack up to
+        ``budget`` stale pages, and push the results to the device mirror.
+        Host-side only — no device_get; the steady-state zero-d2h
+        invariant of the fused loop is preserved with refresh active."""
+        refreshed = self.maybe_refresh()
+        repacked = self.repack_pending(budget)
+        if refreshed or repacked:
+            self._flush_device()
+        return {"refreshed_layers": refreshed, "repacked": repacked}
 
     # ------------------------------------------------- state snapshots
     def snapshot_state(self, rid: int) -> dict:
@@ -1083,7 +1370,7 @@ class PagedKVCache:
         device (read by the fused kernel, written by the on-device
         append) and allocate the device state store for recurrent-kind
         layers.  Host numpy remains the seal/pack + invariant mirror."""
-        self.dev = DevicePoolPlanes(self.pool, max(1, 2 * self.n_layers))
+        self.dev = DevicePoolPlanes(self.pool, max(1, self.n_table_rows))
         self.dev_states = init_state_store(self.cfg, max_batch)
         self._sync_tables_to_device()
 
@@ -1093,8 +1380,12 @@ class PagedKVCache:
 
     def _sync_tables_to_device(self) -> None:
         vm, ol, cm = self._tables_stacked()
-        d = self.dev.planes
         n = vm.shape[0]
+        # a refresh past the current capacity reallocates the device table
+        # planes (doubling -> O(log generations) decode-jit recompiles,
+        # each at a refresh boundary, never in the steady-state loop)
+        self.dev.ensure_table_capacity(n)
+        d = self.dev.planes
         d["vm"] = d["vm"].at[:n].set(self._put(vm))
         d["ol"] = d["ol"].at[:n].set(self._put(ol))
         d["cum"] = d["cum"].at[:n].set(self._put(cm))
@@ -1324,6 +1615,11 @@ class PagedKVCache:
                 base = self.page_base[rid][layer]
                 for k_, pid in enumerate(self.page_tables[rid][layer]):
                     d["pid"][slot, k_] = pid
+                    # K-row of the (generation, layer, kind) table id the
+                    # page was coded under (V row = +1 in-kernel); pages
+                    # from different refresh generations coexist per step
+                    d["tid"][slot, k_] = table_row(
+                        int(self.page_gen[pid]), layer, 0, self.n_layers)
                     d["state"][slot, k_] = int(self.pool.state[pid])
                     d["t0"][slot, k_] = (base + k_) * ps
                 d["qw"][slot] = (qpos, self._ring(max_len)
@@ -1466,8 +1762,9 @@ class PagedKVCache:
             pad = (0, g - len(idx))
             idx_p = self._put(np.pad(idx, pad, mode="edge"))
             for kind01 in (0, 1):
-                tid = np.asarray([2 * layer + kind01
-                                  for layer, *_ in jobs], np.int32)
+                tid = np.asarray([table_row(int(self.page_gen[pid]), layer,
+                                            kind01, self.n_layers)
+                                  for layer, pid, *_ in jobs], np.int32)
                 out = gather_decode(
                     self._put(pool.sym[kind01]),
                     self._put(pool.ofs[kind01]),

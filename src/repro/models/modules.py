@@ -892,6 +892,25 @@ class KVPagePool:
         self.cold_q[:, pid] = 0
         self.state[pid] = PAGE_PACKED
 
+    def repack(self, pid: int, planes: tuple) -> None:
+        """PACKED -> PACKED: atomically swap a page's compressed planes for
+        a re-encode under a *newer* table (table-refresh re-pack).  Same
+        payload tuple as ``pack``.  The swap is whole-page: readers either
+        see the complete old planes or the complete new ones — pages are
+        immutable and independently coded, so decode stays lossless across
+        a refresh as long as the reader's table id swaps with the planes
+        (``model.PagedKVCache`` stamps ``page_gen`` in the same host-side
+        critical section)."""
+        if self.state[pid] != PAGE_PACKED:
+            raise ValueError(
+                f"repack of non-PACKED page ({self._page_state(pid)})")
+        sym, ofs, sb, ob, st = planes
+        self.sym[:, pid] = sym
+        self.ofs[:, pid] = ofs
+        self.sym_bits[:, pid] = sb
+        self.ofs_bits[:, pid] = ob
+        self.stored[:, pid] = st
+
     # -------------------------------------------------------- accounting
     def dense_bytes(self, n_tokens: int) -> int:
         """What the dense int8 engine stores for ``n_tokens`` of one layer:

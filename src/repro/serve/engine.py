@@ -99,7 +99,11 @@ class ServeEngine:
                  max_len: int = 256, eos_id: int | None = None,
                  kv_pages: int | None = None, kv_page_size: int = 16,
                  kv_calib_pages: int = 4, kv_backend: str | None = None,
-                 kv_fused: bool | None = None):
+                 kv_fused: bool | None = None, kv_refresh: bool = False,
+                 kv_refresh_every_pages: int | None = None,
+                 kv_refresh_threshold: float = 0.15,
+                 kv_refresh_min_pages: int = 4,
+                 kv_repack_budget: int = 4):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -112,7 +116,15 @@ class ServeEngine:
         self.last_logits = None              # device array, step output
         self.stats = {"steps": 0, "generated": 0, "completed": 0,
                       "kv_admission_blocked": 0, "preempted": 0,
-                      "resumed": 0}
+                      "resumed": 0, "kv_refreshes": 0,
+                      "kv_pages_repacked": 0}
+        # adaptive table refresh: when enabled, every decode step checks
+        # the drift triggers and re-packs at most ``kv_repack_budget``
+        # stale pages, so a refresh amortizes over steps instead of
+        # stalling the batch (steady-state latency preserved; the re-pack
+        # is host-side + h2d sync only — zero device_get)
+        self.kv_refresh = kv_refresh
+        self.kv_repack_budget = kv_repack_budget
         # paged, APack-compressed KV mode.  Default (fused=True): the pool
         # planes stay device-resident, attention reads pages through the
         # fused gather-decode kernel and the new token appends on-device —
@@ -128,9 +140,12 @@ class ServeEngine:
                 # recurrent-kind layers take none
                 kv_pages = max_batch * M.PagedKVCache.pages_for_config(
                     cfg, max_len, kv_page_size)
-            self.kv = M.PagedKVCache(cfg, kv_pages, page_size=kv_page_size,
-                                     calib_pages=kv_calib_pages,
-                                     backend=kv_backend)
+            self.kv = M.PagedKVCache(
+                cfg, kv_pages, page_size=kv_page_size,
+                calib_pages=kv_calib_pages, backend=kv_backend,
+                refresh_every_pages=kv_refresh_every_pages,
+                refresh_threshold=kv_refresh_threshold,
+                refresh_min_pages=kv_refresh_min_pages)
             self._reserved: dict[int, int] = {}
             self._reserved_total = 0
             # rid -> (compressed state snapshot, position, last token):
@@ -346,6 +361,13 @@ class ServeEngine:
                 self.cache = None
             else:
                 self.cache = new_cache
+        if self.paged and self.kv_refresh:
+            # drift check + budgeted re-pack ride the decode loop: all
+            # host-side (sketches were fed at seal time), so the fused
+            # path's zero-device_get steady state survives refresh
+            rs = self.kv.refresh_step(self.kv_repack_budget)
+            self.stats["kv_refreshes"] += len(rs["refreshed_layers"])
+            self.stats["kv_pages_repacked"] += rs["repacked"]
         self.last_logits = logits
         for slot, req in enumerate(self.active):
             if req is None:
@@ -374,6 +396,7 @@ class ServeEngine:
         out = dict(self.kv.traffic)
         out["kv_ratio"] = self.kv.kv_ratio()
         out["kv_streams"] = self.kv.stream_stats()
+        out["kv_repack"] = out["kv_streams"]["repack"]
         out["kv_pool_pages"] = self.kv.pool.num_pages
         out["kv_pages_allocated"] = self.kv.pool.alloc_count
         out["kv_pages_high_water"] = self.kv.pool.high_water
