@@ -170,6 +170,111 @@ def drift_scenario(arch: str = "qwen3-1.7b", *, requests: int = 4,
     }
 
 
+def pressure_scenario(arch: str = "qwen3-1.7b", *, requests: int = 4,
+                      prompt_len: int = 8, max_new: int = 16,
+                      pool_frac: float = 0.6,
+                      slot_deadline: int = 6) -> dict:
+    """Memory-pressure workload: the same request wave served twice — an
+    uncontended control (pool sized for the full working set) and a
+    pressure run whose pool holds only ``pool_frac`` of the working-set
+    pages, with pressure escalation + a slot deadline forcing
+    preempt-with-spill rotation through the compressed host spill tier.
+
+    Graceful-degradation gates (enforced here, re-checked in CI from the
+    emitted rows): every request completes, greedy tokens are
+    bit-identical to the uncontended run (spill/readahead is lossless),
+    the steady-state decode loop still makes zero ``device_get`` calls
+    (readahead h2d rides admission events), and the spill traffic is
+    APack-compressed (spill ratio < 1.0 vs the dense working set)."""
+    import jax
+    from repro import configs
+    from repro.models import model as M
+    from repro.serve import Request, ServeEngine
+
+    base = configs.get_smoke_config(arch)
+    cfg = dataclasses.replace(base, kv_cache_dtype="apack-int8")
+    params = M.init_params(base, jax.random.PRNGKey(0))
+    max_len = prompt_len + max_new + 8
+    per_req = M.PagedKVCache.pages_for_config(
+        cfg, prompt_len + max_new, 4)
+    working = per_req * requests
+
+    def run(pages, pressure: bool):
+        eng = ServeEngine(
+            cfg, params, max_batch=requests, max_len=max_len,
+            kv_page_size=4, kv_calib_pages=2, kv_pages=pages,
+            kv_pressure=pressure,
+            slot_deadline_steps=slot_deadline if pressure else None)
+        rng = np.random.default_rng(11)
+        reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size,
+                                                   prompt_len)
+                        .astype(np.int32), max_new_tokens=max_new)
+                for i in range(requests)]
+        for r in reqs:
+            eng.submit(r)
+        per_step_d2h = []
+        for _ in range(500):
+            before = eng.kv.transfers["d2h_calls"]
+            n = eng.step()
+            if n == 0 and not eng.queue:
+                break
+            per_step_d2h.append(eng.kv.transfers["d2h_calls"] - before)
+        else:
+            raise RuntimeError("pressure engine failed to drain")
+        bad = [r.rid for r in reqs if not r.done or r.error]
+        if bad:
+            raise RuntimeError(f"requests failed under pressure: {bad}")
+        return eng, [r.tokens for r in reqs], \
+            min(per_step_d2h) if per_step_d2h else 0
+
+    _, toks_c, _ = run(None, False)                 # uncontended control
+    pages_p = max(per_req, int(np.ceil(working * pool_frac)))
+    eng, toks_p, d2h = run(pages_p, True)
+    if toks_c != toks_p:
+        # spill -> readahead -> resume must be invisible to sampling
+        raise RuntimeError("greedy tokens diverged between pressure and "
+                           "uncontended runs")
+    tr = eng.kv.traffic
+    if tr["kv_spill_pages"] == 0:
+        raise RuntimeError("pressure run never spilled — pool sizing or "
+                           "escalation is not exercising the tier")
+    return {
+        "pool_pages": pages_p, "working_set_pages": working,
+        "spilled_pages": tr["kv_spill_pages"],
+        "readahead_pages": tr["kv_readahead_pages"],
+        "spill_ratio": tr["kv_spill_bytes"] / max(tr["kv_spill_raw_bytes"],
+                                                  1),
+        "steady_d2h_calls": d2h,
+        "preemptions": eng.stats["preempted"],
+        "deadline_preempted": eng.stats["deadline_preempted"],
+        "pressure_preempted": eng.stats["pressure_preempted"],
+        "completed": eng.stats["completed"],
+        "requests": requests,
+    }
+
+
+def emit_pressure(emit, d: dict) -> None:
+    emit("decode/pressure_completed", 0.0,
+         f"requests completed with pool at "
+         f"{d['pool_pages']}/{d['working_set_pages']} working-set pages "
+         f"(tokens bit-identical to uncontended control)",
+         value=float(d["completed"] == d["requests"]))
+    emit("decode/pressure_spill_ratio", 0.0,
+         f"spilled bytes / dense working-set bytes over "
+         f"{d['spilled_pages']} spilled pages "
+         f"({d['readahead_pages']} restored by readahead)",
+         value=float(d["spill_ratio"]))
+    emit("decode/pressure_spilled_pages", 0.0,
+         f"{d['preemptions']} preemptions "
+         f"({d['deadline_preempted']} deadline, "
+         f"{d['pressure_preempted']} admission-pressure)",
+         value=float(d["spilled_pages"]))
+    emit("decode/pressure_steady_d2h_calls", 0.0,
+         "min per-step device_get calls under pressure (0 = readahead "
+         "stays off the step critical path)",
+         value=float(d["steady_d2h_calls"]))
+
+
 def emit_drift(emit, d: dict) -> None:
     emit("decode/drift_kv_ratio/pre_refresh", 0.0,
          f"phase-A window ratio, refresh engine "
@@ -213,16 +318,21 @@ def main(emit) -> None:
          f"materialize/fused step-time ratio; transfer shrink "
          f"{shrink:.1f}x", value=speedup)
     emit_drift(emit, drift_scenario())
+    emit_pressure(emit, pressure_scenario())
 
 
 if __name__ == "__main__":
-    # standalone entry: `python -m benchmarks.bench_decode --drift` runs
-    # just the drift scenario (the full module runs via benchmarks.run)
+    # standalone entry: `python -m benchmarks.bench_decode --drift` /
+    # `--pressure` run just that scenario (the full module runs via
+    # benchmarks.run)
     import argparse
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--drift", action="store_true",
                     help="run only the two-phase drift workload")
+    ap.add_argument("--pressure", action="store_true",
+                    help="run only the memory-pressure spill workload "
+                         "(pool at 60% of the working set)")
     args = ap.parse_args()
 
     def _emit(name, us, derived, value=None):
@@ -231,5 +341,7 @@ if __name__ == "__main__":
 
     if args.drift:
         emit_drift(_emit, drift_scenario())
+    elif args.pressure:
+        emit_pressure(_emit, pressure_scenario())
     else:
         main(_emit)

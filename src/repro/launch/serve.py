@@ -54,6 +54,18 @@ def main() -> None:
     ap.add_argument("--kv-repack-budget", type=int, default=4,
                     help="max pages re-packed per decode step (amortizes "
                          "a refresh over the serve instead of stalling)")
+    ap.add_argument("--kv-pages", type=int, default=None,
+                    help="page-pool size (default: worst-case for "
+                         "max_batch × max_len; smaller values exercise the "
+                         "pressure/spill path)")
+    ap.add_argument("--kv-pressure", action="store_true",
+                    help="enable pressure escalation: blocked admission "
+                         "may preempt-with-spill active slots (compressed "
+                         "host spill tier, exponential backoff)")
+    ap.add_argument("--slot-deadline", type=int, default=None,
+                    metavar="STEPS",
+                    help="preempt-with-spill any slot that decodes this "
+                         "many steps while other requests queue")
     args = ap.parse_args()
 
     cfg = (configs.get_smoke_config(args.arch) if args.smoke
@@ -78,7 +90,10 @@ def main() -> None:
                          kv_refresh=args.kv_refresh,
                          kv_refresh_every_pages=args.kv_refresh_every,
                          kv_refresh_threshold=args.kv_refresh_threshold,
-                         kv_repack_budget=args.kv_repack_budget)
+                         kv_repack_budget=args.kv_repack_budget,
+                         kv_pages=args.kv_pages,
+                         kv_pressure=args.kv_pressure,
+                         slot_deadline_steps=args.slot_deadline)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab_size,
@@ -105,7 +120,7 @@ def main() -> None:
               f"evicted_pages={ks['kv_pages_evicted']} "
               f"pool={ks['kv_pages_high_water']}/{ks['kv_pool_pages']} pages")
         for kind, st in ks["kv_streams"].items():
-            if kind == "repack":        # dedicated refresh line below
+            if kind in ("repack", "spill"):  # dedicated lines below
                 continue
             r = st.get("ratio")
             print(f"  stream {kind:7s}: "
@@ -120,6 +135,19 @@ def main() -> None:
               f"({rp['read_bytes']/1e3:.1f} kB read + "
               f"{rp['write_bytes']/1e3:.1f} kB written, "
               f"{rp['pending']} pending)")
+        sp = ks["kv_spill"]
+        spr = sp.get("ratio")
+        print(f"spill tier: {sp['pages']} pages spilled "
+              f"({sp['spill_bytes']/1e3:.1f} kB compressed vs "
+              f"{sp['raw_bytes']/1e3:.1f} kB dense, "
+              + (f"ratio={spr:.3f}" if spr is not None else "ratio=n/a")
+              + f"); readahead {sp['readahead_pages']} pages "
+              f"{sp['readahead_bytes']/1e3:.1f} kB; "
+              f"parked={sp['live_records']} "
+              f"quarantined={sp['quarantined']}; "
+              f"spill_preempt={engine.stats['pressure_preempted']}"
+              f"+{engine.stats['deadline_preempted']}ddl "
+              f"failed={engine.stats['failed']}")
         tr = ks["transfers"]
         mode = "fused (device-resident)" if ks["kv_fused"] else "materialize"
         print(f"decode path: {mode}; host<->device "

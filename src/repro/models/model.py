@@ -9,6 +9,7 @@ dry-run compiles and for the roofline's while-body accounting.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from functools import partial
 from typing import Any
@@ -639,7 +640,9 @@ class PagedKVCache:
                  elems_per_stream: int = 128, backend: str | None = None,
                  refresh_every_pages: int | None = None,
                  refresh_threshold: float = 0.15,
-                 refresh_min_pages: int = 4):
+                 refresh_min_pages: int = 4,
+                 verify_on_repack: bool = False,
+                 transfer_retries: int = 2):
         self.cfg = cfg
         self.page_size = page_size
         self.calib_pages = calib_pages
@@ -685,6 +688,20 @@ class PagedKVCache:
         self._gen_snapshots: list[list[list]] = []   # per past gen: [L][2]
         self.table_gen = np.zeros(self.n_layers, np.int32)
         self.page_gen = np.zeros(num_pages, np.int32)
+        # page metadata alongside page_gen: integrity checksum of the
+        # PACKED planes (stamped at pack/re-pack/unspill, verified on
+        # unspill and — when ``verify_on_repack`` — before every re-pack
+        # decode) and a read-clock LRU stamp driving cold-first spill
+        self.page_crc = np.zeros(num_pages, np.uint32)
+        self.page_last_read = np.zeros(num_pages, np.int64)
+        self._read_clock = 0
+        self.verify_on_repack = verify_on_repack
+        # host spill tier: compressed pages of preempted requests parked
+        # off-pool (negative page-table entries are ``-handle - 1`` refs)
+        self.spill_tier = m.HostSpillTier()
+        # fault injection (serve/faults.py) + bounded transfer retry
+        self.faults = None
+        self.transfer_retries = transfer_retries
         # drift monitor: symbol-frequency sketch of pages sealed since the
         # layer's last (re)calibration + the expected bits/value its
         # current table promised on the histogram it was built from
@@ -711,7 +728,17 @@ class PagedKVCache:
                         # double-count the page against the stream ratios
                         "kv_repack_read_bytes": 0, "kv_repack_write_bytes": 0,
                         "kv_repack_pages": 0, "kv_repack_kept": 0,
-                        "kv_refresh_count": 0}
+                        "kv_refresh_count": 0,
+                        # spill / readahead traffic: host-tier writes of
+                        # compressed pages and the batched h2d that brings
+                        # them back.  Own streams, same rule as repack —
+                        # NEVER folded into the attention-read ratios
+                        "kv_spill_bytes": 0, "kv_spill_raw_bytes": 0,
+                        "kv_spill_pages": 0, "kv_spill_calls": 0,
+                        "kv_readahead_bytes": 0, "kv_readahead_pages": 0,
+                        "kv_readahead_calls": 0,
+                        "kv_integrity_failures": 0, "kv_quarantined_pages": 0,
+                        "kv_transfer_drops": 0, "kv_transfer_retries": 0}
         # host<->device transfer accounting: every byte the KV path moves
         # across the boundary goes through _fetch/_put so the decode bench
         # and the steady-state zero-device_get guard have ground truth
@@ -796,6 +823,24 @@ class PagedKVCache:
             "refreshes": self.traffic["kv_refresh_count"],
             "generation": self.generation,
             "pending": len(self._repack_queue)}
+        # spill tier: compressed bytes parked on host vs the dense-int8
+        # working set they replace (< 1.0 == spilling compressed pays),
+        # plus the readahead leg that restores them.  Own stream — spill
+        # traffic is not an attention read
+        sp, spraw = (self.traffic["kv_spill_bytes"],
+                     self.traffic["kv_spill_raw_bytes"])
+        out["spill"] = {
+            "spill_bytes": sp, "raw_bytes": spraw,
+            "ratio": (sp / spraw) if spraw else None,
+            "pages": self.traffic["kv_spill_pages"],
+            "calls": self.traffic["kv_spill_calls"],
+            "readahead_bytes": self.traffic["kv_readahead_bytes"],
+            "readahead_pages": self.traffic["kv_readahead_pages"],
+            "readahead_calls": self.traffic["kv_readahead_calls"],
+            "live_records": self.spill_tier.live_count,
+            "live_bytes": self.spill_tier.live_bytes,
+            "integrity_failures": self.traffic["kv_integrity_failures"],
+            "quarantined": self.traffic["kv_quarantined_pages"]}
         return out
 
     # ----------------------------------------------------------- requests
@@ -810,9 +855,14 @@ class PagedKVCache:
     def release(self, rid: int) -> None:
         for layer, pids in enumerate(self.page_tables.pop(rid)):
             for pid in pids:
+                if pid < 0:                    # SPILLED: park in tier only
+                    self.spill_tier.drop(-pid - 1)
+                    continue
                 self._cold[layer].discard(pid)
                 self._packed[layer].discard(pid)
                 self.page_gen[pid] = 0
+                self.page_crc[pid] = 0
+                self.page_last_read[pid] = 0
                 self.pool.free(pid)
         del self.page_base[rid]
         del self.states[rid]
@@ -835,6 +885,11 @@ class PagedKVCache:
                 raise RuntimeError(
                     "page pool exhausted mid-flight (admission must reserve)")
             pids.append(pid)
+        if pids[-1] < 0:
+            raise m.PageIntegrityError(
+                f"append into SPILLED page of rid={rid} layer={layer} — "
+                "readahead must restore the request before it decodes",
+                rid=rid, layer=layer)
         return pids[-1]
 
     def _append_layer_token(self, rid: int, layer: int, kq, vq, ks, vs,
@@ -872,9 +927,14 @@ class PagedKVCache:
             base = self.page_base[rid][layer]
             while pids and (base + 1) * ps - 1 <= qpos - self.window:
                 pid = pids.pop(0)
+                if pid < 0:                   # SPILLED page rolled out
+                    self.spill_tier.drop(-pid - 1)
+                    base += 1
+                    continue
                 self._cold[layer].discard(pid)
                 self._packed[layer].discard(pid)
                 self.page_gen[pid] = 0
+                self.page_crc[pid] = 0
                 self.pool.evict(pid)
                 base += 1
             self.page_base[rid][layer] = base
@@ -1086,8 +1146,20 @@ class PagedKVCache:
         # generation holding this content — stays valid across later
         # refreshes of *other* layers thanks to copy-forward stacking)
         self.page_gen[pid] = int(self.table_gen[layer])
+        self.page_crc[pid] = self._plane_crc(pid)
         self._mark_dirty(pid)
         self.traffic["kv_pages_packed"] += 1
+
+    def _plane_crc(self, pid: int) -> int:
+        """Integrity checksum of a PACKED page's compressed planes + page
+        scales — the page metadata companion of ``page_gen``."""
+        pool = self.pool
+        return m.payload_crc({"sym": pool.sym[:, pid],
+                              "ofs": pool.ofs[:, pid],
+                              "sym_bits": pool.sym_bits[:, pid],
+                              "ofs_bits": pool.ofs_bits[:, pid],
+                              "stored": pool.stored[:, pid],
+                              "page_scale": pool.page_scale[:, pid]})
 
     @property
     def n_table_rows(self) -> int:
@@ -1250,6 +1322,14 @@ class PagedKVCache:
         stays bit-exact mid-refresh.  Returns True if swapped."""
         from repro.kernels import ref as _codec
         pool = self.pool
+        if (self.verify_on_repack
+                and int(self.page_crc[pid]) != self._plane_crc(pid)):
+            self.traffic["kv_integrity_failures"] += 1
+            self.traffic["kv_quarantined_pages"] += 1
+            raise m.PageIntegrityError(
+                f"PACKED page {pid} (layer {layer}) failed checksum before "
+                "re-pack — planes corrupted in place; owning request must "
+                "be failed", rid=self._owner_of(pid), layer=layer, pid=pid)
         old_gen = int(self.page_gen[pid])
         old_bytes = pool.page_bytes(pid)
         old_payload = int(pool.sym_bits[:, pid].sum()
@@ -1277,6 +1357,7 @@ class PagedKVCache:
         pool.repack(pid, tuple(np.stack([o[i] for o in outs])
                                for i in range(5)))
         self.page_gen[pid] = int(self.table_gen[layer])
+        self.page_crc[pid] = self._plane_crc(pid)
         self._mark_dirty(pid)
         # the re-pack write is off-chip traffic too — both legs accounted
         # under their own counters, never folded into the attention-read
@@ -1345,12 +1426,155 @@ class PagedKVCache:
                 flat[off:off + n].reshape(shape).copy()
             off += n
 
+    # --------------------------------------------------- host spill tier
+    def _owner_of(self, pid: int) -> int | None:
+        """Request owning a resident page (integrity-failure attribution;
+        O(requests × pages) but only runs on a corruption path)."""
+        for rid, layers in self.page_tables.items():
+            for pids in layers:
+                if pid in pids:
+                    return rid
+        return None
+
+    def spilled_pages(self, rid: int) -> int:
+        """SPILLED page-table entries of a request (kv_stats accounting)."""
+        return sum(1 for pids in self.page_tables[rid]
+                   for pid in pids if pid < 0)
+
+    def request_last_read(self, rid: int) -> int:
+        """Read-clock stamp of the request's most recently read page —
+        the cold-LRU key for pressure victim selection (lower == colder)."""
+        last = 0
+        for layer in self.attn_layers:
+            for pid in self.page_tables[rid][layer]:
+                if pid >= 0:
+                    last = max(last, int(self.page_last_read[pid]))
+        return last
+
+    def spill_request(self, rid: int) -> int:
+        """Park every page of (a preempted) request ``rid`` in the host
+        spill tier, compressed: PACKED pages move as their APack planes,
+        COLD as page-requantized int8, partial HOT as per-token int8.
+        Page-table entries become SPILLED (negative handle refs) and the
+        pool slots return to the free list — this is what turns pool
+        capacity into a cache under pressure.  Returns pages spilled.
+
+        Never call for an *active* slot: the fused kernel reads every
+        resident page each step (``step_meta`` raises on SPILLED
+        entries)."""
+        if self.dev is not None:
+            self.sync_hot_to_host([rid])      # HOT payload truth -> host
+        if self.faults is not None:
+            d = self.faults.spill_delay()
+            if d:
+                time.sleep(d)
+        n = 0
+        for layer in self.attn_layers:
+            pids = self.page_tables[rid][layer]
+            for i, pid in enumerate(pids):
+                if pid < 0:
+                    continue                  # already spilled
+                pids[i] = self._spill_page(rid, layer, pid)
+                n += 1
+        if n:
+            self.traffic["kv_spill_calls"] += 1
+        return n
+
+    def _spill_page(self, rid: int, layer: int, pid: int) -> int:
+        st, fill, payload, comp = self.pool.spill(pid)
+        raw = self.pool.dense_bytes(fill if st == m.PAGE_HOT
+                                    else self.page_size)
+        rec = m.SpillRecord(state=st, fill=fill, layer=layer,
+                            gen=int(self.page_gen[pid]), payload=payload,
+                            comp_bytes=comp, raw_bytes=raw,
+                            meta={"rid": rid, "pid": pid})
+        handle = self.spill_tier.put(rec)
+        self._cold[layer].discard(pid)
+        self._packed[layer].discard(pid)
+        self.page_gen[pid] = 0
+        self.page_crc[pid] = 0
+        self.traffic["kv_spill_bytes"] += comp
+        self.traffic["kv_spill_raw_bytes"] += raw
+        self.traffic["kv_spill_pages"] += 1
+        return -handle - 1
+
+    def unspill_request(self, rid: int) -> list[int]:
+        """Readahead: restore every SPILLED page of ``rid`` into fresh
+        pool slots ahead of the fused kernel's reads — checksum-verified,
+        then pushed to the device mirror in ONE batched h2d flush.  Runs
+        at resume/admission (an *event*), never inside the steady-state
+        decode step, so the zero-``device_get`` invariant holds.
+
+        A checksum mismatch quarantines the record in the tier and raises
+        ``PageIntegrityError`` carrying ``rid`` — the engine fails only
+        the owning request; already-restored pages stay consistent (their
+        table entries were rewritten as they were adopted) so release
+        cleans up normally and neighbors never see the corruption."""
+        restored: list[int] = []
+        for layer in self.attn_layers:
+            pids = self.page_tables[rid][layer]
+            for i, entry in enumerate(pids):
+                if entry >= 0:
+                    continue
+                handle = -entry - 1
+                try:
+                    rec = self.spill_tier.get(handle)
+                except m.PageIntegrityError as e:
+                    self.traffic["kv_integrity_failures"] += 1
+                    self.traffic["kv_quarantined_pages"] += 1
+                    raise m.PageIntegrityError(
+                        f"unspill of rid={rid} layer={layer} page {i}: "
+                        f"{e}", rid=rid, layer=layer, handle=handle) from e
+                pid = self.pool.adopt(rec.state, rec.fill, rec.payload)
+                pids[i] = pid
+                self.page_gen[pid] = rec.gen
+                if rec.state == m.PAGE_PACKED:
+                    self._packed[layer].add(pid)
+                    self.page_crc[pid] = self._plane_crc(pid)
+                    if rec.gen < int(self.table_gen[layer]):
+                        # packed under a since-refreshed table: still
+                        # decodable via its generation row; queue for the
+                        # budgeted migration like any stale resident page
+                        self._repack_queue.append((layer, pid))
+                elif rec.state == m.PAGE_COLD:
+                    self._cold[layer].add(pid)
+                    if self.tables[layer][0] is not None:
+                        self._pack(layer, pid)   # table arrived while parked
+                self._mark_dirty(pid)
+                self.spill_tier.drop(handle)
+                self.traffic["kv_readahead_pages"] += 1
+                self.traffic["kv_readahead_bytes"] += \
+                    self.pool.page_bytes(pid)
+                restored.append(pid)
+        if restored:
+            self.traffic["kv_readahead_calls"] += 1
+            self._flush_device()              # one batched h2d, pre-kernel
+        return restored
+
     # ---------------------------------------------- device-resident mode
+    def _transfer_guard(self, direction: str) -> None:
+        """Fault-injection hook on the host<->device boundary: a dropped
+        transfer is retried up to ``transfer_retries`` times (each drop
+        and retry accounted) before the failure propagates."""
+        if self.faults is None:
+            return
+        for attempt in range(self.transfer_retries + 1):
+            try:
+                self.faults.check_transfer(direction)
+                if attempt:
+                    self.traffic["kv_transfer_retries"] += attempt
+                return
+            except m.TransferDropped:
+                self.traffic["kv_transfer_drops"] += 1
+                if attempt == self.transfer_retries:
+                    raise
+
     def _fetch(self, tree):
         """``jax.device_get`` with transfer accounting (pytrees allowed,
         one call).  Every device->host byte the KV path moves goes
         through here — the decode bench and the steady-state
         zero-``device_get`` guard read these counters."""
+        self._transfer_guard("d2h")
         out = jax.device_get(tree)
         self.transfers["d2h_calls"] += 1
         self.transfers["d2h_bytes"] += sum(
@@ -1360,6 +1584,7 @@ class PagedKVCache:
     def _put(self, x):
         """host -> device with transfer accounting (counterpart of
         ``_fetch``)."""
+        self._transfer_guard("h2d")
         arr = jnp.asarray(x)
         self.transfers["h2d_calls"] += 1
         self.transfers["h2d_bytes"] += int(arr.size) * arr.dtype.itemsize
@@ -1455,7 +1680,7 @@ class PagedKVCache:
         self._flush_device()
         self.sync_pages_to_device(sorted(
             {pid for layer in self.attn_layers
-             for pid in self.page_tables[rid][layer]}))
+             for pid in self.page_tables[rid][layer] if pid >= 0}))
 
     def sync_hot_to_host(self, slot_rids=None) -> None:
         """Pull device-resident HOT page payloads back into the host pool
@@ -1467,7 +1692,8 @@ class PagedKVCache:
                             else list(self.page_tables)) if r is not None]
         pids = sorted({pid for rid in rids for layer in self.attn_layers
                        for pid in self.page_tables[rid][layer]
-                       if self.pool.state[pid] == m.PAGE_HOT
+                       if pid >= 0
+                       and self.pool.state[pid] == m.PAGE_HOT
                        and self.pool.fill[pid] > 0})
         if not pids:
             return
@@ -1653,6 +1879,7 @@ class PagedKVCache:
         pool, ps = self.pool, self.page_size
         raw = {"global": 0, "local": 0}
         read = {"global": 0, "local": 0}
+        self._read_clock += 1
         for slot, rid in enumerate(slot_rids):
             if rid is None:
                 continue
@@ -1661,6 +1888,21 @@ class PagedKVCache:
                 kind = self.layer_kinds[layer]
                 base = self.page_base[rid][layer]
                 for k_, pid in enumerate(self.page_tables[rid][layer]):
+                    if pid < 0:
+                        raise m.PageIntegrityError(
+                            f"active request {rid} layer {layer} page {k_} "
+                            "is SPILLED at read time — readahead must "
+                            "restore before decode", rid=rid, layer=layer)
+                    gen = int(self.page_gen[pid])
+                    if not 0 <= gen <= self.generation:
+                        self.traffic["kv_integrity_failures"] += 1
+                        raise m.PageIntegrityError(
+                            f"page {pid} of rid={rid} layer={layer} carries "
+                            f"poisoned table generation {gen} (live "
+                            f"0..{self.generation}) — refusing to decode "
+                            "with an out-of-pool table row",
+                            rid=rid, layer=layer, pid=pid)
+                    self.page_last_read[pid] = self._read_clock
                     t0 = (base + k_) * ps
                     state = pool.state[pid]
                     n_tok = (int(pool.fill[pid]) if state == m.PAGE_HOT

@@ -7,6 +7,7 @@ uniform depth->trip-count structure (see launch/roofline.py).
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from functools import partial
 
 import jax
@@ -729,9 +730,128 @@ def init_slstm_cache(cfg: ModelConfig, batch: int) -> dict:
 # ``assert``): a double free or an overfull page is data corruption, and
 # ``python -O`` strips asserts — the pool must stay loud under -O.
 
-PAGE_FREE, PAGE_HOT, PAGE_COLD, PAGE_PACKED = 0, 1, 2, 3
+PAGE_FREE, PAGE_HOT, PAGE_COLD, PAGE_PACKED, PAGE_SPILLED = 0, 1, 2, 3, 4
 PAGE_STATE_NAMES = {PAGE_FREE: "FREE", PAGE_HOT: "HOT",
-                    PAGE_COLD: "COLD", PAGE_PACKED: "PACKED"}
+                    PAGE_COLD: "COLD", PAGE_PACKED: "PACKED",
+                    PAGE_SPILLED: "SPILLED"}
+
+
+class PageIntegrityError(RuntimeError):
+    """A KV page failed an integrity check (checksum mismatch on unspill or
+    re-pack, a SPILLED page reached the decode path, or a poisoned table
+    generation).  Carries enough structure for the engine to fail the
+    *owning* request only — neighbors must never be poisoned."""
+
+    def __init__(self, msg: str, *, rid: int | None = None,
+                 layer: int | None = None, pid: int | None = None,
+                 handle: int | None = None):
+        super().__init__(msg)
+        self.rid = rid
+        self.layer = layer
+        self.pid = pid
+        self.handle = handle
+
+
+class TransferDropped(RuntimeError):
+    """An h2d/d2h transfer was dropped (fault injection / flaky link)."""
+
+    def __init__(self, msg: str, *, direction: str = "?"):
+        super().__init__(msg)
+        self.direction = direction
+
+
+@dataclasses.dataclass
+class SpillRecord:
+    """One page's payload parked in the host spill tier.
+
+    ``state`` is the *pre-spill* pool state (HOT/COLD/PACKED) — it picks the
+    payload layout on adopt; the page-table entry itself is SPILLED while
+    the record lives here.  ``crc`` is stamped by :meth:`HostSpillTier.put`
+    over the serialized payload and re-verified on every ``get``."""
+    state: int
+    fill: int
+    layer: int
+    gen: int                       # page_gen at spill time (table row id)
+    payload: dict[str, np.ndarray]
+    comp_bytes: int                # pool footprint at spill time
+    raw_bytes: int                 # dense-int8 equivalent (spill ratio denom)
+    crc: int = 0
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+def payload_crc(payload: dict[str, np.ndarray]) -> int:
+    """CRC32 over a payload dict in sorted-key order (canonical framing:
+    EBPC-style lossless streams are only robust with explicit integrity,
+    PAPERS.md 1908.11645)."""
+    c = 0
+    for k in sorted(payload):
+        c = zlib.crc32(payload[k].tobytes(), c)
+    return c & 0xFFFFFFFF
+
+
+class HostSpillTier:
+    """Pinned-host-memory spill store for compressed KV pages.
+
+    Records are append-only blobs keyed by an opaque handle; ``get``
+    recomputes the CRC and *quarantines* a mismatching record (kept for
+    forensics, never re-served) before raising ``PageIntegrityError``.
+    On real hardware the payloads would sit in page-locked host buffers so
+    readahead h2d can be async DMA; in this container they are host numpy
+    copies with identical accounting."""
+
+    def __init__(self):
+        self._records: dict[int, SpillRecord] = {}
+        self.quarantined: dict[int, SpillRecord] = {}
+        self._next_handle = 0
+        self.live_bytes = 0                 # compressed bytes currently parked
+        self.put_count = 0
+        self.get_count = 0
+        self.integrity_failures = 0
+
+    @property
+    def live_count(self) -> int:
+        return len(self._records)
+
+    def put(self, rec: SpillRecord) -> int:
+        rec.crc = payload_crc(rec.payload)
+        handle = self._next_handle
+        self._next_handle += 1
+        self._records[handle] = rec
+        self.live_bytes += rec.comp_bytes
+        self.put_count += 1
+        return handle
+
+    def get(self, handle: int, *, verify: bool = True) -> SpillRecord:
+        if handle not in self._records:
+            raise KeyError(
+                f"spill handle {handle} not live "
+                f"(quarantined={handle in self.quarantined})")
+        rec = self._records[handle]
+        self.get_count += 1
+        if verify and payload_crc(rec.payload) != rec.crc:
+            self.quarantine(handle)
+            raise PageIntegrityError(
+                f"spilled page failed checksum on unspill (handle={handle}, "
+                f"layer={rec.layer}, state="
+                f"{PAGE_STATE_NAMES.get(rec.state, rec.state)}); "
+                "record quarantined", handle=handle, layer=rec.layer)
+        return rec
+
+    def drop(self, handle: int) -> None:
+        """Release a live record (owner retired or page unspilled).
+        Quarantined records are kept — dropping evidence is how silent
+        corruption spreads."""
+        rec = self._records.pop(handle, None)
+        if rec is not None:
+            self.live_bytes -= rec.comp_bytes
+
+    def quarantine(self, handle: int) -> None:
+        rec = self._records.pop(handle, None)
+        if rec is None:
+            return
+        self.live_bytes -= rec.comp_bytes
+        self.quarantined[handle] = rec
+        self.integrity_failures += 1
 
 
 class KVPagePool:
@@ -775,6 +895,8 @@ class KVPagePool:
         self.alloc_count = 0                    # lifetime allocs (reuse proof)
         self.high_water = 0                     # max pages in use at once
         self.evict_count = 0                    # rolling-window evictions
+        self.spill_count = 0                    # pages spilled to host tier
+        self.unspill_count = 0                  # pages adopted back in
 
     def _page_state(self, pid: int) -> str:
         st = int(self.state[pid])
@@ -825,6 +947,72 @@ class KVPagePool:
                 "rolling eviction may only free sealed COLD/PACKED pages")
         self.free(pid)
         self.evict_count += 1
+
+    # ------------------------------------------------------------- spill
+    def spill(self, pid: int) -> tuple[int, int, dict, int]:
+        """Copy a page's payload out for the host spill tier and free its
+        pool slot.  Returns ``(state, fill, payload, comp_bytes)`` — the
+        page-table entry transitions to SPILLED (tracked by the owner via a
+        negative handle; the pool slot itself goes back on the free list).
+        Only the arrays the state actually uses are captured: HOT pages the
+        per-token planes, COLD the page-requantized payload, PACKED just the
+        compressed planes + page scales (the headline case: spill traffic is
+        APack-compressed)."""
+        st = int(self.state[pid])
+        if st == PAGE_FREE:
+            raise ValueError(f"spill of FREE page ({self._page_state(pid)})")
+        fill = int(self.fill[pid])
+        if st == PAGE_HOT:
+            payload = {"tok_q": self.tok_q[:, pid].copy(),
+                       "tok_scale": self.tok_scale[:, pid].copy()}
+        elif st == PAGE_COLD:
+            payload = {"cold_q": self.cold_q[:, pid].copy(),
+                       "page_scale": self.page_scale[:, pid].copy()}
+        else:
+            payload = {"sym": self.sym[:, pid].copy(),
+                       "ofs": self.ofs[:, pid].copy(),
+                       "sym_bits": self.sym_bits[:, pid].copy(),
+                       "ofs_bits": self.ofs_bits[:, pid].copy(),
+                       "stored": self.stored[:, pid].copy(),
+                       "page_scale": self.page_scale[:, pid].copy()}
+        comp = self.page_bytes(pid)
+        self.free(pid)
+        self.spill_count += 1
+        return st, fill, payload, comp
+
+    def adopt(self, st: int, fill: int, payload: dict) -> int:
+        """Inverse of ``spill``: allocate a fresh slot and restore a spilled
+        payload into it (FREE -> HOT/COLD/PACKED).  The pid is generally
+        *different* from the one the page was spilled out of — owners must
+        rewrite their page-table entry."""
+        pid = self.alloc()
+        if pid is None:
+            raise RuntimeError(
+                "no free page to unspill into — admission must re-reserve "
+                "before readahead")
+        if st == PAGE_HOT:
+            self.tok_q[:, pid] = payload["tok_q"]
+            self.tok_scale[:, pid] = payload["tok_scale"]
+            self.fill[pid] = fill
+        elif st == PAGE_COLD:
+            self.cold_q[:, pid] = payload["cold_q"]
+            self.page_scale[:, pid] = payload["page_scale"]
+            self.fill[pid] = fill
+            self.state[pid] = PAGE_COLD
+        elif st == PAGE_PACKED:
+            self.sym[:, pid] = payload["sym"]
+            self.ofs[:, pid] = payload["ofs"]
+            self.sym_bits[:, pid] = payload["sym_bits"]
+            self.ofs_bits[:, pid] = payload["ofs_bits"]
+            self.stored[:, pid] = payload["stored"]
+            self.page_scale[:, pid] = payload["page_scale"]
+            self.fill[pid] = fill
+            self.state[pid] = PAGE_PACKED
+        else:
+            self.free(pid)
+            raise ValueError(f"adopt of invalid spilled state {st}")
+        self.unspill_count += 1
+        return pid
 
     # ------------------------------------------------------------- writes
     def write_token(self, pid: int, kq: np.ndarray, vq: np.ndarray,

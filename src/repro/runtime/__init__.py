@@ -1,1 +1,2 @@
-from .supervisor import Supervisor, SupervisorConfig
+from .supervisor import (StragglerWatchdog, Supervisor, SupervisorConfig,
+                         WatchdogEvent)

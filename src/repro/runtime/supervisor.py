@@ -27,6 +27,61 @@ from repro.ckpt import checkpoint as ckpt
 log = logging.getLogger("repro.supervisor")
 
 
+@dataclasses.dataclass(frozen=True)
+class WatchdogEvent:
+    """Structured straggler-watchdog emission: consumable by the serving
+    engine's pressure policy as well as the training supervisor (one code
+    path for both — ISSUE 6 satellite).
+
+    ``kind`` is ``"straggler"`` (flagged, below patience) or ``"hung"``
+    (``consecutive`` flags reached patience — the caller should act:
+    supervisor raises, engine preempts-with-spill)."""
+    kind: str
+    dt: float
+    ema: float
+    consecutive: int
+
+
+class StragglerWatchdog:
+    """Step-time watchdog shared by ``Supervisor`` and
+    ``serve.ServeEngine``: a step slower than ``ratio`` × the trailing
+    ``window``-step mean is flagged; ``patience`` consecutive flags
+    escalate to a ``hung`` event.  Policy (raise / preempt / re-mesh)
+    stays with the caller — this class only observes and emits."""
+
+    def __init__(self, ratio: float = 5.0, patience: int = 3,
+                 window: int = 8, on_event=None):
+        self.ratio = ratio
+        self.patience = patience
+        self.window = window
+        self.on_event = on_event
+        self.step_times: list[float] = []
+        self.events = 0                      # consecutive flagged steps
+        self.event_log: list[WatchdogEvent] = []
+
+    def observe(self, dt: float) -> WatchdogEvent | None:
+        ev = None
+        if len(self.step_times) >= self.window:
+            ema = float(np.mean(self.step_times[-self.window:]))
+            if dt > self.ratio * max(ema, 1e-6):
+                self.events += 1
+                kind = "hung" if self.events >= self.patience \
+                    else "straggler"
+                ev = WatchdogEvent(kind=kind, dt=dt, ema=ema,
+                                   consecutive=self.events)
+            else:
+                self.events = 0
+        self.step_times.append(dt)
+        if ev is not None:
+            self.event_log.append(ev)
+            if self.on_event is not None:
+                self.on_event(ev)
+        return ev
+
+    def reset(self) -> None:
+        self.events = 0
+
+
 @dataclasses.dataclass
 class SupervisorConfig:
     ckpt_dir: str
@@ -48,11 +103,14 @@ class Supervisor:
                  make_state: Callable[[], tuple[Any, dict]],
                  step_fn: Callable[[Any, dict], tuple[Any, dict]],
                  data_state: Callable[[], dict] | None = None,
-                 restore_data: Callable[[dict], None] | None = None):
+                 restore_data: Callable[[dict], None] | None = None,
+                 on_watchdog_event: Callable[[WatchdogEvent], None]
+                 | None = None):
         """Args:
           make_state: () -> (train_state, extra) fresh initialization.
           step_fn: (train_state, step_idx) -> (train_state, metrics).
           data_state / restore_data: data-pipeline cursor hooks.
+          on_watchdog_event: structured straggler/hung event sink.
         """
         self.cfg = cfg
         self.make_state = make_state
@@ -61,11 +119,25 @@ class Supervisor:
         self.restore_data = restore_data or (lambda s: None)
         self.preempted = False
         self.restarts = 0
-        self.step_times: list[float] = []
-        self.straggler_events = 0
+        self.watchdog = StragglerWatchdog(ratio=cfg.straggler_ratio,
+                                          patience=cfg.straggler_patience,
+                                          on_event=on_watchdog_event)
         self._saver = ckpt.AsyncCheckpointer(cfg.ckpt_dir,
                                              compress=cfg.compress_ckpt,
                                              keep=cfg.keep)
+
+    # back-compat views onto the shared watchdog (tests/callers pin these)
+    @property
+    def step_times(self) -> list[float]:
+        return self.watchdog.step_times
+
+    @property
+    def straggler_events(self) -> int:
+        return self.watchdog.events
+
+    @straggler_events.setter
+    def straggler_events(self, v: int) -> None:
+        self.watchdog.events = v
 
     def _install_signal_handler(self):
         def handler(signum, frame):
@@ -88,19 +160,14 @@ class Supervisor:
         return state, 0
 
     def _watchdog(self, dt: float) -> None:
-        if len(self.step_times) >= 8:
-            ema = float(np.mean(self.step_times[-8:]))
-            if dt > self.cfg.straggler_ratio * max(ema, 1e-6):
-                self.straggler_events += 1
-                log.warning("straggler step: %.3fs vs EMA %.3fs "
-                            "(%d consecutive)", dt, ema, self.straggler_events)
-                if self.straggler_events >= self.cfg.straggler_patience:
-                    raise TimeoutError(
-                        "persistent straggler — on a cluster this triggers "
-                        "backup-worker promotion / re-meshing")
-            else:
-                self.straggler_events = 0
-        self.step_times.append(dt)
+        ev = self.watchdog.observe(dt)
+        if ev is not None:
+            log.warning("straggler step: %.3fs vs EMA %.3fs "
+                        "(%d consecutive)", ev.dt, ev.ema, ev.consecutive)
+            if ev.kind == "hung":
+                raise TimeoutError(
+                    "persistent straggler — on a cluster this triggers "
+                    "backup-worker promotion / re-meshing")
 
     def _save(self, step: int, state: Any) -> None:
         extra = {"data": self.data_state(), "wall_time": time.time()}

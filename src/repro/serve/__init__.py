@@ -1,1 +1,3 @@
-from .engine import ServeEngine, Request, compress_params, decompress_params
+from .engine import (AdmissionImpossible, Request, ServeEngine,
+                     compress_params, decompress_params)
+from .faults import FaultInjector, PageIntegrityError, TransferDropped

@@ -22,7 +22,9 @@ import numpy as np
 from repro.core import quant, tables
 from repro.kernels import fastpath, ops
 from repro.models import model as M
+from repro.models import modules as m
 from repro.models.config import ModelConfig
+from repro.runtime.supervisor import StragglerWatchdog, WatchdogEvent
 
 
 @dataclasses.dataclass
@@ -35,6 +37,26 @@ class Request:
     done: bool = False
     t_submit: float = 0.0
     t_done: float = 0.0
+    # SLO: steps this request may hold a decode slot while others queue
+    # (None: engine-level slot_deadline_steps, or no deadline at all)
+    deadline_steps: int | None = None
+    # structured failure (integrity quarantine): done=True + error set,
+    # tokens truncated at the failure point — never silently wrong
+    error: str | None = None
+
+
+class AdmissionImpossible(RuntimeError):
+    """Admission can never succeed for the queue head — the structured
+    replacement for ``run_until_drained`` silently spinning to
+    ``max_steps``.  Names the request and its page reservation."""
+
+    def __init__(self, req: Request, need: int, pool_pages: int, why: str):
+        super().__init__(
+            f"request {req.rid} can never be admitted: reserves {need} "
+            f"pages worst-case against a pool of {pool_pages} ({why})")
+        self.rid = req.rid
+        self.pages_needed = need
+        self.pool_pages = pool_pages
 
 
 @dataclasses.dataclass
@@ -103,7 +125,14 @@ class ServeEngine:
                  kv_refresh_every_pages: int | None = None,
                  kv_refresh_threshold: float = 0.15,
                  kv_refresh_min_pages: int = 4,
-                 kv_repack_budget: int = 4):
+                 kv_repack_budget: int = 4,
+                 kv_pressure: bool = False,
+                 slot_deadline_steps: int | None = None,
+                 pressure_backoff_max: int = 64,
+                 watchdog_ratio: float | None = None,
+                 watchdog_patience: int = 3,
+                 kv_verify_on_repack: bool = False,
+                 faults=None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -117,7 +146,30 @@ class ServeEngine:
         self.stats = {"steps": 0, "generated": 0, "completed": 0,
                       "kv_admission_blocked": 0, "preempted": 0,
                       "resumed": 0, "kv_refreshes": 0,
-                      "kv_pages_repacked": 0}
+                      "kv_pages_repacked": 0, "failed": 0,
+                      "spilled_requests": 0, "admission_retries": 0,
+                      "pressure_preempted": 0, "deadline_preempted": 0,
+                      "watchdog_preempted": 0}
+        # pressure policy: level 1 (always on) spills *preempted*
+        # requests' idle pages to the host tier when admission blocks;
+        # level 2 (kv_pressure opt-in) additionally preempts-with-spill
+        # active slots under exponential backoff.  Without the opt-in,
+        # blocked admission keeps today's FIFO-wait semantics.
+        self.kv_pressure = kv_pressure
+        self.slot_deadline_steps = slot_deadline_steps
+        self.pressure_backoff_max = pressure_backoff_max
+        self._pressure_backoff = 1
+        self._next_pressure_admit = 0
+        self._admit_clock = 0
+        self._slot_steps = np.zeros(max_batch, np.int64)
+        self._spilled: set[int] = set()
+        # step-time watchdog (shared StragglerWatchdog code path with the
+        # training Supervisor): a hung step preempts-with-spill the
+        # longest-running slot so the rest of the batch keeps moving
+        self.watchdog = (StragglerWatchdog(ratio=watchdog_ratio,
+                                           patience=watchdog_patience)
+                         if watchdog_ratio is not None else None)
+        self.faults = faults
         # adaptive table refresh: when enabled, every decode step checks
         # the drift triggers and re-packs at most ``kv_repack_budget``
         # stale pages, so a refresh amortizes over steps instead of
@@ -145,7 +197,9 @@ class ServeEngine:
                 calib_pages=kv_calib_pages, backend=kv_backend,
                 refresh_every_pages=kv_refresh_every_pages,
                 refresh_threshold=kv_refresh_threshold,
-                refresh_min_pages=kv_refresh_min_pages)
+                refresh_min_pages=kv_refresh_min_pages,
+                verify_on_repack=kv_verify_on_repack)
+            self.kv.faults = faults
             self._reserved: dict[int, int] = {}
             self._reserved_total = 0
             # rid -> (compressed state snapshot, position, last token):
@@ -188,21 +242,110 @@ class ServeEngine:
 
     def _admit(self) -> None:
         for slot in range(self.max_batch):
-            if self.active[slot] is None and self.queue:
-                if self.paged:
-                    head = self.queue[0]
-                    if head.rid in self._preempted:
-                        # resuming: pages + reservation were kept across
-                        # the preemption, only the slot was given up
-                        self._resume_into_slot(slot, self.queue.popleft())
-                        continue
-                    need = self._pages_for(head)
-                    if self._reserved_total + need > self.kv.pool.num_pages:
-                        # free slot but no pages: request waits (FIFO)
-                        self.stats["kv_admission_blocked"] += 1
-                        break
-                req = self.queue.popleft()
-                self._prefill_into_slot(slot, req)
+            if self.active[slot] is not None or not self.queue:
+                continue
+            if not self.paged:
+                self._prefill_into_slot(slot, self.queue.popleft())
+                continue
+            self._admit_clock += 1
+            head = self.queue[0]
+            # a preempted-but-not-spilled request still holds its
+            # reservation (need 0); a spilled one must re-reserve
+            need = (0 if head.rid in self._reserved
+                    else self._pages_for(head))
+            if self._reserved_total + need > self.kv.pool.num_pages:
+                self.stats["kv_admission_blocked"] += 1
+                if not self._relieve_pressure(head, need):
+                    break                  # request waits (FIFO)
+                if self._reserved_total + need > self.kv.pool.num_pages:
+                    break                  # partial relief; retry later
+                self.stats["admission_retries"] += 1
+            else:
+                self._pressure_backoff = 1    # clean admission: reset
+            req = self.queue.popleft()
+            if req.rid in self._preempted:
+                if need:
+                    self._reserved[req.rid] = need
+                    self._reserved_total += need
+                try:
+                    self._resume_into_slot(slot, req)
+                except m.PageIntegrityError as e:
+                    # quarantined on unspill: fail ONLY this request
+                    self._fail_request(req, e)
+                continue
+            self._prefill_into_slot(slot, req)
+
+    def _relieve_pressure(self, head: Request, need: int) -> bool:
+        """Bounded spill -> retry -> preempt escalation under pool
+        exhaustion.  Returns True when reservation headroom was freed
+        (the caller re-checks and admits); False means wait.
+
+        Level 1 (always on): spill the *coldest* preempted request still
+        holding a reservation — its pages sit idle in the pool, so
+        parking them compressed in the host tier frees a whole
+        reservation without touching any active slot.  Level 2
+        (``kv_pressure`` opt-in): preempt-with-spill the longest-running
+        active slot, gated by exponential backoff so a pool that is
+        simply too small degrades to FIFO instead of livelocking on
+        preempt/resume churn."""
+        parked = [rid for rid in self._preempted
+                  if rid in self._reserved and rid not in self._spilled]
+        if parked:
+            rid = min(parked, key=self.kv.request_last_read)
+            self._spill_reserved(rid)
+            return True
+        if not self.kv_pressure:
+            return False
+        if self._admit_clock < self._next_pressure_admit:
+            return False                  # backing off
+        victims = [s for s, r in enumerate(self.active) if r is not None]
+        if not victims:
+            # nothing active and nothing left to spill: no future retire
+            # or spill can ever free pages for this reservation
+            raise AdmissionImpossible(
+                head, need, self.kv.pool.num_pages,
+                "no active slots to retire and no spillable reservations")
+        slot = max(victims, key=lambda s: int(self._slot_steps[s]))
+        self.preempt(slot, spill=True, requeue="tail")
+        self.stats["pressure_preempted"] += 1
+        self._next_pressure_admit = self._admit_clock + self._pressure_backoff
+        self._pressure_backoff = min(2 * self._pressure_backoff,
+                                     self.pressure_backoff_max)
+        return True
+
+    def _spill_reserved(self, rid: int) -> None:
+        """Park a preempted request's pages compressed in the host spill
+        tier and release its pool reservation (resume re-reserves and
+        runs the checksum-verified readahead)."""
+        self.kv.spill_request(rid)
+        self._reserved_total -= self._reserved.pop(rid)
+        self._spilled.add(rid)
+        self.stats["spilled_requests"] += 1
+
+    def _fail_request(self, req: Request, err: Exception) -> None:
+        """Structured failure of ONE request (the integrity-quarantine
+        recovery path): surface the error on the request, release its
+        pages/reservation/snapshot, and leave every other slot untouched
+        — corruption never poisons neighbors."""
+        req.done = True
+        req.error = str(err)
+        req.t_done = time.time()
+        self.stats["failed"] += 1
+        rid = req.rid
+        for s, r in enumerate(self.active):
+            if r is req:
+                self.active[s] = None
+        try:
+            self.queue.remove(req)
+        except ValueError:
+            pass
+        if self.paged:
+            if rid in self.kv.page_tables:
+                self.kv.release(rid)
+            if rid in self._reserved:
+                self._reserved_total -= self._reserved.pop(rid)
+        self._preempted.pop(rid, None)
+        self._spilled.discard(rid)
 
     def _prefill_into_slot(self, slot: int, req: Request) -> None:
         # single-request prefill at the exact prompt length (jit-cached per
@@ -235,6 +378,7 @@ class ServeEngine:
         self.active[slot] = req
         self.positions[slot] = s
         self.last_tokens[slot, 0] = next_tok
+        self._slot_steps[slot] = 0
 
     def _write_prefill_cache(self, slot: int, caches) -> None:
         # write this sequence's prefill cache into the batch cache at `slot`
@@ -256,17 +400,26 @@ class ServeEngine:
 
         self.cache = jax.tree.map(put, self.cache, caches)
 
-    def preempt(self, slot: int) -> dict:
+    def preempt(self, slot: int, *, spill: bool = False,
+                requeue: str = "head") -> dict:
         """Checkpoint/preemption path (paged mode): kick an in-flight
-        request out of its decode slot and back to the queue head.
+        request out of its decode slot and back to the queue.
 
-        Its attention KV stays where it is — already APack-compressed in
-        the page pool, reservation held — while the dense
-        recurrent/mLSTM/sLSTM hot-path states are snapshot-compressed
+        Default (``spill=False``, ``requeue="head"``): its attention KV
+        stays where it is — already APack-compressed in the page pool,
+        reservation held — while the dense recurrent/mLSTM/sLSTM
+        hot-path states are snapshot-compressed
         (``PagedKVCache.snapshot_state``, weight-mode tables, bit-exact).
         Re-admission restores the snapshot and resumes decoding at the
         same position: no re-prefill, byte-identical continuation.
-        Returns the compressed snapshot (also kept internally)."""
+
+        ``spill=True`` (pressure/deadline/watchdog path) additionally
+        parks the pages compressed in the host spill tier and releases
+        the pool reservation — resume re-reserves and readahead restores
+        them, still byte-identical.  ``requeue="tail"`` avoids the
+        head-of-line livelock when the preemption was *caused by* the
+        head waiting.  Returns the compressed snapshot (also kept
+        internally)."""
         if not self.paged:
             raise RuntimeError("preempt requires the paged apack-int8 KV")
         req = self.active[slot]
@@ -284,18 +437,36 @@ class ServeEngine:
         self._preempted[req.rid] = (snap, int(self.positions[slot]),
                                     int(self.last_tokens[slot, 0]))
         self.active[slot] = None
-        self.queue.appendleft(req)
+        self._slot_steps[slot] = 0
+        if requeue == "tail":
+            self.queue.append(req)
+        else:
+            self.queue.appendleft(req)
         self.stats["preempted"] += 1
+        if spill:
+            self._spill_reserved(req.rid)
         return snap
 
     def _resume_into_slot(self, slot: int, req: Request) -> None:
-        snap, pos, last = self._preempted.pop(req.rid)
+        snap, pos, last = self._preempted[req.rid]
+        if req.rid in self._spilled:
+            # readahead: checksum-verified restore of every SPILLED page
+            # into fresh pool slots + ONE batched h2d flush, all before
+            # the fused kernel's next read (an admission event — the
+            # steady-state zero-device_get invariant is untouched).
+            # PageIntegrityError propagates to _admit, which fails only
+            # this request (reservation was already re-taken; _fail_request
+            # unwinds it).
+            self.kv.unspill_request(req.rid)
+            self._spilled.discard(req.rid)
+        del self._preempted[req.rid]
         self.kv.restore_state(req.rid, snap)
         if self.fused and self.kv.state_layers:
             self.kv.write_state_slot(slot, req.rid)
         self.active[slot] = req
         self.positions[slot] = pos
         self.last_tokens[slot, 0] = last
+        self._slot_steps[slot] = 0
         self.stats["resumed"] += 1
 
     def _retire(self) -> None:
@@ -315,10 +486,65 @@ class ServeEngine:
                     self.kv.release(req.rid)
                     self._reserved_total -= self._reserved.pop(req.rid)
 
+    def _check_deadlines(self) -> None:
+        """Per-request SLO deadlines: a slot that has held the GPU past
+        its ``deadline_steps`` (or the engine-wide
+        ``slot_deadline_steps``) while other requests queue is
+        preempted-with-spill to the queue tail — stuck or SLO-violating
+        slots stop starving the batch.  With an empty queue there is
+        nothing to yield to, so deadlines don't fire."""
+        if not self.queue:
+            return
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            ddl = (req.deadline_steps if req.deadline_steps is not None
+                   else self.slot_deadline_steps)
+            if ddl is not None and int(self._slot_steps[slot]) >= ddl:
+                self.preempt(slot, spill=True, requeue="tail")
+                self.stats["deadline_preempted"] += 1
+
+    def _on_hung(self, ev: WatchdogEvent) -> None:
+        """Watchdog escalation (shared StragglerWatchdog event): the step
+        loop is persistently slow — preempt-with-spill the longest-running
+        slot (tail requeue) and widen the pressure backoff so recovery
+        doesn't immediately re-trigger the stall."""
+        victims = [s for s, r in enumerate(self.active) if r is not None]
+        if not victims:
+            return
+        slot = max(victims, key=lambda s: int(self._slot_steps[s]))
+        self.preempt(slot, spill=True, requeue="tail")
+        self.stats["watchdog_preempted"] += 1
+        self.watchdog.reset()
+        self._next_pressure_admit = self._admit_clock + self._pressure_backoff
+        self._pressure_backoff = min(2 * self._pressure_backoff,
+                                     self.pressure_backoff_max)
+
+    def _handle_integrity_failure(self, e: m.PageIntegrityError) -> None:
+        """Quarantine recovery: attribute the corruption to its owning
+        request and fail exactly that one.  Unattributable corruption
+        re-raises — swallowing it would serve wrong tokens."""
+        req = None
+        if e.rid is not None:
+            for r in list(self.active) + list(self.queue):
+                if r is not None and r.rid == e.rid:
+                    req = r
+                    break
+        if req is None:
+            raise e
+        self._fail_request(req, e)
+
     # ------------------------------------------------------------- step
     def step(self) -> int:
         """One engine iteration.  Returns number of active sequences."""
+        t0 = time.perf_counter()
+        if self.faults is not None:
+            d = self.faults.step_delay()
+            if d:
+                time.sleep(d)
         self._retire()
+        if self.paged:
+            self._check_deadlines()
         self._admit()
         n_active = sum(r is not None for r in self.active)
         if n_active == 0:
@@ -326,6 +552,21 @@ class ServeEngine:
         # per-slot positions: every sequence advances at its own offset
         # (attention_step takes a [B] position vector)
         slot_rids = [r.rid if r is not None else None for r in self.active]
+        try:
+            n_active = self._step_decode(slot_rids, n_active)
+        except m.PageIntegrityError as e:
+            # the guards fire before any page/seq mutation (step_meta /
+            # materialize read guards, pre-swap repack verify), so failing
+            # the owner here leaves every other slot consistent
+            self._handle_integrity_failure(e)
+            n_active = sum(r is not None for r in self.active)
+        if self.watchdog is not None:
+            ev = self.watchdog.observe(time.perf_counter() - t0)
+            if ev is not None and ev.kind == "hung":
+                self._on_hung(ev)
+        return n_active
+
+    def _step_decode(self, slot_rids: list, n_active: int) -> int:
         if self.fused:
             # device-resident hot path: pages stay on device, attention
             # gather-decodes them in the fused kernel, and the new token's
@@ -375,14 +616,32 @@ class ServeEngine:
             req.tokens.append(int(toks[slot]))
             self.last_tokens[slot, 0] = toks[slot]
             self.positions[slot] += 1
+            self._slot_steps[slot] += 1
             self.stats["generated"] += 1
         self.stats["steps"] += 1
         return n_active
 
     def run_until_drained(self, max_steps: int = 10_000) -> None:
+        stalled = 0
         for _ in range(max_steps):
-            if self.step() == 0 and not self.queue:
+            if self.step() > 0:
+                stalled = 0
+                continue
+            if not self.queue:
                 break
+            # idle step with work still queued: admission is blocked and
+            # nothing is in flight to unblock it.  Bounded patience (the
+            # pressure backoff can legitimately hold a few retries), then
+            # a structured error instead of silently burning max_steps.
+            stalled += 1
+            if stalled > 2 * self.pressure_backoff_max:
+                head = self.queue[0]
+                need = self._pages_for(head) if self.paged else 0
+                pool = self.kv.pool.num_pages if self.paged else 0
+                raise AdmissionImpossible(
+                    head, need, pool,
+                    f"{stalled} consecutive no-progress steps with zero "
+                    "active slots")
 
     def kv_stats(self) -> dict:
         """Raw-vs-compressed KV traffic + pool occupancy (paged mode).
@@ -403,6 +662,14 @@ class ServeEngine:
         out["kv_pages_evicted"] = self.kv.pool.evict_count
         out["kv_fused"] = self.fused
         out["transfers"] = dict(self.kv.transfers)
+        # spill tier: own stream (never folded into read ratios) + the
+        # per-request accounting of what is parked on host right now
+        out["kv_spill"] = out["kv_streams"]["spill"]
+        out["kv_pages_spilled"] = self.kv.pool.spill_count
+        out["kv_pages_unspilled"] = self.kv.pool.unspill_count
+        out["kv_spilled_requests"] = {
+            rid: self.kv.spilled_pages(rid)
+            for rid in sorted(self._spilled) if rid in self.kv.page_tables}
         return out
 
     def sync_host_mirror(self) -> None:

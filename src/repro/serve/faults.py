@@ -1,0 +1,114 @@
+"""Fault injection for the serving loop (tests + ``bench_decode
+--pressure``).
+
+The injector sits on seams the real system already has: the
+host<->device transfer boundary (``PagedKVCache._fetch/_put``), the host
+spill tier (``modules.HostSpillTier`` records), the page-generation
+metadata, and the engine's step timing.  Nothing here mutates model
+math — every injected fault must either be *detected* (checksum,
+generation guard) or *absorbed* (bounded transfer retry, watchdog
+preemption with backoff); silent token divergence is the failure the
+test suite hunts for.
+
+All faults are deterministic and budgeted (inject exactly N, not
+probabilistically) so tests and the pressure bench are reproducible.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.models.modules import (HostSpillTier, PageIntegrityError,
+                                  TransferDropped)
+
+__all__ = ["FaultInjector", "PageIntegrityError", "TransferDropped"]
+
+
+class FaultInjector:
+    """Deterministic, budgeted fault source for the KV/serve stack.
+
+    Attach with ``ServeEngine(..., faults=inj)`` (or set
+    ``PagedKVCache.faults`` directly), then arm individual faults:
+
+    * ``drop_transfers("h2d", n)`` — the next ``n`` h2d uploads raise
+      ``TransferDropped`` (the cache retries up to ``transfer_retries``).
+    * ``flip_bit(tier, handle)`` — corrupt one bit of a spilled page's
+      payload in place (detected by CRC on unspill -> quarantine).
+    * ``corrupt_packed_page(kv, pid)`` — flip a bit of a *resident*
+      PACKED page's planes (detected by ``verify_on_repack``).
+    * ``poison_generation(kv, pid)`` — stamp an out-of-pool table
+      generation (detected by the ``step_meta`` read guard).
+    * ``delay_steps(seconds, n)`` / ``delay_spills(seconds, n)`` — stall
+      the engine step / spill completion (drives watchdog preemption).
+    """
+
+    def __init__(self):
+        self._drop_budget = {"h2d": 0, "d2h": 0}
+        self._step_delays: list[float] = []
+        self._spill_delays: list[float] = []
+        self.stats = {"h2d_dropped": 0, "d2h_dropped": 0,
+                      "bits_flipped": 0, "generations_poisoned": 0,
+                      "steps_delayed": 0, "spills_delayed": 0}
+
+    # ------------------------------------------------------- transfers
+    def drop_transfers(self, direction: str, n: int = 1) -> None:
+        if direction not in self._drop_budget:
+            raise ValueError(f"unknown transfer direction {direction!r}")
+        self._drop_budget[direction] += n
+
+    def check_transfer(self, direction: str) -> None:
+        """Called by ``PagedKVCache._fetch/_put`` before every transfer."""
+        if self._drop_budget.get(direction, 0) > 0:
+            self._drop_budget[direction] -= 1
+            self.stats[f"{direction}_dropped"] += 1
+            raise TransferDropped(
+                f"injected {direction} transfer drop "
+                f"({self._drop_budget[direction]} left in budget)",
+                direction=direction)
+
+    # ------------------------------------------------------- integrity
+    def flip_bit(self, tier: HostSpillTier, handle: int, *,
+                 array: str | None = None, bit: int = 0) -> None:
+        """Flip one bit of a live spill record's payload, in place —
+        models host-DRAM corruption while the page was parked."""
+        rec = tier.get(handle, verify=False)
+        name = array if array is not None else sorted(rec.payload)[0]
+        arr = rec.payload[name]
+        flat = arr.view(np.uint8).reshape(-1)
+        flat[bit // 8] ^= np.uint8(1 << (bit % 8))
+        self.stats["bits_flipped"] += 1
+
+    def corrupt_packed_page(self, kv, pid: int, *, bit: int = 0) -> None:
+        """Flip one bit of a resident PACKED page's K sym plane.
+        ``sym[0, pid]`` (not ``sym[:, pid]``) so the byte view is a true
+        in-place view — the kind-axis slice is non-contiguous and its
+        reshape would silently mutate a copy."""
+        flat = kv.pool.sym[0, pid].view(np.uint8).reshape(-1)
+        flat[bit // 8] ^= np.uint8(1 << (bit % 8))
+        self.stats["bits_flipped"] += 1
+
+    def poison_generation(self, kv, pid: int, *, offset: int = 7) -> None:
+        """Stamp a table generation past the live pool — a decode that
+        trusted it would index garbage table rows."""
+        kv.page_gen[pid] = kv.generation + offset
+        self.stats["generations_poisoned"] += 1
+
+    # ---------------------------------------------------------- delays
+    def delay_steps(self, seconds: float, n: int = 1) -> None:
+        self._step_delays.extend([seconds] * n)
+
+    def step_delay(self) -> float:
+        """Consumed by the engine at the top of each step."""
+        if self._step_delays:
+            self.stats["steps_delayed"] += 1
+            return self._step_delays.pop(0)
+        return 0.0
+
+    def delay_spills(self, seconds: float, n: int = 1) -> None:
+        self._spill_delays.extend([seconds] * n)
+
+    def spill_delay(self) -> float:
+        """Consumed by ``PagedKVCache.spill_request``."""
+        if self._spill_delays:
+            self.stats["spills_delayed"] += 1
+            return self._spill_delays.pop(0)
+        return 0.0

@@ -1,0 +1,438 @@
+"""Fault-injection tests for the serving loop under memory pressure.
+
+Every injected fault must be *detected* (CRC quarantine, generation
+guard, verify-on-repack) or *absorbed* (transfer retry, watchdog
+preemption with spill) — and the blast radius of a detected corruption
+is exactly ONE request: its neighbors' token streams stay bit-identical
+to an uncontended control run.  Spill/readahead traffic is its own
+accounting stream and must never leak into the KV read ratios."""
+import dataclasses
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model as M
+from repro.models import modules as m
+from repro.runtime import StragglerWatchdog, WatchdogEvent
+from repro.serve import (AdmissionImpossible, FaultInjector,
+                         PageIntegrityError, Request, ServeEngine,
+                         TransferDropped)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def apack_cfg(**kw):
+    return dataclasses.replace(configs.get_smoke_config("qwen3-1.7b"),
+                               kv_cache_dtype="apack-int8", **kw)
+
+
+def hetero_cfg(**kw):
+    return dataclasses.replace(configs.get_hetero_smoke_config(),
+                               kv_cache_dtype="apack-int8", **kw)
+
+
+def _mk_engine(cfg, params, max_batch=2, max_len=32, **kw):
+    return ServeEngine(cfg, params, max_batch=max_batch, max_len=max_len,
+                       kv_page_size=4, kv_calib_pages=2, **kw)
+
+
+def _random_token(rng, kv, lo=0.01, hi=0.02):
+    h, dh = kv.pool.kv_heads, kv.pool.head_dim
+    n = kv.n_layers
+    return (rng.integers(-127, 128, (n, h, dh)).astype(np.int8),
+            rng.integers(-127, 128, (n, h, dh)).astype(np.int8),
+            rng.uniform(lo, hi, (n, h)).astype(np.float32),
+            rng.uniform(lo, hi, (n, h)).astype(np.float32))
+
+
+def _packed_kv(n_tokens=16):
+    """A host-side cache with at least one PACKED page on layer 0."""
+    cfg = apack_cfg()
+    kv = M.PagedKVCache(cfg, num_pages=64, page_size=4, calib_pages=1)
+    kv.add_request(0)
+    rng = np.random.default_rng(3)
+    for _ in range(n_tokens):
+        kv.append_token(0, *_random_token(rng, kv))
+    layer = kv.attn_layers[0]
+    assert kv._packed[layer], "fixture never packed a page"
+    return kv, layer, min(kv._packed[layer])
+
+
+# --------------------------------------------------- pool + tier plumbing
+class TestSpillTier:
+    def test_pool_spill_adopt_roundtrip_is_bit_exact(self):
+        """A PACKED page's planes survive spill -> adopt unchanged (the
+        payload IS the compressed truth; no re-encode on either side)."""
+        kv, layer, pid = _packed_kv()
+        pool = kv.pool
+        want = {pl: getattr(pool, pl)[:, pid].copy()
+                for pl in ("sym", "ofs", "sym_bits", "ofs_bits", "stored")}
+        want_scale = pool.page_scale[:, pid].copy()
+        st, fill, payload, comp = pool.spill(pid)
+        assert st == m.PAGE_PACKED and comp > 0
+        assert pool.state[pid] == m.PAGE_FREE          # slot returned
+        pid2 = pool.adopt(st, fill, payload)
+        for pl, arr in want.items():
+            assert np.array_equal(getattr(pool, pl)[:, pid2], arr), pl
+        assert np.array_equal(pool.page_scale[:, pid2], want_scale)
+        assert pool.state[pid2] == m.PAGE_PACKED
+        assert pool.fill[pid2] == fill
+        assert pool.spill_count == 1 and pool.unspill_count == 1
+
+    def test_adopt_into_exhausted_pool_is_a_hard_error(self):
+        kv, layer, pid = _packed_kv()
+        st, fill, payload, _ = kv.pool.spill(pid)
+        while kv.pool.free_count:
+            kv.pool.alloc()
+        with pytest.raises(RuntimeError, match="re-reserve"):
+            kv.pool.adopt(st, fill, payload)
+
+    def test_checksum_detects_bit_flip_and_quarantines(self):
+        """One flipped bit in a parked record: get() raises, the record
+        moves to quarantine (kept, never re-served), live accounting
+        shrinks, and the handle is dead afterwards."""
+        tier = m.HostSpillTier()
+        inj = FaultInjector()
+        rec = m.SpillRecord(state=m.PAGE_PACKED, fill=4, layer=0, gen=0,
+                            payload={"a": np.arange(64, dtype=np.uint8),
+                                     "b": np.ones(8, np.float32)},
+                            comp_bytes=64, raw_bytes=256)
+        h = tier.put(rec)
+        assert tier.get(h) is rec                      # clean round-trip
+        inj.flip_bit(tier, h, array="a", bit=13)
+        with pytest.raises(PageIntegrityError, match="checksum"):
+            tier.get(h)
+        assert h in tier.quarantined
+        assert tier.live_count == 0 and tier.live_bytes == 0
+        assert tier.integrity_failures == 1
+        with pytest.raises(KeyError, match="quarantined=True"):
+            tier.get(h)
+
+    def test_poisoned_generation_refused_at_read_time(self):
+        """An out-of-pool table generation must never reach the decode
+        kernel — the read guard fails the owning request instead."""
+        kv, layer, pid = _packed_kv()
+        inj = FaultInjector()
+        inj.poison_generation(kv, pid)
+        with pytest.raises(PageIntegrityError, match="poisoned table"):
+            kv.materialize([0], 32)
+        assert inj.stats["generations_poisoned"] == 1
+
+    def test_verify_on_repack_catches_in_place_corruption(self):
+        """verify_on_repack: a resident PACKED page whose planes were
+        flipped under us fails its CRC *before* the re-pack decodes
+        garbage into a fresh encoding."""
+        cfg = apack_cfg()
+        kv = M.PagedKVCache(cfg, num_pages=64, page_size=4, calib_pages=1,
+                            verify_on_repack=True)
+        kv.add_request(0)
+        rng = np.random.default_rng(4)
+        for _ in range(16):
+            kv.append_token(0, *_random_token(rng, kv))
+        layer = kv.attn_layers[0]
+        pid = min(kv._packed[layer])
+        FaultInjector().corrupt_packed_page(kv, pid, bit=5)
+        with pytest.raises(PageIntegrityError, match="re-pack"):
+            kv._repack(layer, pid, force=True)
+        assert kv.traffic["kv_integrity_failures"] == 1
+
+    def test_transfer_drops_are_retried_then_propagate(self):
+        """The h2d/d2h boundary retries ``transfer_retries`` times; a
+        budget bigger than the retry allowance surfaces the failure."""
+        cfg = apack_cfg()
+        kv = M.PagedKVCache(cfg, num_pages=8, page_size=4, calib_pages=1,
+                            transfer_retries=2)
+        inj = FaultInjector()
+        kv.faults = inj
+        inj.drop_transfers("h2d", 2)                   # within allowance
+        kv._put(np.zeros(4, np.float32))
+        assert kv.traffic["kv_transfer_drops"] == 2
+        assert kv.traffic["kv_transfer_retries"] == 2
+        assert inj.stats["h2d_dropped"] == 2
+        inj.drop_transfers("d2h", 3)                   # exceeds allowance
+        with pytest.raises(TransferDropped):
+            kv._fetch(np.zeros(4, np.float32))
+        assert kv.traffic["kv_transfer_drops"] == 5
+
+
+# --------------------------------------------- spill -> resume, end to end
+class TestSpillResume:
+    def _run(self, cfg, params, *, spill_at=None, rid0=0):
+        eng = _mk_engine(cfg, params, max_batch=2, max_len=40)
+        rng = np.random.default_rng(7)
+        r = Request(rid=rid0, prompt=rng.integers(0, cfg.vocab_size, 10)
+                    .astype(np.int32), max_new_tokens=10)
+        eng.submit(r)
+        for step in range(120):
+            if r.done:
+                break
+            if step == spill_at and eng.active[0] is not None:
+                eng.preempt(0, spill=True)
+            eng.step()
+            eng._retire()
+        return r, eng
+
+    def test_spill_resume_is_token_identical_qwen(self):
+        """Preempt-with-spill mid-decode (pages parked compressed on
+        host) and resume: the token stream is bit-identical to the
+        uninterrupted run, and the spill traffic never contaminates the
+        KV read streams."""
+        cfg = apack_cfg()
+        params = M.init_params(configs.get_smoke_config("qwen3-1.7b"), KEY)
+        base, ctrl = self._run(cfg, params)
+        toks, eng = self._run(cfg, params, spill_at=4)
+        assert toks.tokens == base.tokens
+        assert toks.error is None
+        assert eng.stats["spilled_requests"] == 1
+        assert eng.stats["resumed"] == 1
+        ks, ks0 = eng.kv_stats(), ctrl.kv_stats()
+        sp = ks["kv_spill"]
+        assert sp["pages"] > 0 and sp["calls"] >= 1
+        assert sp["readahead_pages"] == sp["pages"]    # all came back
+        assert 0 < sp["spill_bytes"] < sp["raw_bytes"]  # parked compressed
+        # spill/readahead are their own streams: the decode-side read
+        # accounting of the interrupted run matches the control exactly
+        assert ks["kv_read_bytes"] == ks0["kv_read_bytes"]
+        assert ks["kv_raw_bytes"] == ks0["kv_raw_bytes"]
+        assert ks["kv_ratio"] == ctrl.kv_stats()["kv_ratio"]
+        assert eng.kv.spill_tier.live_count == 0       # tier fully drained
+        assert ks["kv_pages_spilled"] == ks["kv_pages_unspilled"]
+
+    def test_spill_resume_is_token_identical_hetero(self):
+        """Same invariant on the heterogeneous stack: attention pages
+        spill to the tier, recurrent state rides the compressed snapshot,
+        resume continues bit-exactly."""
+        cfg = hetero_cfg()
+        params = M.init_params(configs.get_hetero_smoke_config(), KEY)
+        base, _ = self._run(cfg, params)
+        toks, eng = self._run(cfg, params, spill_at=4)
+        assert toks.tokens == base.tokens
+        assert eng.stats["spilled_requests"] == 1
+        assert eng.kv_stats()["kv_spill"]["pages"] > 0
+        st = eng.kv_stats()["kv_streams"]["state"]
+        assert st["snapshots"] == 1                    # recurrent snapshot
+        assert eng.kv.pool.free_count == eng.kv.pool.num_pages
+
+    def test_bit_flip_fails_only_the_owning_request(self):
+        """Host-DRAM corruption of a parked page: the owner comes back
+        with a structured error, the batchmate's tokens are untouched,
+        and the pool/tier drain clean (no leaked pages, evidence kept)."""
+        cfg = apack_cfg()
+        params = M.init_params(configs.get_smoke_config("qwen3-1.7b"), KEY)
+
+        def run(corrupt):
+            eng = _mk_engine(cfg, params, max_batch=2, max_len=40)
+            rng = np.random.default_rng(9)
+            reqs = [Request(rid=i, prompt=rng.integers(
+                        0, cfg.vocab_size, 8).astype(np.int32),
+                        max_new_tokens=8) for i in range(2)]
+            for r in reqs:
+                eng.submit(r)
+            for _ in range(4):
+                eng.step()
+            eng.preempt(0, spill=True)
+            if corrupt:
+                handles = [-e - 1
+                           for pids in eng.kv.page_tables[0]
+                           for e in pids if e < 0]
+                assert handles, "spill left no tier handles"
+                FaultInjector().flip_bit(eng.kv.spill_tier, handles[0])
+            eng.run_until_drained(max_steps=200)
+            return reqs, eng
+
+        ctrl, _ = run(corrupt=False)
+        reqs, eng = run(corrupt=True)
+        assert reqs[0].done and reqs[0].error is not None
+        assert "checksum" in reqs[0].error
+        assert eng.stats["failed"] == 1
+        assert reqs[1].error is None
+        assert reqs[1].tokens == ctrl[1].tokens        # neighbor untouched
+        ks = eng.kv_stats()
+        assert ks["kv_integrity_failures"] == 1
+        assert ks["kv_quarantined_pages"] == 1
+        assert len(eng.kv.spill_tier.quarantined) == 1  # evidence kept
+        assert eng.kv.spill_tier.live_count == 0
+        assert eng.kv.pool.free_count == eng.kv.pool.num_pages
+        assert eng._reserved_total == 0
+
+    def test_poisoned_generation_fails_owner_in_step_loop(self):
+        """The engine's step loop turns a read-guard trip into a
+        structured single-request failure, not a crashed batch."""
+        cfg = apack_cfg()
+        params = M.init_params(configs.get_smoke_config("qwen3-1.7b"), KEY)
+        eng = _mk_engine(cfg, params, max_batch=2, max_len=40)
+        rng = np.random.default_rng(2)
+        reqs = [Request(rid=i, prompt=rng.integers(
+                    0, cfg.vocab_size, 8).astype(np.int32),
+                    max_new_tokens=8) for i in range(2)]
+        for r in reqs:
+            eng.submit(r)
+        for _ in range(4):
+            eng.step()
+        layer = eng.kv.attn_layers[0]
+        victims = [p for p in eng.kv.page_tables[0][layer] if p >= 0]
+        FaultInjector().poison_generation(eng.kv, victims[0])
+        eng.run_until_drained(max_steps=200)
+        assert reqs[0].done and "poisoned" in (reqs[0].error or "")
+        assert eng.stats["failed"] == 1
+        assert reqs[1].done and reqs[1].error is None
+        assert len(reqs[1].tokens) >= 8
+
+
+# ------------------------------------------------- pressure + scheduling
+class TestPressureScheduling:
+    def test_watchdog_preempts_hung_slot_and_recovers(self):
+        """Injected step stalls past the straggler threshold: the
+        watchdog preempts-with-spill the longest-running slot (structured
+        event, shared StragglerWatchdog code path) and the request still
+        completes bit-exactly after resume."""
+        cfg = apack_cfg()
+        params = M.init_params(configs.get_smoke_config("qwen3-1.7b"), KEY)
+
+        def run(inj):
+            eng = _mk_engine(cfg, params, max_batch=2, max_len=48,
+                             watchdog_ratio=4.0, watchdog_patience=2,
+                             faults=inj)
+            rng = np.random.default_rng(5)
+            reqs = [Request(rid=i, prompt=rng.integers(
+                        0, cfg.vocab_size, 8).astype(np.int32),
+                        max_new_tokens=14) for i in range(2)]
+            for r in reqs:
+                eng.submit(r)
+            for _ in range(9):       # warm the window past the jit step
+                eng.step()
+            if inj is not None:
+                inj.delay_steps(0.5, n=3)          # sustained stall
+            eng.run_until_drained(max_steps=300)
+            return reqs, eng
+
+        ctrl, _ = run(None)
+        reqs, eng = run(FaultInjector())
+        assert eng.stats["watchdog_preempted"] >= 1
+        assert eng.stats["spilled_requests"] >= 1
+        assert all(r.done and r.error is None for r in reqs)
+        for r, c in zip(reqs, ctrl):
+            assert r.tokens == c.tokens            # stall never costs bits
+        assert eng.kv.pool.free_count == eng.kv.pool.num_pages
+
+    def test_admission_impossible_is_structured_under_pressure(self):
+        """kv_pressure with nothing to spill and nothing to preempt: the
+        escalation raises a typed error naming the stuck request instead
+        of spinning."""
+        cfg = apack_cfg()
+        params = M.init_params(configs.get_smoke_config("qwen3-1.7b"), KEY)
+        eng = _mk_engine(cfg, params, max_batch=1, max_len=24,
+                         kv_pressure=True)
+        # an external hold on the whole pool (models a co-tenant): no
+        # retire, spill, or preemption can ever free these pages
+        eng._reserved[999] = eng.kv.pool.num_pages
+        eng._reserved_total = eng.kv.pool.num_pages
+        req = Request(rid=0, prompt=np.arange(8, dtype=np.int32),
+                      max_new_tokens=4)
+        eng.submit(req)
+        with pytest.raises(AdmissionImpossible,
+                           match="no active slots") as ei:
+            eng.run_until_drained(max_steps=100)
+        assert ei.value.rid == 0
+        assert ei.value.pages_needed > 0
+
+    def test_run_until_drained_raises_instead_of_silent_spinning(self):
+        """Without the pressure opt-in the FIFO path gets bounded
+        patience, then the same structured error — never a silent
+        max_steps burn."""
+        cfg = apack_cfg()
+        params = M.init_params(configs.get_smoke_config("qwen3-1.7b"), KEY)
+        eng = _mk_engine(cfg, params, max_batch=1, max_len=24,
+                         pressure_backoff_max=4)
+        eng._reserved[999] = eng.kv.pool.num_pages
+        eng._reserved_total = eng.kv.pool.num_pages
+        eng.submit(Request(rid=0, prompt=np.arange(8, dtype=np.int32),
+                           max_new_tokens=4))
+        with pytest.raises(AdmissionImpossible, match="no-progress"):
+            eng.run_until_drained(max_steps=100)
+
+    def test_pressure_rotation_completes_undersized_pool(self):
+        """Pool at ~half the working set, kv_pressure on: preempt-with-
+        spill rotation drains every request with tokens identical to an
+        uncontended run (the bench's acceptance property, in-suite)."""
+        cfg = apack_cfg()
+        params = M.init_params(configs.get_smoke_config("qwen3-1.7b"), KEY)
+        per_req = M.PagedKVCache.pages_for_config(cfg, 12, 4)
+
+        def run(pages, pressure):
+            eng = ServeEngine(cfg, params, max_batch=3, max_len=16,
+                              kv_page_size=4, kv_calib_pages=2,
+                              kv_pages=pages, kv_pressure=pressure,
+                              slot_deadline_steps=4 if pressure else None)
+            rng = np.random.default_rng(11)
+            reqs = [Request(rid=i, prompt=rng.integers(
+                        0, cfg.vocab_size, 8).astype(np.int32),
+                        max_new_tokens=4) for i in range(3)]
+            for r in reqs:
+                eng.submit(r)
+            eng.run_until_drained(max_steps=400)
+            return reqs, eng
+
+        ctrl, _ = run(None, False)
+        reqs, eng = run(max(per_req, (3 * per_req) // 2), True)
+        assert all(r.done and r.error is None for r in reqs)
+        for r, c in zip(reqs, ctrl):
+            assert r.tokens == c.tokens
+        assert eng.kv_stats()["kv_spill"]["pages"] > 0
+        assert eng.stats["preempted"] > 0
+        assert eng.kv.pool.free_count == eng.kv.pool.num_pages
+        assert eng.kv.spill_tier.live_count == 0
+
+
+# ------------------------------------------------ shared watchdog events
+class TestStragglerWatchdog:
+    def test_structured_events_and_escalation(self):
+        """The shared watchdog emits typed events: 'straggler' per slow
+        step, 'hung' once ``patience`` consecutive slow steps accrue — and
+        a normal step resets the streak.  The stall must *escalate* to
+        stay flagged: the windowed mean absorbs a constant slowdown."""
+        seen = []
+        wd = StragglerWatchdog(ratio=5.0, patience=3, window=8,
+                               on_event=seen.append)
+        for _ in range(8):
+            assert wd.observe(0.01) is None
+        ev = wd.observe(1.0)
+        assert isinstance(ev, WatchdogEvent)
+        assert ev.kind == "straggler" and ev.consecutive == 1
+        assert wd.observe(0.01) is None                # streak resets
+        assert wd.events == 0
+        evs = [wd.observe(dt) for dt in (1.0, 10.0, 100.0)]
+        assert [e.kind for e in evs] == \
+            ["straggler", "straggler", "hung"]
+        assert evs[-1].consecutive == 3
+        assert seen[-1].kind == "hung"
+        assert len(wd.event_log) == 4
+        wd.reset()
+        assert wd.events == 0
+
+    def test_supervisor_exposes_shared_watchdog(self, tmp_path):
+        """Supervisor delegates to the same StragglerWatchdog and keeps
+        its structured event callback + back-compat counters (and the
+        TimeoutError escalation contract)."""
+        from repro.runtime.supervisor import Supervisor, SupervisorConfig
+        seen = []
+        sup = Supervisor(SupervisorConfig(str(tmp_path),
+                                          straggler_ratio=5.0,
+                                          straggler_patience=2),
+                         make_state=lambda: (0, {}),
+                         step_fn=lambda s, i: (s, {}),
+                         on_watchdog_event=seen.append)
+        for _ in range(8):
+            sup._watchdog(0.01)
+        sup._watchdog(1.0)
+        assert sup.straggler_events == 1
+        assert seen and seen[-1].kind == "straggler"
+        with pytest.raises(TimeoutError):
+            sup._watchdog(10.0)
+        assert seen[-1].kind == "hung"
+        assert len(sup.step_times) == 10
+        sup.straggler_events = 0                       # run()'s reset path
+        assert sup.watchdog.events == 0
