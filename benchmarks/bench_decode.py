@@ -253,6 +253,189 @@ def pressure_scenario(arch: str = "qwen3-1.7b", *, requests: int = 4,
     }
 
 
+def serving_scenario(arch: str = "qwen3-1.7b", *, requests: int = 12,
+                     max_new: int = 8, max_batch: int = 3,
+                     max_len: int = 48, load: float = 2.0) -> dict:
+    """Open-loop serving workload: Poisson arrivals (seeded exponential
+    inter-arrival gaps, scaled so the offered load is ``load`` of one
+    engine's measured decode throughput) over a varied prompt-length mix
+    including one long prompt, served by the synchronous engine and the
+    async event-loop engine on the *same wall-clock arrival schedule*.
+    The default load oversubscribes the engine (queueing regime): that is
+    where the overlap pays — an idle engine admits like sync and only
+    adds its one-step pipeline latency.
+
+    Reports per-engine end-to-end latency p50/p99 and tokens/s, checks
+    greedy tokens bit-identical between the two engines, and keeps the
+    fused path's steady-state zero-``device_get`` guard on the async
+    run — the overlap must hide host work, not move it back onto the
+    device boundary."""
+    import jax
+    from repro import configs
+    from repro.models import model as M
+    from repro.serve import Request, ServeEngine
+
+    base = configs.get_smoke_config(arch)
+    cfg = dataclasses.replace(base, kv_cache_dtype="apack-int8")
+    params = M.init_params(base, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(23)
+    lens = [6, 12, 9, 24, 7, 16, 10, 5]
+    prompts = [rng.integers(0, cfg.vocab_size, lens[i % len(lens)])
+               .astype(np.int32) for i in range(requests)]
+
+    def build(scheduler):
+        return ServeEngine(cfg, params, max_batch=max_batch,
+                           max_len=max_len, kv_page_size=4,
+                           kv_calib_pages=2, scheduler=scheduler)
+
+    def warmup(eng):
+        # two passes: the first eats every jit compile (prefill buckets,
+        # decode); the second, compile-free, measures the honest service
+        # rate — deriving arrival gaps from a compile-inflated step time
+        # would spread the schedule out and quietly underload the wave
+        t_step = 0.0
+        for pass_base in (10_000, 20_000):
+            for i, p in enumerate(prompts):
+                eng.submit(Request(rid=pass_base + i, prompt=p,
+                                   max_new_tokens=max_new))
+            steps0 = eng.stats["steps"]
+            t0 = time.perf_counter()
+            eng.run_until_drained(max_steps=4000)
+            t_step = ((time.perf_counter() - t0)
+                      / max(eng.stats["steps"] - steps0, 1))
+        eng._lat_wait.clear()
+        eng._lat_e2e.clear()
+        return t_step
+
+    def wave(eng, arrivals, rid_base):
+        reqs = [Request(rid=rid_base + i, prompt=p, max_new_tokens=max_new)
+                for i, p in enumerate(prompts)]
+        eng._lat_wait.clear()
+        eng._lat_e2e.clear()
+        steps0, gen0 = eng.stats["steps"], eng.stats["generated"]
+        per_step_d2h = []
+        nxt = 0
+        t0 = time.perf_counter()
+        for _ in range(5000):
+            now = time.perf_counter() - t0
+            while nxt < len(reqs) and arrivals[nxt] <= now:
+                eng.submit(reqs[nxt])
+                nxt += 1
+            before = eng.kv.transfers["d2h_calls"]
+            n = eng.step()
+            if n:
+                per_step_d2h.append(eng.kv.transfers["d2h_calls"]
+                                    - before)
+            if n == 0 and not eng.queue and not eng._pump:
+                if nxt >= len(reqs):
+                    break
+                # idle until the next arrival (open-loop workload)
+                time.sleep(max(arrivals[nxt]
+                               - (time.perf_counter() - t0), 0.0))
+        else:
+            raise RuntimeError("serving wave failed to drain")
+        wall = time.perf_counter() - t0
+        assert all(r.done and not r.error for r in reqs)
+        lat = eng.latency_stats()
+        return {"tokens": [r.tokens for r in reqs],
+                "tokens_per_s": (eng.stats["generated"] - gen0) / wall,
+                "steps_per_s": (eng.stats["steps"] - steps0) / wall,
+                "e2e_p50_ms": lat["e2e_p50"] * 1e3,
+                "e2e_p99_ms": lat["e2e_p99"] * 1e3,
+                "queue_wait_p99_ms": lat["queue_wait_p99"] * 1e3,
+                "steady_d2h_calls": (min(per_step_d2h)
+                                     if per_step_d2h else 0)}
+
+    engines = {s: build(s) for s in ("sync", "async")}
+    t_step = warmup(engines["sync"])
+    warmup(engines["async"])
+    # offered load: ~`load` requests' worth of decode work per unit of
+    # measured engine capacity (the same absolute schedule drives both
+    # engines — identical offered traffic)
+    mean_gap = t_step * max_new / (load * max_batch)
+    gaps = rng.exponential(mean_gap, requests)
+    arrivals = np.cumsum(gaps)
+    # 5 *interleaved* sync/async wave pairs on the same schedule, then
+    # the median of the per-pair ratios: interleaving makes machine
+    # drift hit both engines alike, pairing cancels it out of the
+    # ratio, and the median shrugs off a throttle spike landing on one
+    # wave.  (A min-per-engine statistic is wrong here: it compares
+    # sync's luckiest wave against async's, which on a noisy host is a
+    # coin flip.)  Greedy tokens are asserted identical across every
+    # wave of both engines.
+    waves: dict = {"sync": [], "async": []}
+    for w in range(5):
+        for scheduler in ("sync", "async"):
+            r = wave(engines[scheduler], arrivals, rid_base=(w + 1) * 1000)
+            if waves[scheduler] and r["tokens"] != waves[scheduler][0]["tokens"]:
+                raise RuntimeError("greedy tokens diverged across waves")
+            waves[scheduler].append(r)
+    if waves["sync"][0]["tokens"] != waves["async"][0]["tokens"]:
+        # the event loop must reschedule work, never change it
+        raise RuntimeError("greedy tokens diverged between sync and "
+                           "async engines")
+
+    med = lambda xs: float(np.median(xs))
+    out = {}
+    for scheduler, eng in engines.items():
+        rs = waves[scheduler]
+        out[scheduler] = {
+            k: med([r[k] for r in rs])
+            for k in ("tokens_per_s", "steps_per_s", "e2e_p50_ms",
+                      "e2e_p99_ms", "queue_wait_p99_ms")}
+        out[scheduler]["steady_d2h_calls"] = min(
+            r["steady_d2h_calls"] for r in rs)
+        out[scheduler]["prefill_chunks"] = eng.stats["prefill_chunks"]
+        out[scheduler]["staged_readahead"] = eng.stats["staged_readahead"]
+    out["paired"] = {
+        "e2e_p99_ratio": med(
+            [a["e2e_p99_ms"] / s["e2e_p99_ms"]
+             for a, s in zip(waves["async"], waves["sync"])]),
+        "queue_wait_p99_ratio": med(
+            [a["queue_wait_p99_ms"] / max(s["queue_wait_p99_ms"], 1e-9)
+             for a, s in zip(waves["async"], waves["sync"])]),
+        "tokens_per_s_ratio": med(
+            [a["tokens_per_s"] / s["tokens_per_s"]
+             for a, s in zip(waves["async"], waves["sync"])]),
+    }
+    return out
+
+
+def emit_serving(emit, d: dict) -> None:
+    for mode in ("sync", "async"):
+        r = d[mode]
+        emit(f"decode/serving_tokens_per_s/{mode}", 0.0,
+             f"Poisson-arrival open-loop throughput, median of 5 waves "
+             f"(steps/s={r['steps_per_s']:.2f})",
+             value=float(r["tokens_per_s"]))
+        emit(f"decode/serving_e2e_p99_ms/{mode}", 0.0,
+             f"end-to-end latency p99, median of 5 waves "
+             f"(p50={r['e2e_p50_ms']:.1f}ms, "
+             f"queue-wait p99={r['queue_wait_p99_ms']:.1f}ms)",
+             value=float(r["e2e_p99_ms"]))
+    emit("decode/serving_steady_d2h_calls/async", 0.0,
+         "min per-step device_get calls, async engine (0 = overlap keeps "
+         "host work off the device boundary)",
+         value=float(d["async"]["steady_d2h_calls"]))
+    p = d["paired"]
+    emit("decode/serving_paired_queue_wait_ratio", 0.0,
+         "async/sync queue-wait p99, median over interleaved wave pairs "
+         "— the scheduling tail the event loop controls directly "
+         "(continuous admission + chunked prefill vs step-boundary FIFO)",
+         value=float(p["queue_wait_p99_ratio"]))
+    emit("decode/serving_paired_p99_ratio", 0.0,
+         "async/sync e2e p99, median over interleaved wave pairs (on a "
+         "serial CPU host the overlap cannot run concurrently, so this "
+         "carries scheduling wins + host noise; accelerator hosts see "
+         "the full overlap win)",
+         value=float(p["e2e_p99_ratio"]))
+    emit("decode/serving_async_speedup", 0.0,
+         f"async/sync tokens-per-s, median over interleaved wave pairs; "
+         f"{d['async']['prefill_chunks']} prefill chunks pumped "
+         "(tokens bit-identical)",
+         value=float(p["tokens_per_s_ratio"]))
+
+
 def emit_pressure(emit, d: dict) -> None:
     emit("decode/pressure_completed", 0.0,
          f"requests completed with pool at "
@@ -319,6 +502,7 @@ def main(emit) -> None:
          f"{shrink:.1f}x", value=speedup)
     emit_drift(emit, drift_scenario())
     emit_pressure(emit, pressure_scenario())
+    emit_serving(emit, serving_scenario())
 
 
 if __name__ == "__main__":
@@ -333,6 +517,9 @@ if __name__ == "__main__":
     ap.add_argument("--pressure", action="store_true",
                     help="run only the memory-pressure spill workload "
                          "(pool at 60% of the working set)")
+    ap.add_argument("--serving", action="store_true",
+                    help="run only the Poisson-arrival serving workload "
+                         "(sync vs async event-loop engine)")
     args = ap.parse_args()
 
     def _emit(name, us, derived, value=None):
@@ -343,5 +530,7 @@ if __name__ == "__main__":
         emit_drift(_emit, drift_scenario())
     elif args.pressure:
         emit_pressure(_emit, pressure_scenario())
+    elif args.serving:
+        emit_serving(_emit, serving_scenario())
     else:
         main(_emit)

@@ -66,6 +66,19 @@ def main() -> None:
                     metavar="STEPS",
                     help="preempt-with-spill any slot that decodes this "
                          "many steps while other requests queue")
+    ap.add_argument("--scheduler", default="sync",
+                    choices=["sync", "async"],
+                    help="engine core: 'async' runs the event-loop "
+                         "scheduler (host work overlaps the in-flight "
+                         "device step, chunked prefill, continuous "
+                         "admission); requires the fused apack-int8 KV")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    metavar="TOKENS",
+                    help="async scheduler: prompt tokens ingested per "
+                         "overlapped step (default: 4 pages' worth)")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="per-request end-to-end latency SLO; admission "
+                         "orders by earliest deadline instead of FIFO")
     args = ap.parse_args()
 
     cfg = (configs.get_smoke_config(args.arch) if args.smoke
@@ -93,12 +106,15 @@ def main() -> None:
                          kv_repack_budget=args.kv_repack_budget,
                          kv_pages=args.kv_pages,
                          kv_pressure=args.kv_pressure,
-                         slot_deadline_steps=args.slot_deadline)
+                         slot_deadline_steps=args.slot_deadline,
+                         scheduler=args.scheduler,
+                         prefill_chunk_tokens=args.prefill_chunk)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab_size,
                                         args.prompt_len).astype(np.int32),
-                    max_new_tokens=args.max_new)
+                    max_new_tokens=args.max_new,
+                    slo_ms=args.slo_ms)
             for i in range(args.requests)]
     for r in reqs:
         engine.submit(r)
@@ -108,6 +124,13 @@ def main() -> None:
     assert all(r.done for r in reqs)
     print(f"{engine.stats} in {dt:.1f}s "
           f"({engine.stats['generated']/max(dt,1e-9):.1f} tok/s)")
+    lat = engine.latency_stats()
+    if lat["n"]:
+        print(f"latency ({args.scheduler} scheduler, n={lat['n']}): "
+              f"queue-wait p50={lat['queue_wait_p50']*1e3:.1f}ms "
+              f"p99={lat['queue_wait_p99']*1e3:.1f}ms; "
+              f"e2e p50={lat['e2e_p50']*1e3:.1f}ms "
+              f"p99={lat['e2e_p99']*1e3:.1f}ms")
     if engine.paged:
         ks = engine.kv_stats()
         ratio = ("n/a (no KV reads)" if ks["kv_ratio"] is None

@@ -127,19 +127,28 @@ def _ffn(cfg: ModelConfig, p: dict, h: jax.Array):
 
 
 def block_full(cfg: ModelConfig, kind: str, p: dict, h: jax.Array,
-               collect_cache: bool = True):
-    """Full-sequence (train / prefill) block.  Returns (h, cache, aux)."""
+               collect_cache: bool = True, *, pad_mask=None, true_len=None):
+    """Full-sequence (train / prefill) block.  Returns (h, cache, aux).
+
+    ``pad_mask``/``true_len`` (both set, or neither): the bucketed-prefill
+    path — the sequence is end-padded to a jit bucket and every stateful
+    construction (local rolling ring, recurrent/mLSTM/sLSTM carried
+    state) must ignore positions past ``true_len``.  Attention math needs
+    no masking beyond causality (pad keys sit *after* every real query)."""
     aux: dict = {}
     hn = m.rms_norm(h, p["norm1"], cfg.norm_eps)
     if kind in ("global", "local"):
         inner, cache = m.attention_full(p["inner"], hn, cfg,
-                                        local=(kind == "local"))
+                                        local=(kind == "local"),
+                                        true_len=true_len)
     elif kind == "recurrent":
-        inner, cache = m.recurrent_full(p["inner"], hn, cfg)
+        inner, cache = m.recurrent_full(p["inner"], hn, cfg,
+                                        pad_mask=pad_mask,
+                                        true_len=true_len)
     elif kind == "mlstm":
-        inner, cache = m.mlstm_full(p["inner"], hn, cfg)
+        inner, cache = m.mlstm_full(p["inner"], hn, cfg, pad_mask=pad_mask)
     elif kind == "slstm":
-        inner, cache = m.slstm_full(p["inner"], hn, cfg)
+        inner, cache = m.slstm_full(p["inner"], hn, cfg, pad_mask=pad_mask)
     else:
         raise ValueError(kind)
     if not collect_cache:
@@ -227,7 +236,8 @@ def embed_inputs(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
 
 
 def _scan_blocks(cfg: ModelConfig, params: dict, h: jax.Array, *,
-                 remat: bool = True, collect_cache: bool = True):
+                 remat: bool = True, collect_cache: bool = True,
+                 pad_mask=None, true_len=None):
     """Scan the stacked cycle over the sequence hiddens (full mode)."""
     def cycle_fn(carry, p_cycle):
         h, lb, rz = carry
@@ -239,7 +249,8 @@ def _scan_blocks(cfg: ModelConfig, params: dict, h: jax.Array, *,
         caches = []
         for i, kind in enumerate(cfg.cycle):
             h, cache, aux = block_full(cfg, kind, p_cycle[i], h,
-                                       collect_cache)
+                                       collect_cache, pad_mask=pad_mask,
+                                       true_len=true_len)
             h = shd.constrain(h, "residual")
             caches.append(cache)
             lb = lb + aux.get("load_balance", 0.0)
@@ -255,22 +266,36 @@ def _scan_blocks(cfg: ModelConfig, params: dict, h: jax.Array, *,
 
 def forward(cfg: ModelConfig, params: dict, batch: dict, *,
             remat: bool = True, collect_cache: bool = False,
-            last_only: bool = False):
+            last_only: bool = False, true_len=None):
     """Full forward.  Returns (logits, caches, aux).  ``collect_cache``
     is for prefill only — training must not stack per-layer caches.
     ``last_only`` computes the LM head for the final position only
     (prefill: the all-position full-vocab logits would otherwise
-    materialize tens of GB per device)."""
+    materialize tens of GB per device).
+
+    ``true_len`` (traced i32 scalar, bucketed prefill): tokens are
+    end-padded to a power-of-two jit bucket so varied-length traffic
+    reuses compiles; only the first ``true_len`` positions are real.
+    Stateful layers freeze past the true end (see ``block_full``) and
+    ``last_only`` slices the logits at ``true_len - 1`` — the masked
+    last-token logits — instead of the padded sequence end."""
     h = shd.constrain(embed_inputs(cfg, params, batch), "residual")
+    pad_mask = None
+    if true_len is not None:
+        true_len = jnp.asarray(true_len, jnp.int32)
+        pad_mask = jnp.arange(h.shape[1]) >= true_len      # [S] bool
     prefix_caches = []
     for kind, p in zip(cfg.prefix_pattern, params.get("prefix", [])):
-        h, cache, _ = block_full(cfg, kind, p, h, collect_cache)
+        h, cache, _ = block_full(cfg, kind, p, h, collect_cache,
+                                 pad_mask=pad_mask, true_len=true_len)
         h = shd.constrain(h, "residual")
         prefix_caches.append(cache)
     h, caches, aux = _scan_blocks(cfg, params, h, remat=remat,
-                                  collect_cache=collect_cache)
+                                  collect_cache=collect_cache,
+                                  pad_mask=pad_mask, true_len=true_len)
     if last_only:
-        h = h[:, -1:]
+        h = (h[:, -1:] if true_len is None else
+             jax.lax.dynamic_slice_in_dim(h, true_len - 1, 1, axis=1))
     h = m.rms_norm(h, params["final_norm"], cfg.norm_eps)
     logits = _head(cfg, params, h)
     return logits, {"prefix": prefix_caches, "blocks": caches}, aux
@@ -1032,25 +1057,56 @@ class PagedKVCache:
         the live window: fully-dead leading pages are skipped outright
         (``page_base`` starts past them) and in-page positions older than
         the window ingest as zeros (dead by construction, never
-        materialized).  Recurrent-kind layers store their final state."""
-        ps = self.page_size
+        materialized).  Recurrent-kind layers store their final state.
+
+        This is the monolithic wrapper over the resumable chunk API
+        (``prefill_host_view`` -> ``ingest_prefill_chunk``* ->
+        ``finish_prefill``) that the async engine paginates across decode
+        steps, so one long prompt never stalls the batch."""
+        view = self.prefill_host_view(caches)
+        self.ingest_prefill_chunk(rid, view, 0, s, s)
+        self.finish_prefill(rid, view, s)
+
+    def prefill_host_view(self, caches: dict) -> dict:
+        """One batched d2h pull of a (batch-1) prefill cache into host
+        numpy — attn layers as ``(k, v, k_scale, v_scale)`` tuples, state
+        layers as their field dicts.  Forcing the view blocks on the
+        prefill computation, so the async engine calls this during the
+        overlap window where the wait rides the in-flight decode step."""
+        view: dict = {}
         for layer in self.attn_layers:
-            kind = self.layer_kinds[layer]
             leaf, j = self._layer_cache(caches, layer)
 
             def one(f, leaf=leaf, j=j):
                 x = leaf[f] if j is None else leaf[f][j]
                 return np.asarray(self._fetch(x))[0]
 
-            k, v = one("k"), one("v")                  # [S or window, H, dh]
-            ksc, vsc = one("k_scale"), one("v_scale")
+            view[layer] = (one("k"), one("v"), one("k_scale"),
+                           one("v_scale"))
+        for layer in self.state_layers:
+            leaf, j = self._layer_cache(caches, layer)
+            view[layer] = {
+                f: np.asarray(self._fetch(x if j is None else x[j]))[0]
+                for f, x in leaf.items()}
+        return view
+
+    def ingest_prefill_chunk(self, rid: int, view: dict, t0: int, t1: int,
+                             s: int) -> None:
+        """Ingest prompt positions ``[t0, t1)`` of an ``s``-token prefill
+        from a host view.  Resumable: chunks may arrive across decode
+        steps; page/seal/sketch work is identical to a single monolithic
+        call (same tokens, same order)."""
+        ps = self.page_size
+        for layer in self.attn_layers:
+            kind = self.layer_kinds[layer]
+            k, v, ksc, vsc = view[layer]               # [S or window, H, dh]
             if kind == "local":
                 w = k.shape[0]                         # ring width == window
                 start = (max(0, s - w) // ps) * ps
                 self.page_base[rid][layer] = start // ps
             else:
                 w, start = None, 0
-            for t in range(start, s):
+            for t in range(max(t0, start), t1):
                 if kind == "local":
                     if t < s - w:
                         kq, vq = np.zeros_like(k[0]), np.zeros_like(v[0])
@@ -1061,11 +1117,12 @@ class PagedKVCache:
                 else:
                     kq, vq, kss, vss = k[t], v[t], ksc[t], vsc[t]
                 self._append_layer_token(rid, layer, kq, vq, kss, vss, t)
+
+    def finish_prefill(self, rid: int, view: dict, s: int) -> None:
+        """Final chunk bookkeeping: store recurrent-kind final states,
+        stamp the sequence length, evict rolled-out local pages."""
         for layer in self.state_layers:
-            leaf, j = self._layer_cache(caches, layer)
-            self.states[rid][layer] = {
-                f: np.asarray(self._fetch(x if j is None else x[j]))[0]
-                for f, x in leaf.items()}
+            self.states[rid][layer] = dict(view[layer])
         self.seq_len[rid] = s
         self.evict_rolled(rid)
 

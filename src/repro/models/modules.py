@@ -91,11 +91,20 @@ def _mask(qpos, kpos, *, causal: bool, window: int) -> jax.Array:
 
 
 def attention_full(p: dict, x: jax.Array, cfg: ModelConfig, *,
-                   local: bool) -> tuple[jax.Array, dict]:
+                   local: bool, true_len=None) -> tuple[jax.Array, dict]:
     """Training/prefill attention, chunked over queries.
 
     Returns (out [B,S,D], cache {k, v}) — cache is the rolling window for
-    local layers, the full sequence otherwise."""
+    local layers, the full sequence otherwise.
+
+    ``true_len`` (traced i32 scalar, bucketed-prefill path): the sequence
+    is end-padded to a jit bucket and only the first ``true_len`` positions
+    are real.  Causal masking already keeps pad keys out of real queries'
+    softmax rows; the only pad-sensitive output is the *local rolling
+    cache*, which must hold the last ``window`` REAL positions — so it is
+    built with a dynamic slice/roll at ``true_len`` instead of the static
+    sequence end (bit-identical to the unpadded construction for both the
+    ``s >= window`` and ``s < window`` branches)."""
     b, s, d = x.shape
     h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     g = h // hkv
@@ -142,7 +151,21 @@ def attention_full(p: dict, x: jax.Array, cfg: ModelConfig, *,
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
     if local:
         w_sz = cfg.window_size
-        if s >= w_sz:
+        if true_len is not None:
+            # dynamic ring at the *true* end: slot j must hold the latest
+            # real position p < true_len with p % w == j.  Left-padding k
+            # with w zeros makes kp[t : t+w] == k[t-w : t] with exact
+            # zeros where the index would be negative, which reproduces
+            # the t < w zero-fill branch below for free.
+            t = jnp.asarray(true_len, jnp.int32)
+
+            def ring(arr):
+                ap = jnp.pad(arr, ((0, 0), (w_sz, 0), (0, 0), (0, 0)))
+                tail = jax.lax.dynamic_slice_in_dim(ap, t, w_sz, axis=1)
+                return jnp.roll(tail, t % w_sz, axis=1)
+
+            kcache, vcache = ring(k), ring(v)
+        elif s >= w_sz:
             # rolling cache: slot j holds the latest position with pos%w == j
             tail_k = jax.lax.dynamic_slice_in_dim(k, s - w_sz, w_sz, axis=1)
             tail_v = jax.lax.dynamic_slice_in_dim(v, s - w_sz, w_sz, axis=1)
@@ -440,8 +463,15 @@ def _rglru_coeffs(p, xw):
     return a, beta * i * xw.astype(F32)
 
 
-def recurrent_full(p: dict, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, dict]:
-    """Griffin recurrent block over a full sequence (associative scan)."""
+def recurrent_full(p: dict, x: jax.Array, cfg: ModelConfig, *,
+                   pad_mask=None, true_len=None) -> tuple[jax.Array, dict]:
+    """Griffin recurrent block over a full sequence (associative scan).
+
+    ``pad_mask`` ([S] bool, True = end-padding past ``true_len``): pad
+    steps are made inert (a=1, input contribution 0) so the scan carries
+    ``h_{true_len-1}`` unchanged to the end — the ``h[:, -1]`` cache then
+    equals the unpadded final state, and the conv history is sliced at
+    the true end instead of the padded one."""
     b, s, d = x.shape
     xw = shd.constrain(x @ p["w_x"].astype(x.dtype), "ffn_hidden")  # [B,S,W]
     gate = jax.nn.gelu(
@@ -451,6 +481,10 @@ def recurrent_full(p: dict, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, 
     conv = sum(xp[:, i:i + s] * p["conv_w"][i].astype(x.dtype)
                for i in range(4))
     a, bx = _rglru_coeffs(p, conv)
+    if pad_mask is not None:
+        pad3 = pad_mask[None, :, None]                    # [1,S,1]
+        a = jnp.where(pad3, 1.0, a)
+        bx = jnp.where(pad3, 0.0, bx)
 
     def combine(c1, c2):
         a1, b1 = c1
@@ -460,9 +494,16 @@ def recurrent_full(p: dict, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, 
     af, bf = jax.lax.associative_scan(combine, (a, bx), axis=1)
     h = bf                                                # h_t with h_0 = 0
     y = (h.astype(x.dtype) * gate) @ p["w_out"].astype(x.dtype)
-    cache = {"h": h[:, -1].astype(F32),
-             "conv": xw[:, -3:].astype(F32) if s >= 3 else
-             jnp.pad(xw, ((0, 0), (3 - s, 0), (0, 0))).astype(F32)}
+    if true_len is not None:
+        # conv history of the 3 positions before true_len (zeros when
+        # true_len < 3 — identical semantics to the static branches)
+        conv_c = jax.lax.dynamic_slice_in_dim(
+            xp, jnp.asarray(true_len, jnp.int32), 3, axis=1)
+        cache = {"h": h[:, -1].astype(F32), "conv": conv_c.astype(F32)}
+    else:
+        cache = {"h": h[:, -1].astype(F32),
+                 "conv": xw[:, -3:].astype(F32) if s >= 3 else
+                 jnp.pad(xw, ((0, 0), (3 - s, 0), (0, 0))).astype(F32)}
     return y, cache
 
 
@@ -547,7 +588,12 @@ def _mlstm_chunk(q, k, v, i_gate, f_gate, c0, n0, m0):
     return out, c1, n1, m1
 
 
-def mlstm_full(p: dict, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, dict]:
+def mlstm_full(p: dict, x: jax.Array, cfg: ModelConfig, *,
+               pad_mask=None) -> tuple[jax.Array, dict]:
+    """``pad_mask`` ([S] bool, True = end-padding): pad steps get
+    ``i = -1e30`` (zero input weight) and ``f = 1e30`` (``log_sigmoid``
+    exactly 0.0 — no state decay), so the chunkwise scan carries the
+    state at the true end through the padded tail unchanged."""
     b, s, d = x.shape
     f = int(cfg.mlstm_proj_factor * d)
     h = cfg.num_heads
@@ -560,6 +606,10 @@ def mlstm_full(p: dict, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, dict
     v = jnp.einsum("bsf,fhd->bshd", up, p["wv"].astype(x.dtype))
     gates = jnp.einsum("bsf,fhg->bshg", up.astype(F32), p["w_if"])
     i_gate, f_gate = gates[..., 0], gates[..., 1] + 3.0    # forget bias
+    if pad_mask is not None:
+        padh = pad_mask[None, :, None]                     # [1,S,1]
+        i_gate = jnp.where(padh, -1e30, i_gate)
+        f_gate = jnp.where(padh, 1e30, f_gate)
     chunk = _chunk_of(s)
     nc = s // chunk
 
@@ -645,8 +695,13 @@ def init_slstm(cfg: ModelConfig, key) -> dict:
     }
 
 
-def _slstm_cell(zx, state, p, h_heads):
-    """One time step.  zx: [B, 4, D] pre-activations (input part)."""
+def _slstm_cell(zx, state, p, h_heads, pad=None):
+    """One time step.  zx: [B, 4, D] pre-activations (input part).
+
+    ``pad`` (scalar bool, bucketed-prefill path): a padding step is made
+    a no-op — input gate forced to -1e30, forget decay to 0 (log-space),
+    and the hidden output held at ``hprev`` — so the carried state at
+    the end of a padded sequence equals the state at the true end."""
     c, n, m, hprev = state
     b, _, d = zx.shape
     hh = hprev.reshape(b, h_heads, -1)
@@ -658,33 +713,44 @@ def _slstm_cell(zx, state, p, h_heads):
     ft = pre[:, 2]
     ot = jax.nn.sigmoid(pre[:, 3])
     logf = jax.nn.log_sigmoid(ft)
+    if pad is not None:
+        it = jnp.where(pad, -1e30, it)
+        logf = jnp.where(pad, 0.0, logf)
     m1 = jnp.maximum(logf + m, it)
     wi = jnp.exp(it - m1)
     wf = jnp.exp(logf + m - m1)
     c1 = wf * c + wi * zt
     n1 = wf * n + wi
     h1 = ot * (c1 / jnp.maximum(n1, 1e-6))
+    if pad is not None:
+        h1 = jnp.where(pad, hprev, h1)
     return (c1, n1, m1, h1), h1
 
 
-def slstm_full(p: dict, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, dict]:
+def slstm_full(p: dict, x: jax.Array, cfg: ModelConfig, *,
+               pad_mask=None) -> tuple[jax.Array, dict]:
     b, s, d = x.shape
     h = cfg.num_heads
     zx = jnp.einsum("bsd,dge->bsge", x, p["w_in"].astype(x.dtype))  # [B,S,4,D]
     chunk = _chunk_of(s)
     nc = s // chunk
     zc = zx.reshape(b, nc, chunk, 4, d).transpose(1, 2, 0, 3, 4)    # [nc,C,B,4,D]
+    padc = (pad_mask.reshape(nc, chunk) if pad_mask is not None
+            else jnp.zeros((nc, chunk), bool))
 
     @jax.checkpoint
-    def chunk_body(state, zchunk):                                  # depth-1
-        def step(st, zt):                                           # depth-2
-            return _slstm_cell(zt, st, p, h)
-        state, hs = jax.lax.scan(step, state, zchunk)
+    def chunk_body(state, xs):                                      # depth-1
+        zchunk, pchunk = xs
+
+        def step(st, xt):                                           # depth-2
+            zt, pt = xt
+            return _slstm_cell(zt, st, p, h, pad=pt)
+        state, hs = jax.lax.scan(step, state, (zchunk, pchunk))
         return state, hs
 
     init = (jnp.zeros((b, d), F32), jnp.zeros((b, d), F32),
             jnp.full((b, d), -1e30, F32), jnp.zeros((b, d), F32))
-    state, hs = jax.lax.scan(chunk_body, init, zc)                  # [nc,C,B,D]
+    state, hs = jax.lax.scan(chunk_body, init, (zc, padc))          # [nc,C,B,D]
     hseq = hs.transpose(2, 0, 1, 3).reshape(b, s, d).astype(x.dtype)
     hseq = rms_norm(hseq, p["out_norm"], cfg.norm_eps)
     up = jnp.einsum("bsd,dgf->bsgf", hseq, p["w_up"].astype(x.dtype))

@@ -35,11 +35,18 @@ class WatchdogEvent:
 
     ``kind`` is ``"straggler"`` (flagged, below patience) or ``"hung"``
     (``consecutive`` flags reached patience — the caller should act:
-    supervisor raises, engine preempts-with-spill)."""
+    supervisor raises, engine preempts-with-spill).
+
+    ``phases`` (optional): per-phase wall-time breakdown of the observed
+    step.  The async serve engine reports its overlapped host work /
+    collect / dispatch split here, so a hung event attributes the stall
+    (host-side seal/re-pack/prefill vs the device step itself) instead
+    of reporting one opaque duration."""
     kind: str
     dt: float
     ema: float
     consecutive: int
+    phases: dict | None = None
 
 
 class StragglerWatchdog:
@@ -59,7 +66,8 @@ class StragglerWatchdog:
         self.events = 0                      # consecutive flagged steps
         self.event_log: list[WatchdogEvent] = []
 
-    def observe(self, dt: float) -> WatchdogEvent | None:
+    def observe(self, dt: float,
+                phases: dict | None = None) -> WatchdogEvent | None:
         ev = None
         if len(self.step_times) >= self.window:
             ema = float(np.mean(self.step_times[-self.window:]))
@@ -68,7 +76,7 @@ class StragglerWatchdog:
                 kind = "hung" if self.events >= self.patience \
                     else "straggler"
                 ev = WatchdogEvent(kind=kind, dt=dt, ema=ema,
-                                   consecutive=self.events)
+                                   consecutive=self.events, phases=phases)
             else:
                 self.events = 0
         self.step_times.append(dt)

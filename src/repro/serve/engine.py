@@ -1,16 +1,30 @@
 """Batched serving engine with APack-compressed weights.
 
-Continuous-batching-lite: a fixed pool of decode slots; finished sequences
-retire and waiting requests are admitted with a (jit-cached) single-request
-prefill.  Weights arrive APack-compressed (``compress_params``): the engine
-decompresses through the bit-exact codec at load and keeps per-tensor
-traffic stats — on TPU the fused ``decompress_matmul`` kernel consumes the
-compressed planes directly (kernels/decompress_matmul.py), which is the
-paper's Figure-1 integration; this engine is the scheduling layer above it.
+Continuous batching over a fixed pool of decode slots; finished sequences
+retire and waiting requests are admitted with a (jit-cached, power-of-two
+bucketed) single-request prefill.  Weights arrive APack-compressed
+(``compress_params``): the engine decompresses through the bit-exact codec
+at load and keeps per-tensor traffic stats — on TPU the fused
+``decompress_matmul`` kernel consumes the compressed planes directly
+(kernels/decompress_matmul.py), which is the paper's Figure-1 integration;
+this engine is the scheduling layer above it.
+
+Two schedulers share every slot/pool/pressure mechanism:
+
+* ``scheduler="sync"`` — the original loop: retire / admit / decode /
+  host work, strictly serialized per step.
+* ``scheduler="async"`` — the event-loop core (DESIGN.md §9): the fused
+  decode is *dispatched* and left in flight while the next iteration's
+  host work runs (seal pulls, sketch refresh + budgeted re-pack, chunked
+  prefill ingest, spill-tier readahead staging), then collected one
+  iteration later.  Greedy tokens are bit-identical to the sync engine —
+  the same kernels see the same inputs, only the host work moved off the
+  device critical path.
 """
 from __future__ import annotations
 
 import dataclasses
+import logging
 import time
 from collections import deque
 from typing import Any
@@ -26,6 +40,36 @@ from repro.models import modules as m
 from repro.models.config import ModelConfig
 from repro.runtime.supervisor import StragglerWatchdog, WatchdogEvent
 
+_log = logging.getLogger("repro.serve")
+
+# Distinct jit prefill bucket sizes before the recompile-storm warning
+# fires (same guard as kernels.paged_decode.gather_bucket).
+PREFILL_BUCKET_WARN_THRESHOLD = 12
+_seen_prefill_buckets: set[int] = set()
+
+
+def prefill_bucket(s: int, max_len: int) -> int:
+    """Power-of-two jit bucket for a prompt of length ``s``, capped at the
+    context window (every admissible prompt fits it, so the cap keeps the
+    bucket a valid cache length).  Varied-length traffic compiles one
+    prefill per *bucket* instead of one per exact length; past
+    ``PREFILL_BUCKET_WARN_THRESHOLD`` distinct buckets a warning fires
+    once per new size — the same recompile-storm guard PR 4 added for
+    ``gather_bucket``."""
+    b = 1
+    while b < s:
+        b *= 2
+    b = min(b, max_len)
+    if b not in _seen_prefill_buckets:
+        _seen_prefill_buckets.add(b)
+        if len(_seen_prefill_buckets) > PREFILL_BUCKET_WARN_THRESHOLD:
+            _log.warning(
+                "prefill has compiled %d distinct jit bucket sizes "
+                "(latest: %d): recompile storm — consider normalizing "
+                "prompt lengths or growing the bucket threshold",
+                len(_seen_prefill_buckets), b)
+    return b
+
 
 @dataclasses.dataclass
 class Request:
@@ -35,14 +79,53 @@ class Request:
     eos_id: int | None = None
     tokens: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # timestamps are time.perf_counter() — the monotonic clock.  A
+    # wall-clock here (the old time.time()) races NTP slew against the
+    # step loop's perf_counter and can report negative latencies.
     t_submit: float = 0.0
+    t_admit: float = 0.0                # prefill dispatch (queue-wait end)
     t_done: float = 0.0
     # SLO: steps this request may hold a decode slot while others queue
     # (None: engine-level slot_deadline_steps, or no deadline at all)
     deadline_steps: int | None = None
+    # SLO: target end-to-end latency.  Admission orders by earliest
+    # deadline (t_submit + slo_ms); None sorts last, so traffic that sets
+    # no SLOs keeps pure-FIFO admission exactly.
+    slo_ms: float | None = None
     # structured failure (integrity quarantine): done=True + error set,
     # tokens truncated at the failure point — never silently wrong
     error: str | None = None
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """Dispatch-time record of one in-flight fused decode step (async
+    scheduler).  Collect applies tokens against this snapshot of the
+    slot binding — immune to any later rebinding, which by construction
+    only happens post-collect."""
+    slot_reqs: list                      # dispatch-time slot -> Request
+    slot_rids: list                      # dispatch-time slot -> rid
+    logits: Any                          # device future, [B, 1, V]
+
+
+@dataclasses.dataclass
+class _PendingPrefill:
+    """A queued request whose prefill is being pumped in the background
+    (async scheduler): the bucketed forward was dispatched (device
+    future), its cache view is pulled once, and pages ingest chunk by
+    chunk during the overlapped host phase — one long prompt no longer
+    stalls the whole batch behind a monolithic prefill."""
+    req: Request
+    s: int                               # true prompt length
+    logits: Any                          # [1, 1, V] device future
+    caches: Any                          # forward caches until view pull
+    view: dict | None = None             # host-side prefill view
+    cursor: int = 0                      # tokens ingested so far
+    tok: int | None = None               # first generated token when done
+
+    @property
+    def ready(self) -> bool:
+        return self.tok is not None
 
 
 class AdmissionImpossible(RuntimeError):
@@ -132,6 +215,8 @@ class ServeEngine:
                  watchdog_ratio: float | None = None,
                  watchdog_patience: int = 3,
                  kv_verify_on_repack: bool = False,
+                 scheduler: str = "sync",
+                 prefill_chunk_tokens: int | None = None,
                  faults=None):
         self.cfg = cfg
         self.params = params
@@ -149,7 +234,10 @@ class ServeEngine:
                       "kv_pages_repacked": 0, "failed": 0,
                       "spilled_requests": 0, "admission_retries": 0,
                       "pressure_preempted": 0, "deadline_preempted": 0,
-                      "watchdog_preempted": 0}
+                      "watchdog_preempted": 0, "prefill_chunks": 0,
+                      "staged_readahead": 0,
+                      "queue_wait_p50_ms": 0.0, "queue_wait_p99_ms": 0.0,
+                      "e2e_p50_ms": 0.0, "e2e_p99_ms": 0.0}
         # pressure policy: level 1 (always on) spills *preempted*
         # requests' idle pages to the host tier when admission blocks;
         # level 2 (kv_pressure opt-in) additionally preempts-with-spill
@@ -220,6 +308,24 @@ class ServeEngine:
         self._decode = jax.jit(
             lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos))
         self._prefill_cache = {}
+        # ---- event-loop scheduler state (DESIGN.md §9) ----
+        if scheduler not in ("sync", "async"):
+            raise ValueError(f"unknown scheduler {scheduler!r}")
+        if scheduler == "async" and not (self.paged and self.fused):
+            raise ValueError(
+                "scheduler='async' requires the fused paged apack-int8 KV "
+                "(the overlap window is the in-flight fused device step)")
+        self.scheduler = scheduler
+        # chunked-prefill ingest budget per overlapped host phase; the
+        # default covers a few pages so short prompts still bind in one
+        # step while long ones amortize over many
+        self.prefill_chunk_tokens = (int(prefill_chunk_tokens)
+                                     if prefill_chunk_tokens
+                                     else kv_page_size * 4)
+        self._inflight: _InFlight | None = None
+        self._pump: dict[int, _PendingPrefill] = {}
+        self._lat_wait: list[float] = []
+        self._lat_e2e: list[float] = []
 
     # -------------------------------------------------------- scheduling
     def submit(self, req: Request) -> None:
@@ -231,7 +337,7 @@ class ServeEngine:
                     f"request {req.rid} needs {need} pages worst-case but "
                     f"the pool only has {self.kv.pool.num_pages}; shorten "
                     "the request or grow kv_pages")
-        req.t_submit = time.time()
+        req.t_submit = time.perf_counter()
         self.queue.append(req)
 
     def _pages_for(self, req: Request) -> int:
@@ -239,6 +345,63 @@ class ServeEngine:
         the context window (so ``append_token`` can never starve)."""
         toks = min(self.max_len, len(req.prompt) + req.max_new_tokens)
         return self.kv.pages_needed(toks)
+
+    def _admission_order(self) -> list[Request]:
+        """Queue snapshot in admission priority order: earliest SLO
+        deadline first (EDF over ``t_submit + slo_ms``), submission order
+        among requests without an SLO and as the tie-break — traffic that
+        sets no SLOs keeps today's pure-FIFO admission exactly."""
+        if not any(r.slo_ms is not None for r in self.queue):
+            return list(self.queue)
+
+        def key(ir):
+            i, r = ir
+            ddl = (r.t_submit + r.slo_ms / 1e3
+                   if r.slo_ms is not None else float("inf"))
+            return (ddl, i)
+
+        return [r for _, r in sorted(enumerate(self.queue), key=key)]
+
+    def _try_reserve(self, req: Request, *,
+                     allow_relief: bool) -> int | None:
+        """Reservation headroom check for one admission candidate.
+        Returns the page count to reserve (0 when the request still holds
+        its reservation), or None while it stays blocked.  Only the
+        priority head may trigger pressure relief (``allow_relief``) —
+        other candidates admit into existing headroom only, so continuous
+        batching never spills victims on behalf of a request that jumped
+        the queue."""
+        need = 0 if req.rid in self._reserved else self._pages_for(req)
+        if self._reserved_total + need <= self.kv.pool.num_pages:
+            if allow_relief:
+                self._pressure_backoff = 1    # clean head admission
+            return need
+        if not allow_relief:
+            return None
+        self.stats["kv_admission_blocked"] += 1
+        if not self._relieve_pressure(req, need):
+            return None                       # request waits
+        # Recompute after relief: the victim scan can change this very
+        # request's standing (an L2 preemption requeues an active
+        # request's pages).  Trusting the stale pre-relief ``need`` was
+        # the pool over-commit bug — a head whose own reservation was
+        # released by relief would resume with need=0 and under-count
+        # ``_reserved_total`` forever after.
+        need = 0 if req.rid in self._reserved else self._pages_for(req)
+        if self._reserved_total + need > self.kv.pool.num_pages:
+            return None                       # partial relief; retry later
+        self.stats["admission_retries"] += 1
+        return need
+
+    def _resume_request(self, slot: int, req: Request, need: int) -> None:
+        if need:
+            self._reserved[req.rid] = need
+            self._reserved_total += need
+        try:
+            self._resume_into_slot(slot, req)
+        except m.PageIntegrityError as e:
+            # quarantined on unspill: fail ONLY this request
+            self._fail_request(req, e)
 
     def _admit(self) -> None:
         for slot in range(self.max_batch):
@@ -248,32 +411,15 @@ class ServeEngine:
                 self._prefill_into_slot(slot, self.queue.popleft())
                 continue
             self._admit_clock += 1
-            head = self.queue[0]
-            # a preempted-but-not-spilled request still holds its
-            # reservation (need 0); a spilled one must re-reserve
-            need = (0 if head.rid in self._reserved
-                    else self._pages_for(head))
-            if self._reserved_total + need > self.kv.pool.num_pages:
-                self.stats["kv_admission_blocked"] += 1
-                if not self._relieve_pressure(head, need):
-                    break                  # request waits (FIFO)
-                if self._reserved_total + need > self.kv.pool.num_pages:
-                    break                  # partial relief; retry later
-                self.stats["admission_retries"] += 1
-            else:
-                self._pressure_backoff = 1    # clean admission: reset
-            req = self.queue.popleft()
-            if req.rid in self._preempted:
-                if need:
-                    self._reserved[req.rid] = need
-                    self._reserved_total += need
-                try:
-                    self._resume_into_slot(slot, req)
-                except m.PageIntegrityError as e:
-                    # quarantined on unspill: fail ONLY this request
-                    self._fail_request(req, e)
+            head = self._admission_order()[0]
+            need = self._try_reserve(head, allow_relief=True)
+            if need is None:
+                break                      # head waits (FIFO)
+            self.queue.remove(head)
+            if head.rid in self._preempted:
+                self._resume_request(slot, head, need)
                 continue
-            self._prefill_into_slot(slot, req)
+            self._prefill_into_slot(slot, head)
 
     def _relieve_pressure(self, head: Request, need: int) -> bool:
         """Bounded spill -> retry -> preempt escalation under pool
@@ -288,8 +434,13 @@ class ServeEngine:
         active slot, gated by exponential backoff so a pool that is
         simply too small degrades to FIFO instead of livelocking on
         preempt/resume churn."""
+        # The head itself can be parked (preempted, reservation held) —
+        # it must never be its own victim: spilling it would release the
+        # reservation the caller's ``need`` math was computed against
+        # (the other half of the over-commit bug `_try_reserve` guards).
         parked = [rid for rid in self._preempted
-                  if rid in self._reserved and rid not in self._spilled]
+                  if rid in self._reserved and rid not in self._spilled
+                  and rid != head.rid]
         if parked:
             rid = min(parked, key=self.kv.request_last_read)
             self._spill_reserved(rid)
@@ -300,6 +451,10 @@ class ServeEngine:
             return False                  # backing off
         victims = [s for s, r in enumerate(self.active) if r is not None]
         if not victims:
+            if self._pump:
+                # pumped prefills hold reservations and will bind, serve
+                # and retire — admission is delayed, not impossible
+                return False
             # nothing active and nothing left to spill: no future retire
             # or spill can ever free pages for this reservation
             raise AdmissionImpossible(
@@ -329,9 +484,10 @@ class ServeEngine:
         — corruption never poisons neighbors."""
         req.done = True
         req.error = str(err)
-        req.t_done = time.time()
+        req.t_done = time.perf_counter()
         self.stats["failed"] += 1
         rid = req.rid
+        self._pump.pop(rid, None)
         for s, r in enumerate(self.active):
             if r is req:
                 self.active[s] = None
@@ -347,17 +503,44 @@ class ServeEngine:
         self._preempted.pop(rid, None)
         self._spilled.discard(rid)
 
+    def _prefill_forward(self, prompt) -> tuple:
+        """Single-request prefill, jit-cached per power-of-two *bucket*
+        rather than per exact prompt length — the recompile-storm fix.
+        Prompts shorter than their bucket are zero-padded and the model
+        masks the pads (``true_len``): pad positions drop out of
+        attention, freeze out of the recurrent/mLSTM/sLSTM scans, and the
+        returned last-token logits are sliced at the true position.  A
+        prompt that lands exactly on its bucket skips the mask entirely
+        (bit-identical to the legacy exact-length path)."""
+        s = len(prompt)
+        bucket = prefill_bucket(s, self.max_len)
+        exact = s == bucket
+        key = (bucket, exact)
+        fn = self._prefill_cache.get(key)
+        if fn is None:
+            if exact:
+                fn = jax.jit(
+                    lambda p, t: M.forward(self.cfg, p, {"tokens": t},
+                                           remat=False, collect_cache=True,
+                                           last_only=True)[:2])
+            else:
+                fn = jax.jit(
+                    lambda p, t, n: M.forward(self.cfg, p, {"tokens": t},
+                                              remat=False,
+                                              collect_cache=True,
+                                              last_only=True,
+                                              true_len=n)[:2])
+            self._prefill_cache[key] = fn
+        if exact:
+            return fn(self.params, jnp.asarray(np.asarray(prompt)[None]))
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :s] = np.asarray(prompt)
+        return fn(self.params, jnp.asarray(toks), jnp.asarray(s, jnp.int32))
+
     def _prefill_into_slot(self, slot: int, req: Request) -> None:
-        # single-request prefill at the exact prompt length (jit-cached per
-        # length — submit same-length prompts for best compile reuse)
         s = len(req.prompt)
-        if s not in self._prefill_cache:
-            self._prefill_cache[s] = jax.jit(
-                lambda p, t: M.forward(self.cfg, p, {"tokens": t},
-                                       remat=False, collect_cache=True,
-                                       last_only=True)[:2])
-        logits, caches = self._prefill_cache[s](
-            self.params, jnp.asarray(np.asarray(req.prompt)[None]))
+        req.t_admit = time.perf_counter()
+        logits, caches = self._prefill_forward(req.prompt)
         if self.paged:
             # chop the prefill cache into pages instead of a batch write
             self.kv.add_request(req.rid)
@@ -422,6 +605,7 @@ class ServeEngine:
         internally)."""
         if not self.paged:
             raise RuntimeError("preempt requires the paged apack-int8 KV")
+        self._drain()      # async: the in-flight step must land first
         req = self.active[slot]
         if req is None:
             raise ValueError(f"slot {slot} is idle, nothing to preempt")
@@ -479,12 +663,40 @@ class ServeEngine:
                         and req.tokens[-1] == eos)
                     or self.positions[slot] >= self.max_len - 1):
                 req.done = True
-                req.t_done = time.time()
+                req.t_done = time.perf_counter()
+                self._log_latency(req)
                 self.stats["completed"] += 1
                 self.active[slot] = None
                 if self.paged:
                     self.kv.release(req.rid)
                     self._reserved_total -= self._reserved.pop(req.rid)
+
+    def _log_latency(self, req: Request) -> None:
+        if req.t_submit <= 0.0:
+            return            # directly-constructed request (tests)
+        t_admit = req.t_admit if req.t_admit > 0.0 else req.t_done
+        self._lat_wait.append(max(t_admit - req.t_submit, 0.0))
+        self._lat_e2e.append(max(req.t_done - req.t_submit, 0.0))
+        for name, vals in (("queue_wait", self._lat_wait),
+                           ("e2e", self._lat_e2e)):
+            self.stats[f"{name}_p50_ms"] = float(
+                np.percentile(vals, 50) * 1e3)
+            self.stats[f"{name}_p99_ms"] = float(
+                np.percentile(vals, 99) * 1e3)
+
+    def latency_stats(self) -> dict:
+        """Queue-wait and end-to-end latency percentiles (seconds) over
+        every completed request, monotonic-clock based (perf_counter) so
+        NTP slew can never report a negative latency.  The serving bench
+        and ``launch/serve`` consume this."""
+        out: dict = {"n": len(self._lat_e2e)}
+        for name, vals in (("queue_wait", self._lat_wait),
+                           ("e2e", self._lat_e2e)):
+            if vals:
+                out[f"{name}_p50"] = float(np.percentile(vals, 50))
+                out[f"{name}_p99"] = float(np.percentile(vals, 99))
+                out[f"{name}_mean"] = float(np.mean(vals))
+        return out
 
     def _check_deadlines(self) -> None:
         """Per-request SLO deadlines: a slot that has held the GPU past
@@ -537,6 +749,8 @@ class ServeEngine:
     # ------------------------------------------------------------- step
     def step(self) -> int:
         """One engine iteration.  Returns number of active sequences."""
+        if self.scheduler == "async":
+            return self._step_async()
         t0 = time.perf_counter()
         if self.faults is not None:
             d = self.faults.step_delay()
@@ -621,10 +835,269 @@ class ServeEngine:
         self.stats["steps"] += 1
         return n_active
 
+    # ------------------------------------------- async event-loop core
+    def _step_async(self) -> int:
+        """One iteration of the event-loop scheduler.  Phase order *is*
+        the design (DESIGN.md §9):
+
+        1. overlapped host work — while the previous iteration's fused
+           decode is still in flight on device, run the host work the
+           sync engine serializes around the kernel: injected host
+           delays, adaptive refresh + budgeted re-pack, chunked prefill
+           ingest, spill-tier readahead staging.  Safe because jax
+           arrays are immutable and the host pool is truth only for
+           sealed pages — nothing here mutates state the in-flight step
+           reads, and plane/state re-binds only chain futures for the
+           *next* dispatch.
+        2. collect — block on the in-flight logits (the loop's only
+           blocking device read) and apply tokens against the
+           dispatch-time slot map.
+        3. retire / deadlines / admit — every slot-binding mutation runs
+           here, strictly post-collect; a bind during flight would point
+           the dispatch-time ``states_from_step`` slot re-bind at the
+           wrong request.
+        4. dispatch — fire the next fused step and return without
+           blocking on it.
+
+        Greedy tokens are bit-identical to the sync engine: the same
+        kernels see the same per-slot inputs, only host work moved."""
+        t0 = time.perf_counter()
+        if self.faults is not None:
+            d = self.faults.step_delay()
+            if d:
+                time.sleep(d)
+        self._overlap_host_work()
+        t_host = time.perf_counter()
+        self._collect()
+        t_collect = time.perf_counter()
+        self._retire()
+        self._check_deadlines()
+        self._admit_async()
+        n_active = sum(r is not None for r in self.active)
+        if n_active:
+            try:
+                self._dispatch()
+            except m.PageIntegrityError as e:
+                # step_meta read guards fire before any page mutation;
+                # fail the owner and re-dispatch for the survivors
+                self._handle_integrity_failure(e)
+                n_active = sum(r is not None for r in self.active)
+                if n_active:
+                    self._dispatch()
+        if self.watchdog is not None:
+            ev = self.watchdog.observe(
+                time.perf_counter() - t0,
+                phases={"overlap_host": t_host - t0,
+                        "collect": t_collect - t_host,
+                        "schedule_dispatch":
+                            time.perf_counter() - t_collect})
+            if ev is not None and ev.kind == "hung":
+                self._on_hung(ev)
+        return n_active
+
+    def _overlap_host_work(self) -> None:
+        """Host-side work overlapped with the in-flight device step —
+        everything the sync engine runs serially between kernels."""
+        if self.faults is not None:
+            d = self.faults.host_delay()
+            if d:
+                time.sleep(d)
+        if self.kv_refresh and self._inflight is not None:
+            # drift check + budgeted re-pack (host sketches + one h2d
+            # flush chained onto the pending plane futures) — same
+            # cadence as the sync engine: once per decode step
+            rs = self.kv.refresh_step(self.kv_repack_budget)
+            self.stats["kv_refreshes"] += len(rs["refreshed_layers"])
+            self.stats["kv_pages_repacked"] += rs["repacked"]
+        for p in list(self._pump.values()):
+            while not p.ready:
+                self._pump_chunk(p)
+                if self._inflight is not None:
+                    break      # paced: one chunk per overlapped step
+                # nothing in flight — chunk pacing would be pure added
+                # latency, so drain the pump like a sync prefill
+        self._stage_readahead()
+
+    def _pump_chunk(self, p: _PendingPrefill) -> None:
+        if p.view is None:
+            # one d2h pull of the prefill caches — the forward was
+            # dispatched at pump start and has been computing since
+            p.view = self.kv.prefill_host_view(p.caches)
+            p.caches = None
+        t1 = min(p.cursor + self.prefill_chunk_tokens, p.s)
+        self.kv.ingest_prefill_chunk(p.req.rid, p.view, p.cursor, t1, p.s)
+        p.cursor = t1
+        self.stats["prefill_chunks"] += 1
+        if p.cursor >= p.s:
+            self.kv.finish_prefill(p.req.rid, p.view, p.s)
+            p.tok = int(jnp.argmax(p.logits[0, -1]))
+            p.view = None
+
+    def _stage_readahead(self) -> None:
+        """Spill-tier readahead staging: re-reserve and restore the
+        highest-priority spilled request during the overlap window, so
+        its batched h2d + checksum verify ride the in-flight step
+        instead of stalling the admission that resumes it."""
+        for req in self._admission_order():
+            rid = req.rid
+            if rid in self._preempted and rid in self._spilled:
+                need = self._pages_for(req)
+                if self._reserved_total + need > self.kv.pool.num_pages:
+                    return                 # no headroom this step
+                self._reserved[rid] = need
+                self._reserved_total += need
+                try:
+                    self.kv.unspill_request(rid)
+                except m.PageIntegrityError as e:
+                    self._fail_request(req, e)
+                    return
+                self._spilled.discard(rid)
+                self.stats["staged_readahead"] += 1
+                return                     # one staging per step
+            if rid not in self._reserved and rid not in self._pump:
+                # a higher-priority request claims the headroom first
+                return
+
+    def _start_pump(self, req: Request, need: int) -> None:
+        """Reserve pages and dispatch the bucketed prefill forward for a
+        queued request; it keeps queueing while the overlapped host phase
+        ingests its pages chunk by chunk."""
+        req.t_admit = time.perf_counter()
+        logits, caches = self._prefill_forward(req.prompt)
+        self.kv.add_request(req.rid)
+        self._reserved[req.rid] = need
+        self._reserved_total += need
+        self._pump[req.rid] = _PendingPrefill(
+            req=req, s=len(req.prompt), logits=logits, caches=caches)
+
+    def _bind_prefilled(self, slot: int, p: _PendingPrefill) -> None:
+        """Slot-bind a fully-ingested pumped prefill.  The only
+        device-touching part of admission (page h2d sync + state-slot
+        write) — runs post-collect, where it chains cleanly onto the
+        pending plane/state futures."""
+        req = p.req
+        self.kv.sync_request_to_device(req.rid)
+        if self.kv.state_layers:
+            self.kv.write_state_slot(slot, req.rid)
+        req.tokens.append(p.tok)
+        self.active[slot] = req
+        self.positions[slot] = p.s
+        self.last_tokens[slot, 0] = p.tok
+        self._slot_steps[slot] = 0
+
+    def _admit_async(self) -> None:
+        """Continuous admission (post-collect): bind ready pumped
+        prefills and resume preempted requests into free slots; start
+        prefill pumps for queued requests that can reserve pages now.
+        EDF-over-FIFO priority; a blocked higher-priority request stops
+        lower-priority candidates from taking NEW reservations (no
+        headroom stealing), but zero-cost binds of already-reserved work
+        still proceed — that is the continuous-batching part."""
+        if not self.queue:
+            return
+        self._admit_clock += 1
+        free = [s for s in range(self.max_batch)
+                if self.active[s] is None]
+        blocked = False
+        for i, req in enumerate(self._admission_order()):
+            rid = req.rid
+            if rid in self._preempted:
+                if not free:
+                    # still claims headroom while it waits for a slot
+                    blocked = blocked or rid not in self._reserved
+                    continue
+                if blocked and rid not in self._reserved:
+                    continue
+                need = self._try_reserve(req, allow_relief=(i == 0))
+                if need is None:
+                    blocked = True
+                    continue
+                self.queue.remove(req)
+                self._resume_request(free.pop(0), req, need)
+                continue
+            p = self._pump.get(rid)
+            if p is None:
+                if blocked or len(self._pump) >= self.max_batch:
+                    blocked = True
+                    continue
+                need = self._try_reserve(req, allow_relief=(i == 0))
+                if need is None:
+                    blocked = True
+                    continue
+                self._start_pump(req, need)
+                if free and not any(r is not None for r in self.active):
+                    # idle engine: no decode to overlap the chunked
+                    # ingest with, so admit like a sync prefill — drain
+                    # the pump and bind in this very step
+                    p = self._pump.pop(rid)
+                    while not p.ready:
+                        self._pump_chunk(p)
+                    self.queue.remove(req)
+                    self._bind_prefilled(free.pop(0), p)
+                continue
+            if p.ready and free:
+                self.queue.remove(req)
+                del self._pump[rid]
+                self._bind_prefilled(free.pop(0), p)
+            # pump still ingesting: it binds on a later step
+
+    def _dispatch(self) -> None:
+        """Fire the fused decode for the current binding WITHOUT blocking
+        on the result: jit dispatch is async, so the logits / plane
+        append / state re-bind land on device while the next iteration's
+        host phase runs.  The dispatch-time slot map is recorded in
+        ``_InFlight`` for collect."""
+        slot_rids = [r.rid if r is not None else None for r in self.active]
+        meta = self.kv.step_meta(slot_rids, self.max_len)
+        logits, new_cache = self._decode_paged(
+            self.params, self.kv.dev.planes, self.kv.dev_states, meta,
+            jnp.asarray(self.last_tokens), jnp.asarray(self.positions))
+        targets = self.kv.claim_append_targets(slot_rids)
+        self.kv.dev.planes = self._append(self.kv.dev.planes,
+                                          new_cache, targets)
+        self.kv.dev_states = M.states_from_step(self.cfg, new_cache)
+        self._inflight = _InFlight(slot_reqs=list(self.active),
+                                   slot_rids=slot_rids, logits=logits)
+
+    def _collect(self) -> None:
+        """Land the in-flight device step: block on its logits, account
+        the appends, and apply per-slot token updates against the
+        dispatch-time slot map — bindings cannot have changed mid-flight
+        because every binding mutation runs post-collect (external
+        ``preempt`` drains first)."""
+        inf = self._inflight
+        if inf is None:
+            return
+        self._inflight = None
+        toks = np.asarray(jnp.argmax(inf.logits[:, 0], axis=-1), np.int32)
+        self.kv.note_appended(inf.slot_rids)
+        self.last_logits = inf.logits
+        for slot, req in enumerate(inf.slot_reqs):
+            if req is None:
+                continue
+            tok = int(toks[slot])
+            req.tokens.append(tok)
+            self.last_tokens[slot, 0] = tok
+            self.positions[slot] += 1
+            self._slot_steps[slot] += 1
+            self.stats["generated"] += 1
+        self.stats["steps"] += 1
+
+    def _drain(self) -> None:
+        """Synchronize the pipeline: land the in-flight step (if any) so
+        external mutations — ``preempt``, ``sync_host_mirror``, state
+        snapshots — observe a consistent post-step engine.  No-op on the
+        sync scheduler."""
+        if self._inflight is not None:
+            self._collect()
+
     def run_until_drained(self, max_steps: int = 10_000) -> None:
         stalled = 0
         for _ in range(max_steps):
-            if self.step() > 0:
+            # an idle step that still advanced a pumped prefill is
+            # progress (the async scheduler ingests chunks before the
+            # first slot binds)
+            if self.step() > 0 or self._pump:
                 stalled = 0
                 continue
             if not self.queue:
@@ -678,6 +1151,7 @@ class ServeEngine:
         live data (tests + oracle path; never called by ``step``)."""
         if not self.fused:
             return
+        self._drain()
         slot_rids = [r.rid if r is not None else None for r in self.active]
         self.kv.sync_hot_to_host(slot_rids)
         self.kv._pull_states(slot_rids)

@@ -39,15 +39,22 @@ class FaultInjector:
       generation (detected by the ``step_meta`` read guard).
     * ``delay_steps(seconds, n)`` / ``delay_spills(seconds, n)`` — stall
       the engine step / spill completion (drives watchdog preemption).
+    * ``delay_host_work(seconds, n)`` — stall the *overlapped* host phase
+      of the async scheduler (seal pulls, chunked prefill ingest, re-pack,
+      readahead staging run there); the sync engine has no such phase and
+      ignores it.  Lets tests prove a slow host overlap degrades latency,
+      never tokens.
     """
 
     def __init__(self):
         self._drop_budget = {"h2d": 0, "d2h": 0}
         self._step_delays: list[float] = []
         self._spill_delays: list[float] = []
+        self._host_delays: list[float] = []
         self.stats = {"h2d_dropped": 0, "d2h_dropped": 0,
                       "bits_flipped": 0, "generations_poisoned": 0,
-                      "steps_delayed": 0, "spills_delayed": 0}
+                      "steps_delayed": 0, "spills_delayed": 0,
+                      "host_work_delayed": 0}
 
     # ------------------------------------------------------- transfers
     def drop_transfers(self, direction: str, n: int = 1) -> None:
@@ -105,6 +112,17 @@ class FaultInjector:
 
     def delay_spills(self, seconds: float, n: int = 1) -> None:
         self._spill_delays.extend([seconds] * n)
+
+    def delay_host_work(self, seconds: float, n: int = 1) -> None:
+        self._host_delays.extend([seconds] * n)
+
+    def host_delay(self) -> float:
+        """Consumed by the async engine inside the overlapped host phase
+        (while a device step is in flight)."""
+        if self._host_delays:
+            self.stats["host_work_delayed"] += 1
+            return self._host_delays.pop(0)
+        return 0.0
 
     def spill_delay(self) -> float:
         """Consumed by ``PagedKVCache.spill_request``."""
