@@ -1,0 +1,37 @@
+"""Trend row for the static invariant analyzer (``repro.analysis``).
+
+Not a perf benchmark of product code — a health row for the analysis
+suite itself, so the trajectory JSON records per-PR:
+
+* how long each pass takes on the live tree (the analyzer runs in CI
+  before the test suite, so its wall-clock is part of every red/green
+  cycle and should stay in the sub-second range);
+* how many findings/suppressions the tree carries (the suppression
+  count creeping up is the earliest sign the hot path is accreting
+  boundary traffic behind one-line reasons).
+"""
+from __future__ import annotations
+
+import time
+
+
+def main(emit) -> None:
+    from repro.analysis import run_passes
+    from repro.analysis.runner import DEFAULT_ROOT
+
+    t0 = time.perf_counter()
+    report = run_passes(DEFAULT_ROOT)
+    total_s = time.perf_counter() - t0
+
+    emit("analysis/total", total_s * 1e6,
+         f"5 passes over {DEFAULT_ROOT.name}/", value=float(len(report.findings)))
+    for pass_id, secs in sorted(report.pass_seconds.items()):
+        emit(f"analysis/pass/{pass_id}", secs * 1e6,
+             "wall-clock for one pass", value=float(
+                 sum(1 for f in report.findings if f.pass_id == pass_id)))
+    emit("analysis/new_vs_baseline", 0.0,
+         "findings not in committed baseline (CI gate)",
+         value=float(len(report.new)))
+    emit("analysis/suppressions", 0.0,
+         f"{report.suppressions_used}/{report.suppressions_total} used",
+         value=float(report.suppressions_total))

@@ -25,7 +25,7 @@ def main(argv=None) -> None:
 
     from . import (bench_distributions, bench_tablegen, bench_traffic,
                    bench_energy, bench_speedup, bench_codec, bench_decode,
-                   bench_roofline, bench_trained)
+                   bench_roofline, bench_trained, bench_analysis)
     mods = [
         ("distributions(Fig2)", bench_distributions),
         ("tablegen(TableI)", bench_tablegen),
@@ -36,6 +36,7 @@ def main(argv=None) -> None:
         ("decode(§Serving)", bench_decode),
         ("trained(§VII-A)", bench_trained),
         ("roofline(§Roofline)", bench_roofline),
+        ("analysis(§Invariants)", bench_analysis),
     ]
     if args.only:
         mods = [(label, mod) for label, mod in mods if args.only in label]

@@ -1,0 +1,44 @@
+"""Hot-path invariant analyzer: static AST + call-graph passes.
+
+The serving engine's load-bearing invariants — zero steady-state
+``device_get`` on the fused decode loop, the declared page-lifecycle
+state machine, post-collect-only slot mutation in the async scheduler,
+Pallas grid/BlockSpec/scratch consistency, and bucketed jit-cache keys —
+are enforced dynamically by tests and bench gates, which catch a
+violating edit hours after it lands.  These passes catch it at the diff:
+``python -m repro.analysis`` runs all five against ``src/repro`` and
+fails on any finding not in the committed baseline.
+
+Passes (ids used in findings, suppressions, and ``--pass``):
+
+* ``boundary``  — host-sync constructs reachable from annotated
+  hot-path roots (``# apack: hot-path-root``), see :mod:`.boundary`;
+* ``lifecycle`` — ``self.state[pid] = PAGE_*`` sites vs the canonical
+  ``PAGE_TRANSITIONS`` table in ``models/modules.py``, see
+  :mod:`.lifecycle`;
+* ``phase``     — slot-binding / page-table mutations reachable from the
+  async engine's overlap window, see :mod:`.phases`;
+* ``pallas``    — BlockSpec index_map arity, operand counts, scratch
+  shapes, ``pl.when``-guarded output writes, see :mod:`.pallas_lint`;
+* ``jit-cache`` — unbucketed shape-derived cache keys and float /
+  unhashable static args, see :mod:`.jit_cache`.
+
+Suppression grammar (one per line, trailing or the line above; a
+suppression on the ``def`` line covers the whole function):
+
+    # apack: allow-transfer(<reason>)      boundary
+    # apack: allow-transition(<reason>)    lifecycle
+    # apack: allow-phase(<reason>)         phase
+    # apack: allow-pallas(<reason>)        pallas
+    # apack: allow-jit-cache(<reason>)     jit-cache
+
+A suppression with an empty reason is itself a finding.  See
+DESIGN.md §10 for the full grammar and the baseline workflow.
+"""
+
+from .framework import (Finding, SourceTree, Reporter, load_baseline,
+                        write_baseline, DEFAULT_BASELINE, PASS_IDS)
+from .runner import run_passes
+
+__all__ = ["Finding", "SourceTree", "Reporter", "load_baseline",
+           "write_baseline", "DEFAULT_BASELINE", "PASS_IDS", "run_passes"]

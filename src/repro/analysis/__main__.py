@@ -1,0 +1,110 @@
+"""CLI: ``python -m repro.analysis`` — run the invariant passes and exit
+non-zero on any finding not in the committed baseline.
+
+    python -m repro.analysis                    # full tree, all passes
+    python -m repro.analysis --pass boundary    # one pass
+    python -m repro.analysis --changed          # report only files in the
+                                                # working diff (analysis is
+                                                # still whole-program)
+    python -m repro.analysis --json out.json    # machine-readable findings
+    python -m repro.analysis --write-baseline   # grandfather current state
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+from .framework import DEFAULT_BASELINE, PASS_IDS, write_baseline
+from .runner import DEFAULT_ROOT, run_passes
+
+
+def _changed_files(repo_root: Path) -> set[str] | None:
+    try:
+        out = subprocess.run(
+            ["git", "diff", "--name-only", "HEAD"], cwd=repo_root,
+            capture_output=True, text=True, timeout=30, check=True).stdout
+    except (OSError, subprocess.SubprocessError):
+        return None
+    return {line.strip() for line in out.splitlines() if line.strip()}
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="hot-path invariant analyzer (see DESIGN.md §10)")
+    ap.add_argument("--root", type=Path, default=DEFAULT_ROOT,
+                    help="source tree to analyze (default: src/repro)")
+    ap.add_argument("--pass", dest="passes", action="append",
+                    choices=PASS_IDS, help="run only this pass (repeat ok)")
+    ap.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE)
+    ap.add_argument("--json", type=Path, nargs="?", const=Path("-"),
+                    help="emit findings as JSON (to PATH, or stdout if "
+                         "no path given)")
+    ap.add_argument("--changed", action="store_true",
+                    help="only *report* findings in files changed vs HEAD")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite the baseline to the current findings")
+    args = ap.parse_args(argv)
+
+    report = run_passes(args.root, passes=args.passes,
+                        baseline=args.baseline)
+
+    if args.write_baseline:
+        write_baseline(args.baseline, report.findings)
+        print(f"baseline: wrote {len(report.findings)} finding(s) to "
+              f"{args.baseline}")
+        return 0
+
+    shown = report.new
+    if args.changed:
+        changed = _changed_files(args.root.resolve().parents[1]
+                                 if args.root == DEFAULT_ROOT
+                                 else Path.cwd())
+        if changed is not None:
+            rels = {c.split("src/", 1)[-1].removeprefix("repro/")
+                    for c in changed}
+            shown = [f for f in shown
+                     if f.path in rels or any(c.endswith(f.path)
+                                              for c in changed)]
+
+    counts = report.counts()
+    json_to_stdout = args.json is not None and str(args.json) == "-"
+    if not json_to_stdout:
+        for f in shown:
+            print(f.render())
+        per_pass = ", ".join(f"{p}={counts.get(p, 0)}" for p in PASS_IDS)
+        print(f"analysis: {len(report.findings)} finding(s) [{per_pass}], "
+              f"{len(report.new)} new vs baseline, "
+              f"{report.suppressions_used}/{report.suppressions_total} "
+              "suppressions used")
+        if report.stale:
+            print(f"analysis: {len(report.stale)} baseline entr"
+                  f"{'y is' if len(report.stale) == 1 else 'ies are'} stale "
+                  "(fixed findings) — run --write-baseline to shrink it")
+
+    if args.json is not None:
+        payload = json.dumps({
+            "findings": [f.to_json() for f in report.findings],
+            "new": [f.to_json() for f in report.new],
+            "counts": counts,
+            "stale_baseline": sorted(report.stale),
+            "suppressions": {"used": report.suppressions_used,
+                             "total": report.suppressions_total},
+            "pass_seconds": report.pass_seconds,
+        }, indent=2) + "\n"
+        if json_to_stdout:
+            sys.stdout.write(payload)
+        else:
+            args.json.write_text(payload)
+
+    if shown or (not args.changed and report.new):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

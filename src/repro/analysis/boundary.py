@@ -1,0 +1,281 @@
+"""Pass ``boundary``: host-sync constructs reachable from hot-path roots.
+
+The invariant (DESIGN.md §5, gated dynamically by the decode/serving
+benches): the steady-state decode loop makes **zero** ``device_get``
+calls and never forces a device value to host mid-step.  This pass makes
+the same invariant fail at the diff.  From every function annotated
+``# apack: hot-path-root`` (host roots like ``ServeEngine.step``) or
+``# apack: hot-path-root(traced)`` (jit-traced roots like
+``decode_step_paged``), it walks the call graph and flags:
+
+* ``device-get``          — any ``jax.device_get(...)`` call;
+* ``block-until-ready``   — any ``.block_until_ready()`` call;
+* ``host-materialize``    — ``np.asarray`` / ``np.array`` of a *device-
+  tainted* expression (host numpy on host values is fine);
+* ``scalar-coerce``       — ``int()`` / ``float()`` / ``bool()`` of a
+  device-tainted expression (each is an implicit blocking d2h);
+* ``item-call``           — ``.item()`` on a device-tainted expression.
+
+Taint is per-function and syntactic: expressions rooted at ``jnp`` /
+``jax`` / ``lax``, calls to jit-wrapped attributes (``self._x`` where
+some method assigns ``self._x = jax.jit(...)``), and — inside the traced
+subtree — every parameter.  ``np.asarray``, ``jax.device_get`` and the
+accounted ``_fetch`` wrapper launder taint (their *argument* is where
+the flag lands, their result is host).  ``.shape``/``.dtype`` metadata
+of a tainted value is static, not tainted — trace-time planning code
+stays clean."""
+
+from __future__ import annotations
+
+import ast
+
+from .callgraph import CallGraph
+from .framework import (FunctionInfo, Reporter, SourceTree, attr_chain,
+                        call_name)
+
+PASS_ID = "boundary"
+
+# attribute-chain roots whose expressions live on device
+_DEVICE_ROOTS = {"jnp", "lax"}
+# terminal callee names that return *host* data (taint laundering); the
+# construct itself is flagged separately where that matters
+_UNTAINT_CALLS = {"device_get", "asarray", "array", "_fetch", "int",
+                  "float", "bool", "len", "item", "tolist"}
+_METADATA_ATTRS = {"shape", "dtype", "ndim", "size", "sharding"}
+
+
+def run(tree: SourceTree, reporter: Reporter) -> None:
+    graph = CallGraph(tree)
+    host_roots = tree.roots("host")
+    traced_roots = tree.roots("traced")
+    jit_attrs = _collect_jit_attrs(tree)
+    jit_defs = _collect_jit_defs(tree)
+
+    traced = {CallGraph.key(f) for f in graph.reachable(traced_roots)}
+    for fi in graph.reachable(host_roots + traced_roots):
+        _check_function(fi, reporter, jit_attrs, jit_defs,
+                        traced=CallGraph.key(fi) in traced)
+
+
+def _collect_jit_attrs(tree: SourceTree) -> set[str]:
+    """Attribute names assigned from ``jax.jit(...)`` anywhere — calls
+    through them return device arrays (``self._decode_paged`` etc.)."""
+    out = set()
+    for mod in tree.modules:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Assign) and _is_jit_call(node.value):
+                for t in node.targets:
+                    if isinstance(t, ast.Attribute):
+                        out.add(t.attr)
+    return out
+
+
+def _collect_jit_defs(tree: SourceTree) -> set[str]:
+    """Names of functions decorated with ``jax.jit`` (direct or via
+    ``functools.partial(jax.jit, ...)``)."""
+    out = set()
+    for fi in tree.functions:
+        for dec in fi.node.decorator_list:
+            chain = attr_chain(dec if not isinstance(dec, ast.Call)
+                               else dec.func)
+            if chain and "jit" in chain:
+                out.add(fi.name)
+            if isinstance(dec, ast.Call):
+                for arg in dec.args:
+                    c = attr_chain(arg)
+                    if c and c[-1] == "jit":
+                        out.add(fi.name)
+    return out
+
+
+def _is_jit_call(node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    chain = attr_chain(node.func)
+    if chain and chain[-1] in ("jit", "pallas_call"):
+        return True
+    # functools.partial(jax.jit, ...) / jax.jit(fn, static_argnames=...)
+    for arg in node.args:
+        c = attr_chain(arg)
+        if c and c[-1] == "jit":
+            return True
+    return False
+
+
+def _static_params(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> set[str]:
+    """Params named in a jit decorator's ``static_argnames`` are host
+    values at trace time — coercing them is free, not a d2h sync."""
+    out: set[str] = set()
+    for dec in fn.decorator_list:
+        for node in ast.walk(dec):
+            if isinstance(node, ast.keyword) and \
+                    node.arg == "static_argnames":
+                v = node.value
+                elts = v.elts if isinstance(v, (ast.Tuple, ast.List)) \
+                    else [v]
+                out.update(e.value for e in elts
+                           if isinstance(e, ast.Constant)
+                           and isinstance(e.value, str))
+    return out
+
+
+def _static_annotation(p: ast.arg) -> bool:
+    """Config/scalar-annotated params (``cfg: ModelConfig``, ``bits:
+    int``) are trace-time constants, not device operands."""
+    ann = p.annotation
+    name = None
+    if isinstance(ann, ast.Name):
+        name = ann.id
+    elif isinstance(ann, ast.Attribute):
+        name = ann.attr
+    if name is None:
+        return False
+    return name in ("int", "float", "bool", "str") or name.endswith("Config")
+
+
+class _FnChecker:
+    def __init__(self, fi: FunctionInfo, reporter: Reporter,
+                 jit_attrs: set[str], jit_defs: set[str], traced: bool):
+        self.fi = fi
+        self.reporter = reporter
+        self.jit_attrs = jit_attrs
+        self.jit_defs = jit_defs
+        self.traced = traced
+        self.tainted: set[str] = set()
+        if traced:
+            static = _static_params(fi.node)
+            a = fi.node.args
+            for p in (a.posonlyargs + a.args + a.kwonlyargs):
+                if p.arg not in static and not _static_annotation(p):
+                    self.tainted.add(p.arg)
+            if a.vararg:
+                self.tainted.add(a.vararg.arg)
+            if a.kwarg:
+                self.tainted.add(a.kwarg.arg)
+
+    # -------------------------------------------------------------- taint
+    def taints(self, e: ast.AST) -> bool:
+        if isinstance(e, ast.Name):
+            return e.id in self.tainted
+        if isinstance(e, ast.Attribute):
+            if e.attr in _METADATA_ATTRS:
+                return False
+            return self.taints(e.value)
+        if isinstance(e, ast.Subscript):
+            return self.taints(e.value)
+        if isinstance(e, ast.Call):
+            name = call_name(e)
+            chain = attr_chain(e.func)
+            root = chain[0] if chain else None
+            if root in _DEVICE_ROOTS:
+                return True
+            if root == "jax" and name != "device_get":
+                return True
+            if name in self.jit_attrs or name in self.jit_defs:
+                return True
+            if name in _UNTAINT_CALLS:
+                return False
+            # unknown call: conservatively forwards its arguments' taint
+            return any(self.taints(a) for a in e.args) or \
+                any(self.taints(kw.value) for kw in e.keywords)
+        if isinstance(e, (ast.BinOp,)):
+            return self.taints(e.left) or self.taints(e.right)
+        if isinstance(e, ast.UnaryOp):
+            return self.taints(e.operand)
+        if isinstance(e, ast.BoolOp):
+            return any(self.taints(v) for v in e.values)
+        if isinstance(e, ast.Compare):
+            return self.taints(e.left) or \
+                any(self.taints(c) for c in e.comparators)
+        if isinstance(e, ast.IfExp):
+            return self.taints(e.body) or self.taints(e.orelse)
+        if isinstance(e, (ast.Tuple, ast.List, ast.Set)):
+            return any(self.taints(x) for x in e.elts)
+        if isinstance(e, ast.Starred):
+            return self.taints(e.value)
+        return False
+
+    def _mark(self, target: ast.AST, tainted: bool) -> None:
+        if isinstance(target, ast.Name):
+            (self.tainted.add if tainted
+             else self.tainted.discard)(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for t in target.elts:
+                self._mark(t, tainted)
+        elif isinstance(target, ast.Starred):
+            self._mark(target.value, tainted)
+
+    def _propagate(self, node: ast.AST) -> None:
+        if isinstance(node, ast.Assign):
+            t = self.taints(node.value)
+            for tgt in node.targets:
+                self._mark(tgt, t)
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            self._mark(node.target, self.taints(node.value))
+        elif isinstance(node, ast.AugAssign):
+            if self.taints(node.value):
+                self._mark(node.target, True)
+        elif isinstance(node, ast.For):
+            self._mark(node.target, self.taints(node.iter))
+        elif isinstance(node, (ast.withitem,)) and node.optional_vars:
+            self._mark(node.optional_vars, self.taints(node.context_expr))
+        elif isinstance(node, ast.comprehension):
+            self._mark(node.target, self.taints(node.iter))
+
+    # --------------------------------------------------------------- scan
+    def run(self) -> None:
+        body = list(ast.walk(self.fi.node))
+        # two passes: taint only grows, so a second sweep fixes ordering
+        # artifacts from loops and forward references
+        for node in body:
+            self._propagate(node)
+        for node in body:
+            self._propagate(node)
+            if isinstance(node, ast.Call):
+                self._flag_call(node)
+
+    def _emit(self, code: str, node: ast.AST, msg: str) -> None:
+        self.reporter.emit(PASS_ID, code, self.fi.module,
+                           node.lineno, msg, fn=self.fi)
+
+    def _flag_call(self, call: ast.Call) -> None:
+        name = call_name(call)
+        chain = attr_chain(call.func)
+        where = "traced hot path" if self.traced else "hot path"
+        if chain and chain[0] == "jax" and name == "device_get":
+            self._emit("device-get", call,
+                       f"jax.device_get on the {where}: blocking d2h "
+                       "transfer in steady state")
+            return
+        if isinstance(call.func, ast.Attribute) and \
+                call.func.attr == "block_until_ready":
+            self._emit("block-until-ready", call,
+                       f".block_until_ready() on the {where}: host "
+                       "blocks on device completion")
+            return
+        if chain and chain[0] == "np" and name in ("asarray", "array"):
+            args = list(call.args) + [kw.value for kw in call.keywords]
+            if any(self.taints(a) for a in args):
+                self._emit("host-materialize", call,
+                           f"np.{name} of a device value on the {where}: "
+                           "implicit blocking d2h transfer")
+            return
+        if isinstance(call.func, ast.Name) and name in ("int", "float",
+                                                        "bool"):
+            if call.args and self.taints(call.args[0]):
+                self._emit("scalar-coerce", call,
+                           f"{name}() of a device value on the {where}: "
+                           "implicit blocking d2h sync")
+            return
+        if isinstance(call.func, ast.Attribute) and name == "item" \
+                and not call.args:
+            if self.taints(call.func.value):
+                self._emit("item-call", call,
+                           f".item() on a device value on the {where}: "
+                           "implicit blocking d2h sync")
+
+
+def _check_function(fi: FunctionInfo, reporter: Reporter,
+                    jit_attrs: set[str], jit_defs: set[str],
+                    traced: bool) -> None:
+    _FnChecker(fi, reporter, jit_attrs, jit_defs, traced).run()

@@ -1,0 +1,84 @@
+"""Name-resolution call graph over a :class:`~.framework.SourceTree`.
+
+Deliberately conservative (an over-approximation): a call ``self.f(...)``
+resolves to the same class's ``f`` when one exists, otherwise — like any
+``obj.f(...)`` or bare ``f(...)`` — to *every* function named ``f`` in
+the tree (same-module definitions first, but all candidates are linked).
+Reachability passes therefore never miss an edge through dynamic
+dispatch at the cost of occasionally walking into a same-named stranger;
+the passes built on top only flag specific constructs, so extra breadth
+costs a suppression, not a false invariant."""
+
+from __future__ import annotations
+
+import ast
+
+from .framework import FunctionInfo, SourceTree, attr_chain
+
+
+class CallGraph:
+    def __init__(self, tree: SourceTree):
+        self.tree = tree
+        self.edges: dict[str, set[str]] = {}      # qualname@rel -> callees
+        self.nodes: dict[str, FunctionInfo] = {}
+        for fi in tree.functions:
+            self.nodes[self.key(fi)] = fi
+        for fi in tree.functions:
+            self.edges[self.key(fi)] = {
+                self.key(c) for c in self._callees(fi)}
+
+    @staticmethod
+    def key(fi: FunctionInfo) -> str:
+        return f"{fi.module.rel}::{fi.qualname}"
+
+    def _callees(self, fi: FunctionInfo) -> set[FunctionInfo]:
+        out: set[FunctionInfo] = set()
+        for node in ast.walk(fi.node):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if isinstance(f, ast.Name):
+                out.update(self._resolve(f.id, fi, via_self=False))
+            elif isinstance(f, ast.Attribute):
+                chain = attr_chain(f)
+                via_self = bool(chain) and chain[0] == "self" \
+                    and len(chain) == 2
+                out.update(self._resolve(f.attr, fi, via_self=via_self))
+        # a nested def / lambda body executes (at most) when the enclosing
+        # function runs; treat "defines" as an edge so closures passed to
+        # jit or map() stay reachable
+        for child in ast.iter_child_nodes(fi.node):
+            for sub in ast.walk(child):
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    for cand in self.tree.by_def_name.get(sub.name, []):
+                        if cand.module is fi.module and cand.node is sub:
+                            out.add(cand)
+        return out
+
+    def _resolve(self, name: str, caller: FunctionInfo, *,
+                 via_self: bool) -> list[FunctionInfo]:
+        cands = self.tree.by_def_name.get(name, [])
+        if not cands:
+            return []
+        if via_self and caller.cls:
+            same_cls = [c for c in cands
+                        if c.cls == caller.cls and c.module is caller.module]
+            if same_cls:
+                return same_cls
+        return cands
+
+    def reachable(self, roots: list[FunctionInfo]) -> list[FunctionInfo]:
+        """BFS closure over the call graph, roots included, stable order."""
+        seen: dict[str, FunctionInfo] = {}
+        frontier = [self.key(r) for r in roots]
+        for k in frontier:
+            seen[k] = self.nodes[k]
+        while frontier:
+            nxt = []
+            for k in frontier:
+                for callee in sorted(self.edges.get(k, ())):
+                    if callee not in seen and callee in self.nodes:
+                        seen[callee] = self.nodes[callee]
+                        nxt.append(callee)
+            frontier = nxt
+        return list(seen.values())

@@ -1,0 +1,232 @@
+"""Pass ``jit-cache``: compile-cache hygiene.
+
+PR 7's recompile-storm guard bucketed prefill lengths to powers of two
+and capped the gather grid to ``GATHER_BUCKETS``; this pass keeps the
+discipline from eroding:
+
+* ``unbucketed-cache-key`` — a ``*_cache[key] = ...`` store (or
+  ``setdefault``) whose key derives from a raw length/shape
+  (``len(...)``, ``.shape``) without flowing through a ``*bucket*``
+  function: every distinct request length would mint a fresh jit
+  compilation;
+* ``float-static-arg``     — a ``static_argnames`` entry whose
+  parameter is float-typed (annotation or default): floats hash by
+  value, so every new value recompiles — thread it as a traced operand
+  or quantize it into the config;
+* ``unhashable-static-arg`` — a ``static_argnames`` entry whose
+  parameter defaults to / is annotated as a list, dict or set (jit
+  raises at call time, but only on the path that passes it)."""
+
+from __future__ import annotations
+
+import ast
+
+from .framework import Reporter, SourceTree, attr_chain, call_name
+
+PASS_ID = "jit-cache"
+
+_UNHASHABLE = {"list", "dict", "set", "List", "Dict", "Set"}
+
+
+def run(tree: SourceTree, reporter: Reporter) -> None:
+    for fi in tree.functions:
+        _check_static_args(fi, reporter)
+        _check_cache_keys(fi, reporter)
+    for mod in tree.modules:
+        _check_module_jits(mod, tree, reporter)
+
+
+# ------------------------------------------------------- static_argnames
+def _static_names(call: ast.Call) -> list[str]:
+    for kw in call.keywords:
+        if kw.arg in ("static_argnames", "static_argnums"):
+            v = kw.value
+            if isinstance(v, (ast.Tuple, ast.List)):
+                return [e.value for e in v.elts
+                        if isinstance(e, ast.Constant)
+                        and isinstance(e.value, str)]
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                return [v.value]
+    return []
+
+
+def _jit_call(node: ast.AST) -> ast.Call | None:
+    """Match ``jax.jit(...)``, ``functools.partial(jax.jit, ...)``."""
+    if not isinstance(node, ast.Call):
+        return None
+    chain = attr_chain(node.func)
+    if chain and chain[-1] == "jit":
+        return node
+    if call_name(node) == "partial" and node.args:
+        c = attr_chain(node.args[0])
+        if c and c[-1] == "jit":
+            return node
+    return None
+
+
+def _check_static_args(fi, reporter: Reporter) -> None:
+    names: list[str] = []
+    line = fi.node.lineno
+    for dec in fi.node.decorator_list:
+        jc = _jit_call(dec)
+        if jc is not None:
+            names += _static_names(jc)
+            line = dec.lineno
+    if not names:
+        return
+    params = {}
+    a = fi.node.args
+    all_args = a.posonlyargs + a.args + a.kwonlyargs
+    defaults = dict(zip([p.arg for p in reversed(a.args)],
+                        list(reversed(a.defaults))))
+    defaults.update(zip([p.arg for p in a.kwonlyargs], a.kw_defaults))
+    for p in all_args:
+        params[p.arg] = p
+    for name in names:
+        p = params.get(name)
+        if p is None:
+            continue
+        ann = p.annotation
+        ann_name = None
+        if isinstance(ann, ast.Name):
+            ann_name = ann.id
+        elif isinstance(ann, ast.Subscript) and isinstance(ann.value,
+                                                           ast.Name):
+            ann_name = ann.value.id
+        d = defaults.get(name)
+        if ann_name == "float" or (isinstance(d, ast.Constant)
+                                   and isinstance(d.value, float)):
+            reporter.emit(
+                PASS_ID, "float-static-arg", fi.module, line,
+                f"static arg {name!r} of {fi.qualname} is float-typed: "
+                "every distinct value mints a fresh compilation", fn=fi)
+        if ann_name in _UNHASHABLE or isinstance(d, (ast.List, ast.Dict,
+                                                     ast.Set)):
+            reporter.emit(
+                PASS_ID, "unhashable-static-arg", fi.module, line,
+                f"static arg {name!r} of {fi.qualname} is unhashable: "
+                "jit will raise at call time", fn=fi)
+
+
+def _check_module_jits(mod, tree: SourceTree, reporter: Reporter) -> None:
+    """``self._f = jax.jit(g, static_argnames=...)`` wrapping a resolvable
+    function: apply the same static-arg checks to g's signature."""
+    for node in ast.walk(mod.tree):
+        jc = _jit_call(node)
+        if jc is None or not jc.args:
+            continue
+        target = jc.args[-1] if call_name(jc) == "partial" else jc.args[0]
+        names = _static_names(jc)
+        if not names or not isinstance(target, ast.Name):
+            continue
+        for cand in tree.by_def_name.get(target.id, []):
+            if cand.module is mod:
+                _check_static_args_of(cand, names, jc.lineno, reporter)
+
+
+def _check_static_args_of(fi, names, line, reporter):
+    a = fi.node.args
+    params = {p.arg: p for p in a.posonlyargs + a.args + a.kwonlyargs}
+    defaults = dict(zip([p.arg for p in reversed(a.args)],
+                        list(reversed(a.defaults))))
+    for name in names:
+        p = params.get(name)
+        if p is None:
+            continue
+        ann = p.annotation
+        ann_name = ann.id if isinstance(ann, ast.Name) else None
+        d = defaults.get(name)
+        if ann_name == "float" or (isinstance(d, ast.Constant)
+                                   and isinstance(d.value, float)):
+            reporter.emit(
+                PASS_ID, "float-static-arg", fi.module, line,
+                f"static arg {name!r} of {fi.qualname} is float-typed: "
+                "every distinct value mints a fresh compilation", fn=fi)
+        if ann_name in _UNHASHABLE or isinstance(d, (ast.List, ast.Dict,
+                                                     ast.Set)):
+            reporter.emit(
+                PASS_ID, "unhashable-static-arg", fi.module, line,
+                f"static arg {name!r} of {fi.qualname} is unhashable: "
+                "jit will raise at call time", fn=fi)
+
+
+# ------------------------------------------------------------ cache keys
+def _check_cache_keys(fi, reporter: Reporter) -> None:
+    """Flag ``*cache*[key]`` subscripts whose key components derive from a
+    raw ``len(...)`` / ``.shape`` without passing through a bucketing
+    call (name containing "bucket")."""
+    raw: set[str] = set()          # locals holding raw lengths/shapes
+    bucketed: set[str] = set()     # locals laundered through a bucket fn
+
+    def classify(expr: ast.AST) -> str | None:
+        """'raw' | 'bucketed' | None for an expression."""
+        if isinstance(expr, ast.Call):
+            n = call_name(expr) or ""
+            if "bucket" in n:
+                return "bucketed"
+            if n == "len":
+                return "raw"
+            return None
+        if isinstance(expr, ast.Attribute) and expr.attr == "shape":
+            return "raw"
+        if isinstance(expr, ast.Subscript):
+            return classify(expr.value)
+        if isinstance(expr, ast.Name):
+            if expr.id in bucketed:
+                return "bucketed"
+            if expr.id in raw:
+                return "raw"
+        if isinstance(expr, ast.BinOp):
+            kinds = {classify(expr.left), classify(expr.right)}
+            if "bucketed" in kinds:
+                return "bucketed"
+            if "raw" in kinds:
+                return "raw"
+        if isinstance(expr, ast.Tuple):
+            # a key tuple leaks if ANY component is raw; comparisons like
+            # ``s == bucket`` collapse the length to a bool and stay None
+            kinds = {classify(e) for e in expr.elts}
+            if "raw" in kinds:
+                return "raw"
+            if "bucketed" in kinds:
+                return "bucketed"
+        return None
+
+    for node in ast.walk(fi.node):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                isinstance(node.targets[0], ast.Name):
+            kind = classify(node.value)
+            if kind == "raw":
+                raw.add(node.targets[0].id)
+                bucketed.discard(node.targets[0].id)
+            elif kind == "bucketed":
+                bucketed.add(node.targets[0].id)
+                raw.discard(node.targets[0].id)
+
+    def key_exprs(node: ast.AST):
+        # cache[key] on either side of an assignment, or .setdefault/.get
+        if isinstance(node, ast.Subscript):
+            base = node.value
+            chain = attr_chain(base)
+            if chain and "cache" in chain[-1].lower():
+                yield node.slice
+        if isinstance(node, ast.Call) and isinstance(node.func,
+                                                     ast.Attribute):
+            chain = attr_chain(node.func.value)
+            if chain and "cache" in chain[-1].lower() and \
+                    node.func.attr in ("setdefault", "get") and node.args:
+                yield node.args[0]
+
+    for node in ast.walk(fi.node):
+        for key in key_exprs(node):
+            parts = key.elts if isinstance(key, ast.Tuple) else [key]
+            for part in parts:
+                if classify(part) == "raw":
+                    reporter.emit(
+                        PASS_ID, "unbucketed-cache-key", fi.module,
+                        node.lineno,
+                        f"jit-cache key component in {fi.qualname} "
+                        "derives from a raw length/shape; route it "
+                        "through a bucketing function or every distinct "
+                        "size recompiles", fn=fi)
+                    break

@@ -1,0 +1,337 @@
+"""Pass ``pallas``: kernel hygiene for the Pallas TPU paths.
+
+Interpret-mode CI (see ROADMAP "compiled-mode validation") hides a class
+of bugs Mosaic would reject or — worse — miscompile: BlockSpec
+``index_map`` arity drifting from the grid rank, kernel signatures out
+of sync with spec/scratch lists, scalar-prefetch operands dropped, and
+unguarded output writes on revisited blocks (the output-block revisit
+caveat: a multi-pass grid must ``pl.when`` its writes or the revisit
+clobbers the accumulator).  These are shape-of-the-code facts, so they
+lint statically:
+
+* ``index-map-arity``     — a ``pl.BlockSpec`` index_map lambda whose
+  arity != grid rank + num_scalar_prefetch;
+* ``kernel-arity``        — kernel positional params != prefetch +
+  len(in_specs) + n_outputs + len(scratch_shapes);
+* ``operand-count``       — the ``pallas_call(...)`` invocation passes a
+  different number of operands than prefetch + len(in_specs) (scalar
+  prefetch operands come *first* — a count mismatch is the usual
+  symptom of misordering them);
+* ``scratch-shape``       — a ``scratch_shapes`` entry that is not a
+  ``pltpu.VMEM(...)`` / ``pltpu.SMEM(...)`` constructor;
+* ``unguarded-output-write`` — a store to an output ref in a kernel
+  whose grid has rank >= 2, not nested under a ``pl.when`` block.
+
+Anything the linter cannot resolve statically (non-literal grids, specs
+built in loops) is skipped silently — this pass is a tripwire for the
+three real kernels, not a Mosaic reimplementation."""
+
+from __future__ import annotations
+
+import ast
+
+from .framework import (FunctionInfo, ModuleInfo, Reporter, SourceTree,
+                        attr_chain, call_name, const_int)
+
+PASS_ID = "pallas"
+
+
+def _is_pallas_module(mod: ModuleInfo) -> bool:
+    return "pallas" in mod.source and (
+        "pl.pallas_call" in mod.source or "pallas_call" in mod.source)
+
+
+def run(tree: SourceTree, reporter: Reporter) -> None:
+    for mod in tree.modules:
+        if not _is_pallas_module(mod):
+            continue
+        for fi in tree.functions:
+            if fi.module is mod:
+                _check_host_fn(fi, tree, reporter)
+
+
+def _local_assignments(fn: ast.AST) -> dict[str, ast.AST]:
+    out = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            out[node.targets[0].id] = node.value
+    return out
+
+
+def _resolve(expr: ast.AST, env: dict[str, ast.AST], depth=0) -> ast.AST:
+    while isinstance(expr, ast.Name) and expr.id in env and depth < 8:
+        expr = env[expr.id]
+        depth += 1
+    return expr
+
+
+def _seq_len(expr: ast.AST, env: dict[str, ast.AST]) -> int | None:
+    expr = _resolve(expr, env)
+    if isinstance(expr, (ast.Tuple, ast.List)):
+        return len(expr.elts)
+    return None
+
+
+def _check_host_fn(fi: FunctionInfo, tree: SourceTree,
+                   reporter: Reporter) -> None:
+    env = _local_assignments(fi.node)
+    mod = fi.module
+    for node in ast.walk(fi.node):
+        if not isinstance(node, ast.Call):
+            continue
+        name = call_name(node)
+        if name == "pallas_call":
+            _check_pallas_call(node, fi, env, tree, reporter)
+        elif name == "PrefetchScalarGridSpec":
+            pass    # handled from the enclosing pallas_call
+        elif name == "BlockSpec":
+            pass    # handled with grid context below
+    # arity of every BlockSpec lambda in this function against the
+    # function's (single) grid configuration, if determinable
+    ctx = _grid_context(fi.node, env)
+    if ctx is None:
+        return
+    rank, prefetch = ctx
+    for spec_call, lam in _block_spec_lambdas(fi, tree):
+        arity = len(lam.args.posonlyargs) + len(lam.args.args)
+        if lam.args.vararg is not None:
+            continue
+        if arity != rank + prefetch:
+            reporter.emit(
+                PASS_ID, "index-map-arity", spec_call_mod(spec_call, fi),
+                lam.lineno,
+                f"index_map takes {arity} args but grid rank {rank} + "
+                f"{prefetch} scalar-prefetch operands requires "
+                f"{rank + prefetch}", fn=fi)
+
+
+def spec_call_mod(spec_call, fi):
+    return fi.module
+
+
+def _grid_context(fn: ast.AST, env: dict[str, ast.AST]):
+    """(grid_rank, num_scalar_prefetch) for the pallas_call(s) in this
+    function, or None if absent/ambiguous."""
+    found = []
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        name = call_name(node)
+        if name == "pallas_call":
+            rank, prefetch = _call_grid(node, env)
+            if rank is not None:
+                found.append((rank, prefetch))
+    if len(set(found)) == 1:
+        return found[0]
+    return None
+
+
+def _call_grid(call: ast.Call, env: dict[str, ast.AST]):
+    """Resolve (grid_rank, prefetch) of one pallas_call: either a direct
+    ``grid=`` kwarg (prefetch 0) or a ``grid_spec=PrefetchScalarGridSpec``."""
+    for kw in call.keywords:
+        if kw.arg == "grid":
+            rank = _seq_len(kw.value, env)
+            return rank, 0
+        if kw.arg == "grid_spec":
+            spec = _resolve(kw.value, env)
+            if isinstance(spec, ast.Call) and \
+                    call_name(spec) == "PrefetchScalarGridSpec":
+                rank = prefetch = None
+                for skw in spec.keywords:
+                    if skw.arg == "grid":
+                        rank = _seq_len(skw.value, env)
+                    if skw.arg == "num_scalar_prefetch":
+                        prefetch = const_int(skw.value)
+                return rank, (prefetch or 0)
+    return None, 0
+
+
+def _block_spec_lambdas(fi: FunctionInfo, tree: SourceTree):
+    """Every ``pl.BlockSpec(..., lambda...)`` built in this function or in
+    a helper defined in the same module and called from here."""
+    fns = [fi.node]
+    for node in ast.walk(fi.node):
+        if isinstance(node, ast.Call):
+            n = call_name(node)
+            for cand in tree.by_def_name.get(n or "", []):
+                if cand.module is fi.module and cand.node not in fns \
+                        and cand.cls is None:
+                    fns.append(cand.node)
+    seen: set[int] = set()
+    for fn in fns:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) and call_name(node) == "BlockSpec":
+                args = list(node.args) + [kw.value for kw in node.keywords]
+                for a in args:
+                    if isinstance(a, ast.Lambda) and id(a) not in seen:
+                        seen.add(id(a))
+                        yield node, a
+
+
+def _check_pallas_call(call: ast.Call, fi: FunctionInfo,
+                       env: dict[str, ast.AST], tree: SourceTree,
+                       reporter: Reporter) -> None:
+    mod = fi.module
+    rank, prefetch = _call_grid(call, env)
+
+    # ---- spec/out/scratch counts
+    n_in = n_out = n_scratch = None
+    spec_src = call          # keywords live on pallas_call or the grid_spec
+    for kw in call.keywords:
+        if kw.arg == "grid_spec":
+            g = _resolve(kw.value, env)
+            if isinstance(g, ast.Call):
+                spec_src = g
+    for src in (call, spec_src):
+        for kw in src.keywords:
+            if kw.arg == "in_specs":
+                n_in = _seq_len(kw.value, env)
+            elif kw.arg == "out_specs":
+                v = _resolve(kw.value, env)
+                n_out = len(v.elts) if isinstance(
+                    v, (ast.Tuple, ast.List)) else 1
+            elif kw.arg == "out_shape":
+                v = _resolve(kw.value, env)
+                if n_out is None:
+                    n_out = len(v.elts) if isinstance(
+                        v, (ast.Tuple, ast.List)) else 1
+            elif kw.arg == "scratch_shapes":
+                v = _resolve(kw.value, env)
+                if isinstance(v, (ast.Tuple, ast.List)):
+                    n_scratch = len(v.elts)
+                    for s in v.elts:
+                        sname = call_name(s) if isinstance(s, ast.Call) \
+                            else None
+                        if sname not in ("VMEM", "SMEM", "SemaphoreType"):
+                            reporter.emit(
+                                PASS_ID, "scratch-shape", mod, s.lineno,
+                                "scratch_shapes entries must be "
+                                "pltpu.VMEM/pltpu.SMEM constructors",
+                                fn=fi)
+    if n_scratch is None:
+        n_scratch = 0
+
+    # ---- kernel signature arity
+    kernel = _kernel_def(call, env, tree, fi)
+    if kernel is not None and None not in (n_in, n_out):
+        bound = kernel_bound_args(call, env)
+        a = kernel.node.args
+        n_params = len(a.posonlyargs) + len(a.args) - bound
+        expected = prefetch + n_in + n_out + n_scratch
+        if a.vararg is None and n_params != expected:
+            reporter.emit(
+                PASS_ID, "kernel-arity", mod, call.lineno,
+                f"kernel {kernel.qualname} takes {n_params} refs but "
+                f"{prefetch} prefetch + {n_in} inputs + {n_out} outputs "
+                f"+ {n_scratch} scratch = {expected}", fn=fi)
+
+        # ---- unguarded output writes on revisiting grids
+        if rank is not None and rank >= 2:
+            out_params = (a.posonlyargs + a.args)[
+                bound + prefetch + n_in: bound + prefetch + n_in + n_out]
+            out_names = {p.arg for p in out_params}
+            _check_guarded_writes(kernel, out_names, reporter)
+
+    # ---- operand count at the invocation site
+    if n_in is not None:
+        parent = _invocation(call, fi.node)
+        if parent is not None and not any(
+                isinstance(x, ast.Starred) for x in parent.args):
+            got = len(parent.args)
+            expected = prefetch + n_in
+            if got != expected:
+                reporter.emit(
+                    PASS_ID, "operand-count", mod, parent.lineno,
+                    f"pallas_call invoked with {got} operands but "
+                    f"{prefetch} scalar-prefetch + {n_in} inputs = "
+                    f"{expected} (prefetch operands come first)", fn=fi)
+
+
+def _invocation(call: ast.Call, fn: ast.AST) -> ast.Call | None:
+    """The ``pl.pallas_call(...)(*operands)`` outer call, if immediate."""
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) and node.func is call:
+            return node
+    # `f = pl.pallas_call(...); ...; f(*operands)`
+    bound = None
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and node.value is call and \
+                len(node.targets) == 1 and \
+                isinstance(node.targets[0], ast.Name):
+            bound = node.targets[0].id
+    if bound is not None:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Name) and \
+                    node.func.id == bound:
+                return node
+    return None
+
+
+def kernel_bound_args(call: ast.Call, env: dict[str, ast.AST]) -> int:
+    """Positional args pre-bound by functools.partial on the kernel."""
+    k = _kernel_expr(call, env)
+    if isinstance(k, ast.Call) and call_name(k) == "partial":
+        return max(0, len(k.args) - 1)
+    return 0
+
+
+def _kernel_expr(call: ast.Call, env: dict[str, ast.AST]) -> ast.AST | None:
+    if call.args:
+        return _resolve(call.args[0], env)
+    for kw in call.keywords:
+        if kw.arg in ("kernel", "f"):
+            return _resolve(kw.value, env)
+    return None
+
+
+def _kernel_def(call: ast.Call, env: dict[str, ast.AST], tree: SourceTree,
+                fi: FunctionInfo) -> FunctionInfo | None:
+    k = _kernel_expr(call, env)
+    if isinstance(k, ast.Call) and call_name(k) == "partial" and k.args:
+        k = _resolve(k.args[0], env)
+    name = None
+    if isinstance(k, ast.Name):
+        name = k.id
+    elif isinstance(k, ast.Attribute):
+        name = k.attr
+    if name is None:
+        return None
+    # same-module resolution only: kernels named `_fused_kernel` exist in
+    # several modules and cross-linking them would mix signatures
+    for cand in tree.by_def_name.get(name, []):
+        if cand.module is fi.module:
+            return cand
+    return None
+
+
+def _check_guarded_writes(kernel: FunctionInfo, out_names: set[str],
+                          reporter: Reporter) -> None:
+    """Stores to output refs must sit under a ``pl.when``-decorated nested
+    def when the grid revisits blocks (rank >= 2)."""
+    guarded: set[int] = set()
+    for node in ast.walk(kernel.node):
+        if isinstance(node, ast.FunctionDef):
+            for dec in node.decorator_list:
+                base = dec.func if isinstance(dec, ast.Call) else dec
+                chain = attr_chain(base)
+                if chain and chain[-1] == "when":
+                    for sub in ast.walk(node):
+                        guarded.add(id(sub))
+    for node in ast.walk(kernel.node):
+        if isinstance(node, (ast.Assign, ast.AugAssign)) \
+                and id(node) not in guarded:
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for t in targets:
+                if isinstance(t, ast.Subscript) and \
+                        isinstance(t.value, ast.Name) and \
+                        t.value.id in out_names:
+                    reporter.emit(
+                        PASS_ID, "unguarded-output-write", kernel.module,
+                        node.lineno,
+                        f"write to output ref {t.value.id!r} outside "
+                        "pl.when on a rank>=2 grid: block revisits will "
+                        "clobber it", fn=kernel)

@@ -93,6 +93,8 @@ def _stored_plane(plane: np.ndarray,
     from repro.core.tables import uniform_table
     flat = plane.reshape(-1).astype(np.int64)
     streams, n_valid = fmt.split_streams(flat, elems_per_stream)
+    # apack: allow-transfer(host codec utility: raw-plane packing runs at
+    # calibration/seal/spill events, never inside the decode step)
     packed = np.asarray(_ref.pack_raw(jnp.asarray(streams),
                                       streams.shape[1], 8)).astype(np.uint32)
     s, e = streams.shape

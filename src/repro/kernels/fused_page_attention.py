@@ -152,6 +152,8 @@ def _fused_kernel(idx_ref, tid_ref, q_ref, jm_ref, meta_ref,
         l_ref[0] = l_s[...].reshape(hkv * g)
 
 
+# apack: allow-jit-cache(softcap is one value per served model config --
+# bounded by the config set, unlike per-request shapes)
 @functools.partial(
     jax.jit, static_argnames=("n_steps", "num_heads", "bits", "softcap",
                               "interpret"))
@@ -263,6 +265,8 @@ def fused_page_attention_pallas(
       vm.astype(I32), ol.astype(I32), cum.astype(I32))
 
 
+# apack: allow-jit-cache(softcap is one value per served model config --
+# bounded by the config set, unlike per-request shapes)
 @functools.partial(
     jax.jit, static_argnames=("n_steps", "num_heads", "bits", "softcap"))
 def fused_page_attention_ref(

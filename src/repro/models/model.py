@@ -395,6 +395,7 @@ def decode_step(cfg: ModelConfig, params: dict, caches: dict,
     return logits, {"prefix": new_prefix, "blocks": new_caches}
 
 
+# apack: hot-path-root(traced)
 def decode_step_paged(cfg: ModelConfig, params: dict, planes: dict,
                       states: dict, meta: dict, tokens: jax.Array,
                       pos: jax.Array, backend: str | None = None):
@@ -978,7 +979,7 @@ class PagedKVCache:
         if kind not in self._state_templates:
             one = _init_block_cache(self.cfg, kind, 1, 1)
             self._state_templates[kind] = {
-                f: np.asarray(jax.device_get(x))[0] for f, x in one.items()}
+                f: np.asarray(self._fetch(x))[0] for f, x in one.items()}
         return self._state_templates[kind]
 
     def _ring(self, max_len: int) -> int:
@@ -1194,6 +1195,8 @@ class PagedKVCache:
             ta = _codec.TableArrays.from_table(self.tables[layer][kind])
             planes = _codec.encode(jnp.asarray(vals.astype(np.int32)), ta,
                                    pool.elems_per_stream, 8)
+            # apack: allow-transfer(page-seal event: encoding a sealed COLD
+            # page is host work off the step critical path)
             outs.append(tuple(np.asarray(p) for p in planes))
         pool.pack(pid, tuple(np.stack([o[i] for o in outs])
                              for i in range(5)))
@@ -1394,6 +1397,8 @@ class PagedKVCache:
         outs = []
         for kind in (0, 1):
             old_t = self._table_at(old_gen, layer, kind)
+            # apack: allow-transfer(budgeted re-pack event: codec round-trip
+            # over sealed PACKED pages, size-gated, never on the step path)
             vals = np.asarray(_codec.decode(
                 jnp.asarray(pool.sym[kind, pid]),
                 jnp.asarray(pool.ofs[kind, pid]),
@@ -1403,6 +1408,8 @@ class PagedKVCache:
             ta = _codec.TableArrays.from_table(self.tables[layer][kind])
             planes = _codec.encode(jnp.asarray(vals.astype(np.int32)), ta,
                                    pool.elems_per_stream, 8)
+            # apack: allow-transfer(budgeted re-pack event: pulls the
+            # re-encoded planes for the host pool, off the step path)
             outs.append(tuple(np.asarray(p) for p in planes))
         # the decode read happened regardless of the gate's verdict
         self.traffic["kv_repack_read_bytes"] += old_bytes
@@ -1626,6 +1633,8 @@ class PagedKVCache:
                 if attempt == self.transfer_retries:
                     raise
 
+    # apack: allow-transfer(sole accounted d2h funnel: every KV pull rides
+    # this wrapper so the bench ledger and the zero-device_get gates see it)
     def _fetch(self, tree):
         """``jax.device_get`` with transfer accounting (pytrees allowed,
         one call).  Every device->host byte the KV path moves goes

@@ -243,6 +243,7 @@ def attention_step(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
     return y, {"k": kc, "v": vc}
 
 
+# apack: hot-path-root(traced)
 def paged_attention_step(p: dict, x: jax.Array, planes: dict, meta: dict,
                          pos: jax.Array, cfg: ModelConfig, *,
                          backend: str | None = None
@@ -801,6 +802,37 @@ PAGE_STATE_NAMES = {PAGE_FREE: "FREE", PAGE_HOT: "HOT",
                     PAGE_COLD: "COLD", PAGE_PACKED: "PACKED",
                     PAGE_SPILLED: "SPILLED"}
 
+# Canonical page-lifecycle transition table — the single source of truth for
+# the pool state machine.  Keys are the pool methods that move pages between
+# states; values are the declared (src, dst) edges.  Two consumers:
+#
+#   * runtime: ``KVPagePool._require_transition`` validates every lifecycle
+#     step against this table before the state write happens, so an illegal
+#     edge raises instead of corrupting the pool;
+#   * static:  ``repro.analysis.lifecycle`` parses this literal and verifies
+#     every ``self.state[pid] = PAGE_*`` assignment site in the tree has a
+#     dominating guard for a declared edge — CI fails on drift.
+#
+# SPILLED is deliberately absent: it is a *page-table* state owned by
+# ``model.PagedKVCache`` (negative spill handles), never a pool-slot state —
+# ``spill`` frees the slot and the payload parks in ``HostSpillTier``.
+# ``evict``/``spill`` edges end at FREE because both funnel through ``free``
+# for the actual write + scrub; their entries declare which sources may
+# take that path (HOT pages are never evictable).  This dict must stay a
+# pure literal: the analyzer reads it from the AST without importing jax.
+PAGE_TRANSITIONS = {
+    "alloc":  ((PAGE_FREE, PAGE_HOT),),
+    "free":   ((PAGE_HOT, PAGE_FREE), (PAGE_COLD, PAGE_FREE),
+               (PAGE_PACKED, PAGE_FREE)),
+    "evict":  ((PAGE_COLD, PAGE_FREE), (PAGE_PACKED, PAGE_FREE)),
+    "spill":  ((PAGE_HOT, PAGE_FREE), (PAGE_COLD, PAGE_FREE),
+               (PAGE_PACKED, PAGE_FREE)),
+    "adopt":  ((PAGE_HOT, PAGE_COLD), (PAGE_HOT, PAGE_PACKED)),
+    "seal":   ((PAGE_HOT, PAGE_COLD),),
+    "pack":   ((PAGE_COLD, PAGE_PACKED),),
+    "repack": ((PAGE_PACKED, PAGE_PACKED),),
+}
+
 
 class PageIntegrityError(RuntimeError):
     """A KV page failed an integrity check (checksum mismatch on unspill or
@@ -969,6 +1001,24 @@ class KVPagePool:
         return (f"page {pid}: state={PAGE_STATE_NAMES.get(st, st)} "
                 f"fill={int(self.fill[pid])}/{self.page_size}")
 
+    def _require_transition(self, pid: int, edge: str, dst: int, *,
+                            exc: type = ValueError,
+                            detail: str | None = None) -> int:
+        """Validate one lifecycle step against ``PAGE_TRANSITIONS`` and
+        return the current (source) state.  Every state-mutating pool
+        method funnels through here, so the declared table *is* the
+        runtime guard — not a comment about it.  ``detail`` prefixes the
+        error with the caller's diagnosis (kept stable for tests that
+        match on it); the transition itself is always spelled out."""
+        src = int(self.state[pid])
+        if (src, dst) not in PAGE_TRANSITIONS[edge]:
+            what = detail or f"illegal {edge}"
+            raise exc(
+                f"{what}: {PAGE_STATE_NAMES.get(src, src)}->"
+                f"{PAGE_STATE_NAMES.get(dst, dst)} is not a declared "
+                f"page transition ({self._page_state(pid)})")
+        return src
+
     # ------------------------------------------------------------ free list
     @property
     def free_count(self) -> int:
@@ -978,6 +1028,9 @@ class KVPagePool:
         if not self.free_list:
             return None
         pid = self.free_list.pop()
+        # a non-FREE page on the free list is corruption — stay loud
+        self._require_transition(pid, "alloc", PAGE_HOT, exc=RuntimeError,
+                                 detail="alloc from corrupt free list")
         self.state[pid] = PAGE_HOT
         self.fill[pid] = 0
         self.alloc_count += 1
@@ -986,8 +1039,8 @@ class KVPagePool:
         return pid
 
     def free(self, pid: int) -> None:
-        if self.state[pid] == PAGE_FREE:
-            raise ValueError(f"double free of page ({self._page_state(pid)})")
+        self._require_transition(pid, "free", PAGE_FREE,
+                                 detail="double free of page")
         self.state[pid] = PAGE_FREE
         self.fill[pid] = 0
         # scrub so a stale read of a recycled page is loud, not subtle
@@ -1007,10 +1060,10 @@ class KVPagePool:
         token has rolled out of its layer's attention window.  HOT pages
         are never evictable — the newest tokens live there, and a policy
         bug that tries is corruption, not cleanup."""
-        if self.state[pid] == PAGE_HOT:
-            raise RuntimeError(
-                f"evict of live HOT page ({self._page_state(pid)}); "
-                "rolling eviction may only free sealed COLD/PACKED pages")
+        self._require_transition(
+            pid, "evict", PAGE_FREE, exc=RuntimeError,
+            detail="evict of live HOT (or already-FREE) page; rolling "
+                   "eviction may only free sealed COLD/PACKED pages")
         self.free(pid)
         self.evict_count += 1
 
@@ -1024,9 +1077,8 @@ class KVPagePool:
         per-token planes, COLD the page-requantized payload, PACKED just the
         compressed planes + page scales (the headline case: spill traffic is
         APack-compressed)."""
-        st = int(self.state[pid])
-        if st == PAGE_FREE:
-            raise ValueError(f"spill of FREE page ({self._page_state(pid)})")
+        st = self._require_transition(pid, "spill", PAGE_FREE,
+                                      detail="spill of FREE page")
         fill = int(self.fill[pid])
         if st == PAGE_HOT:
             payload = {"tok_q": self.tok_q[:, pid].copy(),
@@ -1061,11 +1113,13 @@ class KVPagePool:
             self.tok_scale[:, pid] = payload["tok_scale"]
             self.fill[pid] = fill
         elif st == PAGE_COLD:
+            self._require_transition(pid, "adopt", PAGE_COLD)
             self.cold_q[:, pid] = payload["cold_q"]
             self.page_scale[:, pid] = payload["page_scale"]
             self.fill[pid] = fill
             self.state[pid] = PAGE_COLD
         elif st == PAGE_PACKED:
+            self._require_transition(pid, "adopt", PAGE_PACKED)
             self.sym[:, pid] = payload["sym"]
             self.ofs[:, pid] = payload["ofs"]
             self.sym_bits[:, pid] = payload["sym_bits"]
@@ -1120,7 +1174,9 @@ class KVPagePool:
         """HOT -> COLD: store the page-requantized payload (``q2``
         [2, page_size, H, dh] int8, ``scale2`` [2, H] f32) and drop the
         per-token copy."""
-        if self.state[pid] != PAGE_HOT or self.fill[pid] != self.page_size:
+        self._require_transition(pid, "seal", PAGE_COLD,
+                                 detail="seal of non-full or non-HOT page")
+        if self.fill[pid] != self.page_size:
             raise ValueError(
                 f"seal of non-full or non-HOT page ({self._page_state(pid)})")
         self.cold_q[:, pid] = q2
@@ -1134,9 +1190,8 @@ class KVPagePool:
         (``planes`` = (sym[2,Ws,S], ofs[2,Wo,S], sym_bits[2,S],
         ofs_bits[2,S], stored[2,S])) and scrub the raw payload so any read
         that bypasses the decoder is visibly wrong."""
-        if self.state[pid] != PAGE_COLD:
-            raise ValueError(
-                f"pack of non-COLD page ({self._page_state(pid)})")
+        self._require_transition(pid, "pack", PAGE_PACKED,
+                                 detail="pack of non-COLD page")
         sym, ofs, sb, ob, st = planes
         self.sym[:, pid] = sym
         self.ofs[:, pid] = ofs
@@ -1155,9 +1210,8 @@ class KVPagePool:
         a refresh as long as the reader's table id swaps with the planes
         (``model.PagedKVCache`` stamps ``page_gen`` in the same host-side
         critical section)."""
-        if self.state[pid] != PAGE_PACKED:
-            raise ValueError(
-                f"repack of non-PACKED page ({self._page_state(pid)})")
+        self._require_transition(pid, "repack", PAGE_PACKED,
+                                 detail="repack of non-PACKED page")
         sym, ofs, sb, ob, st = planes
         self.sym[:, pid] = sym
         self.ofs[:, pid] = ofs

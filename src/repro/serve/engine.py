@@ -490,6 +490,9 @@ class ServeEngine:
         self._pump.pop(rid, None)
         for s, r in enumerate(self.active):
             if r is req:
+                # apack: allow-phase(overlap-reachable only via readahead
+                # staging, which fails parked/spilled requests; a request
+                # bound to an in-flight slot never takes this path)
                 self.active[s] = None
         try:
             self.queue.remove(req)
@@ -497,6 +500,9 @@ class ServeEngine:
             pass
         if self.paged:
             if rid in self.kv.page_tables:
+                # apack: allow-phase(releases a parked request's SPILLED refs
+                # and residual pages; the in-flight step's page tables were
+                # snapshotted at dispatch and cannot reference this rid)
                 self.kv.release(rid)
             if rid in self._reserved:
                 self._reserved_total -= self._reserved.pop(rid)
@@ -556,6 +562,8 @@ class ServeEngine:
                     self.kv.write_state_slot(slot, req.rid)
         else:
             self._write_prefill_cache(slot, caches)
+        # apack: allow-transfer(admission event: first-token pick after a
+        # prefill forward; not in the steady-state decode loop)
         next_tok = int(jnp.argmax(logits[0, -1]))
         req.tokens.append(next_tok)
         self.active[slot] = req
@@ -747,6 +755,7 @@ class ServeEngine:
         self._fail_request(req, e)
 
     # ------------------------------------------------------------- step
+    # apack: hot-path-root
     def step(self) -> int:
         """One engine iteration.  Returns number of active sequences."""
         if self.scheduler == "async":
@@ -796,6 +805,9 @@ class ServeEngine:
                                               new_cache, targets)
             self.kv.dev_states = M.states_from_step(self.cfg, new_cache)
             self.kv.note_appended(slot_rids)
+            # apack: allow-transfer(the step's one sanctioned sync: token ids
+            # must reach the host for EOS/retire; the d2h ledger and the
+            # zero-device_get gates account for exactly this pull)
             toks = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
         else:
             if self.paged:
@@ -806,6 +818,8 @@ class ServeEngine:
             logits, new_cache = self._decode(self.params, self.cache,
                                              jnp.asarray(self.last_tokens),
                                              jnp.asarray(self.positions))
+            # apack: allow-transfer(materialize parity oracle: same sanctioned
+            # token-id pull as the fused branch)
             toks = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
             if self.paged:
                 # the decode wrote each slot's quantized K/V at its
@@ -906,6 +920,10 @@ class ServeEngine:
             # drift check + budgeted re-pack (host sketches + one h2d
             # flush chained onto the pending plane futures) — same
             # cadence as the sync engine: once per decode step
+            # apack: allow-phase(refresh mutates only sealed PACKED pages
+            # with whole-page plane+gen swaps; the in-flight kernel reads the
+            # device planes snapshotted at dispatch, so it never observes a
+            # half-swapped page)
             rs = self.kv.refresh_step(self.kv_repack_budget)
             self.stats["kv_refreshes"] += len(rs["refreshed_layers"])
             self.stats["kv_pages_repacked"] += rs["repacked"]
@@ -925,11 +943,18 @@ class ServeEngine:
             p.view = self.kv.prefill_host_view(p.caches)
             p.caches = None
         t1 = min(p.cursor + self.prefill_chunk_tokens, p.s)
+        # apack: allow-phase(pending request's pages only: the rid has no
+        # slot until admission completes post-collect, so the in-flight
+        # step cannot reference these page tables)
         self.kv.ingest_prefill_chunk(p.req.rid, p.view, p.cursor, t1, p.s)
         p.cursor = t1
         self.stats["prefill_chunks"] += 1
         if p.cursor >= p.s:
+            # apack: allow-phase(same pending-request argument as the chunk
+            # ingest above: no slot binding exists yet for this rid)
             self.kv.finish_prefill(p.req.rid, p.view, p.s)
+            # apack: allow-transfer(prefill-completion event in the overlap
+            # window: the wait rides the in-flight decode step)
             p.tok = int(jnp.argmax(p.logits[0, -1]))
             p.view = None
 
@@ -947,6 +972,9 @@ class ServeEngine:
                 self._reserved[rid] = need
                 self._reserved_total += need
                 try:
+                    # apack: allow-phase(restores a parked spilled request into
+                    # fresh pool slots; the in-flight step was dispatched
+                    # without this rid and cannot read the new pages)
                     self.kv.unspill_request(rid)
                 except m.PageIntegrityError as e:
                     self._fail_request(req, e)
@@ -1041,6 +1069,7 @@ class ServeEngine:
                 self._bind_prefilled(free.pop(0), p)
             # pump still ingesting: it binds on a later step
 
+    # apack: hot-path-root
     def _dispatch(self) -> None:
         """Fire the fused decode for the current binding WITHOUT blocking
         on the result: jit dispatch is async, so the logits / plane
@@ -1059,6 +1088,7 @@ class ServeEngine:
         self._inflight = _InFlight(slot_reqs=list(self.active),
                                    slot_rids=slot_rids, logits=logits)
 
+    # apack: hot-path-root
     def _collect(self) -> None:
         """Land the in-flight device step: block on its logits, account
         the appends, and apply per-slot token updates against the
@@ -1069,6 +1099,8 @@ class ServeEngine:
         if inf is None:
             return
         self._inflight = None
+        # apack: allow-transfer(collect IS the sync point: the async loop's one
+        # sanctioned token-id pull, after the step finished computing)
         toks = np.asarray(jnp.argmax(inf.logits[:, 0], axis=-1), np.int32)
         self.kv.note_appended(inf.slot_rids)
         self.last_logits = inf.logits

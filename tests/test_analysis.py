@@ -1,0 +1,559 @@
+"""Tests for the hot-path invariant analyzer (``repro.analysis``).
+
+Three layers, mirroring the acceptance criteria:
+
+* per-pass fixture tests — known-bad snippets must produce exactly the
+  expected finding codes, known-good snippets must be clean;
+* live-tree self-check — the real ``src/repro`` matches the committed
+  (empty) baseline, with every pass actually running;
+* mutation tests — copy the live tree, seed one violation per pass
+  (including deleting a ``device_get`` suppression on a hot-path file),
+  and assert the CI entry point would fail.
+"""
+
+import shutil
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+sys.path.insert(0, str(SRC))
+
+from repro.analysis import run_passes                       # noqa: E402
+from repro.analysis.framework import (Reporter, SourceTree,  # noqa: E402
+                                      write_baseline)
+from repro.analysis.runner import DEFAULT_ROOT, PASSES      # noqa: E402
+
+
+def make_tree(tmp_path: Path, files: dict[str, str]) -> Path:
+    root = tmp_path / "tree"
+    for rel, src in files.items():
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    return root
+
+
+def run_pass(root: Path, pass_id: str) -> list:
+    tree = SourceTree(root)
+    rep = Reporter(tree)
+    PASSES[pass_id](tree, rep)
+    rep.check_suppression_keys()
+    return rep.findings
+
+
+def codes(findings) -> list[str]:
+    return sorted(f.code for f in findings)
+
+
+# ---------------------------------------------------------------- boundary
+BOUNDARY_BAD = """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    # apack: hot-path-root
+    def step(pool):
+        logits = jnp.argmax(pool)
+        toks = np.asarray(logits)             # host-materialize
+        n = int(jnp.sum(pool))                # scalar-coerce
+        x = jax.device_get(pool)              # device-get
+        logits.block_until_ready()            # block-until-ready
+        v = jnp.max(pool).item()              # item-call
+        return helper(toks, n, x, v)
+
+    def helper(toks, n, x, v):
+        y = jnp.exp(x)
+        return float(y)                       # scalar-coerce (reachable)
+"""
+
+BOUNDARY_GOOD = """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    # apack: hot-path-root
+    def step(pool, meta):
+        arr = np.asarray(meta)                # host value: fine
+        n = int(arr.sum())                    # host numpy: fine
+        dev = jnp.argmax(pool)
+        shape = dev.shape                     # metadata: not tainted
+        k = int(shape[0])                     # static: fine
+        # apack: allow-transfer(the step's one sanctioned token pull)
+        toks = np.asarray(dev)
+        return toks, n, k
+
+    def unreachable(pool):
+        return jax.device_get(pool)           # not reachable from a root
+"""
+
+
+class TestBoundaryPass:
+    def test_bad_fixture_exact_findings(self, tmp_path):
+        root = make_tree(tmp_path, {"m.py": BOUNDARY_BAD})
+        got = codes(run_pass(root, "boundary"))
+        assert got == ["block-until-ready", "device-get", "host-materialize",
+                       "item-call", "scalar-coerce", "scalar-coerce"]
+
+    def test_good_fixture_clean(self, tmp_path):
+        root = make_tree(tmp_path, {"m.py": BOUNDARY_GOOD})
+        assert run_pass(root, "boundary") == []
+
+    def test_traced_root_taints_params(self, tmp_path):
+        root = make_tree(tmp_path, {"m.py": """
+            import numpy as np
+
+            # apack: hot-path-root(traced)
+            def decode_step(q, cfg: ModelConfig, bits: int):
+                a = np.asarray(q)             # param is a traced operand
+                b = float(cfg.softcap)        # config annotation: static
+                c = bits * 2                  # static arg: fine
+                return a, b, c
+        """})
+        assert codes(run_pass(root, "boundary")) == ["host-materialize"]
+
+    def test_suppression_without_reason_is_a_finding(self, tmp_path):
+        root = make_tree(tmp_path, {"m.py": """
+            import jax
+
+            # apack: hot-path-root
+            def step(x):
+                # apack: allow-transfer()
+                return jax.device_get(x)
+        """})
+        assert codes(run_pass(root, "boundary")) == ["missing-reason"]
+
+
+# --------------------------------------------------------------- lifecycle
+POOL_HEADER = """
+    PAGE_FREE, PAGE_HOT, PAGE_COLD, PAGE_PACKED = 0, 1, 2, 3
+    PAGE_TRANSITIONS = {
+        "alloc": ((PAGE_FREE, PAGE_HOT),),
+        "free":  ((PAGE_HOT, PAGE_FREE), (PAGE_COLD, PAGE_FREE)),
+        "seal":  ((PAGE_HOT, PAGE_COLD),),
+    }
+"""
+
+def pool_src(body: str) -> str:
+    """Append a class body to POOL_HEADER at its 4-space base indent."""
+    return POOL_HEADER + textwrap.indent(textwrap.dedent(body), "    ")
+
+
+POOL_GOOD = POOL_HEADER + """
+    class Pool:
+        def _require_transition(self, pid, edge, dst):
+            if (int(self.state[pid]), dst) not in PAGE_TRANSITIONS[edge]:
+                raise ValueError(edge)
+            return int(self.state[pid])
+
+        def alloc(self, pid):
+            self._require_transition(pid, "alloc", PAGE_HOT)
+            self.state[pid] = PAGE_HOT
+
+        def free(self, pid):
+            self._require_transition(pid, "free", PAGE_FREE)
+            self.state[pid] = PAGE_FREE
+
+        def seal(self, pid):
+            # hand-rolled raise-guard narrowing, no helper
+            if self.state[pid] != PAGE_HOT:
+                raise ValueError("bad seal")
+            self.state[pid] = PAGE_COLD
+"""
+
+
+class TestLifecyclePass:
+    def test_good_fixture_clean(self, tmp_path):
+        root = make_tree(tmp_path, {"pool.py": POOL_GOOD})
+        assert run_pass(root, "lifecycle") == []
+
+    def test_unguarded_write(self, tmp_path):
+        root = make_tree(tmp_path, {"pool.py": pool_src("""
+            class Pool:
+                def seal(self, pid):
+                    self.state[pid] = PAGE_COLD
+        """)})
+        assert codes(run_pass(root, "lifecycle")) == ["unguarded-state-write"]
+
+    def test_guard_dst_mismatch(self, tmp_path):
+        root = make_tree(tmp_path, {"pool.py": pool_src("""
+            class Pool:
+                def _require_transition(self, pid, edge, dst):
+                    pass
+
+                def seal(self, pid):
+                    self._require_transition(pid, "seal", PAGE_COLD)
+                    self.state[pid] = PAGE_PACKED
+        """)})
+        assert codes(run_pass(root, "lifecycle")) == ["guard-dst-mismatch"]
+
+    def test_undeclared_edge(self, tmp_path):
+        root = make_tree(tmp_path, {"pool.py": pool_src("""
+            class Pool:
+                def hibernate(self, pid):
+                    if self.state[pid] != PAGE_HOT:
+                        raise ValueError("nope")
+                    self.state[pid] = PAGE_COLD
+        """)})
+        assert codes(run_pass(root, "lifecycle")) == ["undeclared-edge"]
+
+    def test_undeclared_transition_via_narrowing(self, tmp_path):
+        # free's raise-guard admits COLD *and* PACKED sources, but the
+        # fixture table only declares HOT/COLD -> FREE
+        root = make_tree(tmp_path, {"pool.py": pool_src("""
+            class Pool:
+                def free(self, pid):
+                    if self.state[pid] == PAGE_FREE:
+                        raise ValueError("double free")
+                    self.state[pid] = PAGE_FREE
+        """)})
+        assert codes(run_pass(root, "lifecycle")) == ["undeclared-transition"]
+
+    def test_non_symbolic_state(self, tmp_path):
+        root = make_tree(tmp_path, {"pool.py": pool_src("""
+            class Pool:
+                def seal(self, pid):
+                    if self.state[pid] != PAGE_HOT:
+                        raise ValueError("bad")
+                    self.state[pid] = 2
+        """)})
+        assert codes(run_pass(root, "lifecycle")) == ["non-symbolic-state"]
+
+
+# ------------------------------------------------------------------ phases
+ENGINE_GOOD = """
+    class Engine:
+        def _step_async(self):
+            self._overlap_host_work()
+            self._collect()
+            self._retire()
+            self._dispatch()
+
+        def _overlap_host_work(self):
+            self.stats["ticks"] += 1
+
+        def _collect(self):
+            self.active[0] = None
+
+        def _retire(self):
+            self.active[0] = None
+            self.kv.release(0)
+
+        def _dispatch(self):
+            pass
+"""
+
+ENGINE_BAD = """
+    class Engine:
+        def _step_async(self):
+            self._overlap_host_work()
+            self._collect()
+            self._retire()
+
+        def _overlap_host_work(self):
+            self.active[0] = None           # slot write in overlap
+            self.kv.release(0)              # pool mutation in overlap
+
+        def _collect(self):
+            pass
+
+        def _retire(self):
+            pass
+"""
+
+
+class TestPhasePass:
+    def test_good_fixture_clean(self, tmp_path):
+        root = make_tree(tmp_path, {"engine.py": ENGINE_GOOD})
+        assert run_pass(root, "phase") == []
+
+    def test_overlap_mutations_flagged(self, tmp_path):
+        root = make_tree(tmp_path, {"engine.py": ENGINE_BAD})
+        assert codes(run_pass(root, "phase")) == [
+            "overlap-pool-mutation", "overlap-slot-write"]
+
+    def test_collect_order(self, tmp_path):
+        root = make_tree(tmp_path, {"engine.py": """
+            class Engine:
+                def _step_async(self):
+                    self._dispatch()        # dispatch before collect
+                    self._collect()
+
+                def _dispatch(self):
+                    pass
+
+                def _collect(self):
+                    pass
+        """})
+        assert codes(run_pass(root, "phase")) == ["collect-order"]
+
+
+# ------------------------------------------------------------------ pallas
+PALLAS_GOOD = """
+    import functools
+    import jax.experimental.pallas as pl
+    from jax.experimental.pallas import tpu as pltpu
+
+    def _kernel(s_ref, a_ref, o_ref, acc_ref):
+        @pl.when(s_ref[0] == 0)
+        def _():
+            o_ref[...] = a_ref[...]
+
+    def call(x, s):
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            grid=(4, 4), num_scalar_prefetch=1,
+            in_specs=[pl.BlockSpec((8, 8), lambda i, j, s: (i, j))],
+            out_specs=pl.BlockSpec((8, 8), lambda i, j, s: (i, j)),
+            scratch_shapes=[pltpu.VMEM((8, 8), float)])
+        return pl.pallas_call(_kernel, grid_spec=grid_spec,
+                              out_shape=x)(s, x)
+"""
+
+
+class TestPallasPass:
+    def test_good_fixture_clean(self, tmp_path):
+        root = make_tree(tmp_path, {"k.py": PALLAS_GOOD})
+        assert run_pass(root, "pallas") == []
+
+    def test_index_map_arity(self, tmp_path):
+        bad = PALLAS_GOOD.replace("lambda i, j, s: (i, j))],",
+                                  "lambda i, j: (i, j))],")
+        root = make_tree(tmp_path, {"k.py": bad})
+        assert codes(run_pass(root, "pallas")) == ["index-map-arity"]
+
+    def test_kernel_arity(self, tmp_path):
+        bad = PALLAS_GOOD.replace("def _kernel(s_ref, a_ref, o_ref, acc_ref):",
+                                  "def _kernel(s_ref, a_ref, o_ref):")
+        root = make_tree(tmp_path, {"k.py": bad})
+        assert codes(run_pass(root, "pallas")) == ["kernel-arity"]
+
+    def test_operand_count(self, tmp_path):
+        bad = PALLAS_GOOD.replace("out_shape=x)(s, x)", "out_shape=x)(x)")
+        root = make_tree(tmp_path, {"k.py": bad})
+        assert codes(run_pass(root, "pallas")) == ["operand-count"]
+
+    def test_unguarded_output_write(self, tmp_path):
+        bad = PALLAS_GOOD.replace("""    def _kernel(s_ref, a_ref, o_ref, acc_ref):
+        @pl.when(s_ref[0] == 0)
+        def _():
+            o_ref[...] = a_ref[...]""",
+                                  """    def _kernel(s_ref, a_ref, o_ref, acc_ref):
+        o_ref[...] = a_ref[...]""")
+        root = make_tree(tmp_path, {"k.py": bad})
+        assert codes(run_pass(root, "pallas")) == ["unguarded-output-write"]
+
+    def test_scratch_shape(self, tmp_path):
+        bad = PALLAS_GOOD.replace("pltpu.VMEM((8, 8), float)",
+                                  "(8, 8)")
+        root = make_tree(tmp_path, {"k.py": bad})
+        assert "scratch-shape" in codes(run_pass(root, "pallas"))
+
+
+# --------------------------------------------------------------- jit-cache
+class TestJitCachePass:
+    def test_unbucketed_cache_key(self, tmp_path):
+        root = make_tree(tmp_path, {"m.py": """
+            import jax
+
+            def forward(self, ids):
+                s = len(ids)
+                key = (s, True)
+                if key not in self._prefill_cache:
+                    self._prefill_cache[key] = jax.jit(lambda x: x)
+                return self._prefill_cache[key]
+        """})
+        assert codes(run_pass(root, "jit-cache")) == [
+            "unbucketed-cache-key", "unbucketed-cache-key"]
+
+    def test_bucketed_key_clean(self, tmp_path):
+        root = make_tree(tmp_path, {"m.py": """
+            import jax
+
+            def prefill_bucket(s, cap):
+                b = 1
+                while b < s:
+                    b *= 2
+                return min(b, cap)
+
+            def forward(self, ids):
+                s = len(ids)
+                bucket = prefill_bucket(s, self.max_len)
+                key = (bucket, s == bucket)
+                if key not in self._prefill_cache:
+                    self._prefill_cache[key] = jax.jit(lambda x: x)
+                return self._prefill_cache[key]
+        """})
+        assert run_pass(root, "jit-cache") == []
+
+    def test_float_static_arg(self, tmp_path):
+        root = make_tree(tmp_path, {"m.py": """
+            import functools
+            import jax
+
+            @functools.partial(jax.jit, static_argnames=("softcap",))
+            def f(x, *, softcap: float = 0.0):
+                return x * softcap
+        """})
+        assert codes(run_pass(root, "jit-cache")) == ["float-static-arg"]
+
+    def test_unhashable_static_arg(self, tmp_path):
+        root = make_tree(tmp_path, {"m.py": """
+            import functools
+            import jax
+
+            @functools.partial(jax.jit, static_argnames=("layers",))
+            def f(x, layers=[1, 2]):
+                return x
+        """})
+        assert codes(run_pass(root, "jit-cache")) == ["unhashable-static-arg"]
+
+
+# ------------------------------------------------------------- live tree
+class TestLiveTree:
+    def test_matches_committed_baseline(self):
+        report = run_passes()
+        assert report.ok, "new findings vs baseline:\n" + "\n".join(
+            f.render() for f in report.new)
+        assert not report.stale, f"stale baseline entries: {report.stale}"
+
+    def test_all_passes_ran(self):
+        report = run_passes()
+        assert sorted(report.pass_seconds) == sorted(PASSES)
+
+    def test_all_suppressions_used(self):
+        # a suppression nothing fires against is dead weight (or a typo'd
+        # location) — keep the annotation set tight
+        tree = SourceTree(DEFAULT_ROOT)
+        rep = Reporter(tree)
+        for fn in PASSES.values():
+            fn(tree, rep)
+        unused = [s for m in tree.modules for s in m.suppressions
+                  if not s.used]
+        assert not unused, [(s.path, s.line, s.key) for s in unused]
+
+    def test_hot_path_roots_annotated(self):
+        tree = SourceTree(DEFAULT_ROOT)
+        roots = {f.qualname for f in tree.roots()}
+        assert {"ServeEngine.step", "ServeEngine._dispatch",
+                "ServeEngine._collect", "decode_step_paged",
+                "paged_attention_step"} <= roots
+
+
+# ------------------------------------------------------------- mutations
+@pytest.fixture()
+def live_copy(tmp_path):
+    dst = tmp_path / "repro"
+    shutil.copytree(DEFAULT_ROOT, dst,
+                    ignore=shutil.ignore_patterns("__pycache__"))
+    return dst
+
+
+def _edit(root: Path, rel: str, old: str, new: str) -> None:
+    p = root / rel
+    s = p.read_text()
+    assert old in s, f"mutation anchor not found in {rel}"
+    p.write_text(s.replace(old, new, 1))
+
+
+BASELINE = DEFAULT_ROOT / "analysis" / "baseline.json"
+
+
+class TestSeededViolations:
+    """Acceptance: each pass fails on a seeded violation in a copy of the
+    live tree, through the same entry point CI uses."""
+
+    def _assert_fails(self, root, pass_id, code):
+        report = run_passes(root, baseline=BASELINE)
+        got = [(f.pass_id, f.code) for f in report.new]
+        assert (pass_id, code) in got, got
+        assert not report.ok
+
+    def test_boundary_deleted_device_get_suppression(self, live_copy):
+        # deleting the device_get suppression on a hot-path file must
+        # fail the CI analysis step
+        _edit(live_copy, "models/model.py",
+              "    # apack: allow-transfer(sole accounted d2h funnel", "    #")
+        self._assert_fails(live_copy, "boundary", "device-get")
+
+    def test_lifecycle_illegal_destination(self, live_copy):
+        # seal now claims the 'pack' edge, whose only declared destination
+        # is PACKED — writing COLD under it is an undeclared transition
+        _edit(live_copy, "models/modules.py",
+              "        self._require_transition(pid, \"seal\", PAGE_COLD,",
+              "        self._require_transition(pid, \"pack\", PAGE_COLD,")
+        self._assert_fails(live_copy, "lifecycle", "undeclared-transition")
+
+    def test_lifecycle_guard_dst_mismatch(self, live_copy):
+        # seal's guard still validates ->COLD but the site writes PACKED
+        _edit(live_copy, "models/modules.py",
+              "        self.state[pid] = PAGE_COLD\n\n    def pack(",
+              "        self.state[pid] = PAGE_PACKED\n\n    def pack(")
+        self._assert_fails(live_copy, "lifecycle", "guard-dst-mismatch")
+
+    def test_phase_mutation_in_overlap_window(self, live_copy):
+        _edit(live_copy, "serve/engine.py",
+              "    def _overlap_host_work(self) -> None:",
+              "    def _overlap_host_work(self) -> None:\n"
+              "        self.kv.release(0)\n")
+        self._assert_fails(live_copy, "phase", "overlap-pool-mutation")
+
+    def test_pallas_index_map_arity(self, live_copy):
+        _edit(live_copy, "kernels/fused_page_attention.py",
+              "lambda i, p, idx, tid:", "lambda i, p, idx:")
+        self._assert_fails(live_copy, "pallas", "index-map-arity")
+
+    def test_jit_cache_unbucketed_key(self, live_copy):
+        _edit(live_copy, "serve/engine.py",
+              "        key = (bucket, exact)", "        key = (s, exact)")
+        self._assert_fails(live_copy, "jit-cache", "unbucketed-cache-key")
+
+    def test_cli_exits_nonzero_on_mutated_tree(self, live_copy):
+        _edit(live_copy, "models/model.py",
+              "    # apack: allow-transfer(sole accounted d2h funnel", "    #")
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.analysis", "--root",
+             str(live_copy), "--baseline", str(BASELINE)],
+            capture_output=True, text=True, timeout=300,
+            env={"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin"})
+        assert out.returncode == 1, out.stdout + out.stderr
+        assert "device-get" in out.stdout
+
+
+# ------------------------------------------------------ runtime guard dedup
+class TestRuntimeTransitionGuards:
+    """The pool guards now validate against PAGE_TRANSITIONS itself —
+    the same table the lifecycle pass consumes."""
+
+    def _pool(self):
+        from repro.models import modules as m
+        return m, m.KVPagePool(num_pages=4, page_size=2, kv_heads=2,
+                               head_dim=8)
+
+    def test_repack_requires_packed(self):
+        import numpy as np
+        m, pool = self._pool()
+        pid = pool.alloc()
+        planes = (np.zeros((2, pool.sym_words, pool.n_streams), np.uint32),
+                  np.zeros((2, pool.ofs_words, pool.n_streams), np.uint32),
+                  np.zeros((2, pool.n_streams), np.int32),
+                  np.zeros((2, pool.n_streams), np.int32),
+                  np.zeros((2, pool.n_streams), bool))
+        with pytest.raises(ValueError, match="repack of non-PACKED"):
+            pool.repack(pid, planes)
+
+    def test_illegal_edge_message_names_transition(self):
+        m, pool = self._pool()
+        pid = pool.alloc()
+        pool.free(pid)
+        with pytest.raises(ValueError, match="FREE->FREE"):
+            pool.free(pid)
+
+    def test_table_covers_every_guarded_method(self):
+        from repro.models import modules as m
+        for edge in ("alloc", "free", "evict", "spill", "adopt", "seal",
+                     "pack", "repack"):
+            assert edge in m.PAGE_TRANSITIONS
+            assert hasattr(m.KVPagePool, edge)
