@@ -48,6 +48,14 @@ def run(tree: SourceTree, reporter: Reporter) -> None:
     graph = CallGraph(tree)
     host_roots = tree.roots("host")
     traced_roots = tree.roots("traced")
+    # shard_map bodies are traced per shard even when no annotation marks
+    # them: seed them from the call sites so reachability (and per-param
+    # taint) crosses the shard_map boundary like any jit trace
+    seen = {id(f) for f in traced_roots}
+    for f in _shard_map_bodies(tree):
+        if id(f) not in seen:
+            seen.add(id(f))
+            traced_roots.append(f)
     jit_attrs = _collect_jit_attrs(tree)
     jit_defs = _collect_jit_defs(tree)
 
@@ -55,6 +63,26 @@ def run(tree: SourceTree, reporter: Reporter) -> None:
     for fi in graph.reachable(host_roots + traced_roots):
         _check_function(fi, reporter, jit_attrs, jit_defs,
                         traced=CallGraph.key(fi) in traced)
+
+
+def _shard_map_bodies(tree: SourceTree) -> list[FunctionInfo]:
+    """Functions passed by name as a ``shard_map(fn, ...)`` body.  Their
+    parameters are per-shard device operands — exactly the traced-root
+    contract — so the boundary walk must treat them as roots even though
+    nothing annotates the (library-supplied) tracing entry point."""
+    out: list[FunctionInfo] = []
+    for mod in tree.modules:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call) \
+                    or call_name(node) != "shard_map" or not node.args:
+                continue
+            fn = node.args[0]
+            if not isinstance(fn, ast.Name):
+                continue
+            for cand in tree.by_def_name.get(fn.id, []):
+                if cand.module is mod:
+                    out.append(cand)
+    return out
 
 
 def _collect_jit_attrs(tree: SourceTree) -> set[str]:

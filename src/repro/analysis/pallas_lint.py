@@ -20,11 +20,21 @@ lint statically:
 * ``scratch-shape``       — a ``scratch_shapes`` entry that is not a
   ``pltpu.VMEM(...)`` / ``pltpu.SMEM(...)`` constructor;
 * ``unguarded-output-write`` — a store to an output ref in a kernel
-  whose grid has rank >= 2, not nested under a ``pl.when`` block.
+  whose grid has rank >= 2, not nested under a ``pl.when`` block;
+* ``mesh-op-in-kernel``   — a ``jax.lax`` mesh collective
+  (``axis_index``/``psum``/``all_gather``/...) inside a kernel body:
+  under the mesh-sharded serving step the kernels launch inside a
+  ``shard_map`` body with *per-shard* grids and block shapes, and mesh
+  collectives belong in that body around the ``pallas_call`` — Mosaic
+  has no lowering for them inside kernel code.
 
-Anything the linter cannot resolve statically (non-literal grids, specs
-built in loops) is skipped silently — this pass is a tripwire for the
-three real kernels, not a Mosaic reimplementation."""
+Mesh-partitioned grids need no special casing beyond that: every count
+this pass checks (spec list lengths, index_map arity, kernel signature,
+operand order) is shard-invariant — only the grid *sizes* shrink per
+shard, and those are skipped when non-literal anyway.  Anything else the
+linter cannot resolve statically (non-literal grids, specs built in
+loops) is skipped silently — this pass is a tripwire for the real
+kernels, not a Mosaic reimplementation."""
 
 from __future__ import annotations
 
@@ -41,13 +51,49 @@ def _is_pallas_module(mod: ModuleInfo) -> bool:
         "pl.pallas_call" in mod.source or "pallas_call" in mod.source)
 
 
+# jax.lax mesh collectives that must not appear inside kernel bodies
+_MESH_OPS = {"axis_index", "axis_size", "psum", "pmean", "pmax", "pmin",
+             "all_gather", "all_to_all", "ppermute", "pshuffle"}
+
+
 def run(tree: SourceTree, reporter: Reporter) -> None:
     for mod in tree.modules:
         if not _is_pallas_module(mod):
             continue
+        kernels: dict[int, FunctionInfo] = {}
         for fi in tree.functions:
-            if fi.module is mod:
-                _check_host_fn(fi, tree, reporter)
+            if fi.module is not mod:
+                continue
+            _check_host_fn(fi, tree, reporter)
+            env = _local_assignments(fi.node)
+            for node in ast.walk(fi.node):
+                if isinstance(node, ast.Call) \
+                        and call_name(node) == "pallas_call":
+                    k = _kernel_def(node, env, tree, fi)
+                    if k is not None:
+                        kernels[id(k)] = k
+        for k in kernels.values():
+            _check_mesh_ops(k, reporter)
+
+
+def _check_mesh_ops(kernel: FunctionInfo, reporter: Reporter) -> None:
+    """Mesh collectives inside a kernel body: Mosaic has no lowering for
+    ``jax.lax`` collectives, and under the mesh-sharded serving step the
+    kernel's grid/blocks are already shard-local — the collective belongs
+    in the surrounding ``shard_map`` body."""
+    for node in ast.walk(kernel.node):
+        if not isinstance(node, ast.Call):
+            continue
+        name = call_name(node)
+        chain = attr_chain(node.func)
+        if name in _MESH_OPS and chain and chain[0] in ("lax", "jax"):
+            reporter.emit(
+                PASS_ID, "mesh-op-in-kernel", kernel.module, node.lineno,
+                f"mesh collective {name} inside Pallas kernel "
+                f"{kernel.qualname}: collectives belong in the shard_map "
+                "body around the pallas_call (the kernel's grid and blocks "
+                "are shard-local; Mosaic cannot lower jax.lax collectives)",
+                fn=kernel)
 
 
 def _local_assignments(fn: ast.AST) -> dict[str, ast.AST]:

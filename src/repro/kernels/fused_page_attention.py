@@ -64,11 +64,18 @@ PAGE_FREE, PAGE_HOT, PAGE_COLD, PAGE_PACKED = 0, 1, 2, 3
 NEG_INF = -1e30          # same mask value as the dense attention paths
 
 
-def _page_tile(state, tok_ref, tok_s_ref, cold_ref, pscale_ref, sym_ref,
+def _page_tile(state, h0, tok_ref, tok_s_ref, cold_ref, pscale_ref, sym_ref,
                ofs_ref, stored_ref, vm_ref, ol_ref, cum_ref, tile_ref, *,
-               ps, h, dh, n_steps, bits):
+               ps, h, dh, h_full, n_steps, bits):
     """Fill ``tile_ref`` ([ps, H, dh] f32 VMEM scratch) with the
-    dequantized K or V payload of the current page, by lifecycle state."""
+    dequantized K or V payload of the current page, by lifecycle state.
+
+    Under head tensor-parallelism the dense planes hold only this shard's
+    ``h`` heads but a PACKED page always decodes all ``h_full`` heads —
+    the APack streams interleave heads, so the compressed payload cannot
+    be split — and the shard's block is sliced out at the traced ``h0``
+    offset (0 and ``h == h_full`` on a single device: the slice is the
+    identity)."""
 
     @pl.when(state == PAGE_HOT)
     def _hot():
@@ -86,8 +93,9 @@ def _page_tile(state, tok_ref, tok_s_ref, cold_ref, pscale_ref, sym_ref,
                          stored_ref[0] != 0, vm_ref[0], ol_ref[0],
                          cum_ref[0], n_steps=n_steps, bits=bits)
         signed = jnp.where(u >= 128, u - 256, u).astype(F32)
-        tile_ref[...] = (signed.reshape(ps, h, dh)
-                         * pscale_ref[0].astype(F32)[None, :, None])
+        local = jax.lax.dynamic_slice_in_dim(
+            signed.reshape(ps, h_full, dh), h0, h, axis=1)
+        tile_ref[...] = local * pscale_ref[0].astype(F32)[None, :, None]
 
 
 def _fused_kernel(idx_ref, tid_ref, q_ref, jm_ref, meta_ref,
@@ -99,8 +107,8 @@ def _fused_kernel(idx_ref, tid_ref, q_ref, jm_ref, meta_ref,
                   vm_v_ref, ol_v_ref, cum_v_ref,
                   acc_ref, m_ref, l_ref,
                   kt_ref, vt_ref, acc_s, m_s, l_s, *,
-                  ps: int, hkv: int, g: int, dh: int, n_steps: int,
-                  bits: int, softcap: float):
+                  ps: int, hkv: int, g: int, dh: int, h_full: int,
+                  n_steps: int, bits: int, softcap: float):
     del idx_ref, tid_ref                 # consumed by BlockSpec index_maps
     p = pl.program_id(1)
     n_pages = pl.num_programs(1)
@@ -115,15 +123,16 @@ def _fused_kernel(idx_ref, tid_ref, q_ref, jm_ref, meta_ref,
     t0 = meta_ref[0, 0, 1]
     qpos = jm_ref[0, 0]
     window = jm_ref[0, 1]
+    h0 = jm_ref[0, 2]
 
-    _page_tile(state, tok_k_ref, tok_sk_ref, cold_k_ref, pscale_k_ref,
+    _page_tile(state, h0, tok_k_ref, tok_sk_ref, cold_k_ref, pscale_k_ref,
                sym_k_ref, ofs_k_ref, st_k_ref, vm_k_ref, ol_k_ref,
-               cum_k_ref, kt_ref, ps=ps, h=hkv, dh=dh, n_steps=n_steps,
-               bits=bits)
-    _page_tile(state, tok_v_ref, tok_sv_ref, cold_v_ref, pscale_v_ref,
+               cum_k_ref, kt_ref, ps=ps, h=hkv, dh=dh, h_full=h_full,
+               n_steps=n_steps, bits=bits)
+    _page_tile(state, h0, tok_v_ref, tok_sv_ref, cold_v_ref, pscale_v_ref,
                sym_v_ref, ofs_v_ref, st_v_ref, vm_v_ref, ol_v_ref,
-               cum_v_ref, vt_ref, ps=ps, h=hkv, dh=dh, n_steps=n_steps,
-               bits=bits)
+               cum_v_ref, vt_ref, ps=ps, h=hkv, dh=dh, h_full=h_full,
+               n_steps=n_steps, bits=bits)
 
     q = q_ref[0].reshape(hkv, g, dh).astype(F32)
     k_tile = kt_ref[...]                                     # [ps, H, dh]
@@ -155,15 +164,15 @@ def _fused_kernel(idx_ref, tid_ref, q_ref, jm_ref, meta_ref,
 # apack: allow-jit-cache(softcap is one value per served model config --
 # bounded by the config set, unlike per-request shapes)
 @functools.partial(
-    jax.jit, static_argnames=("n_steps", "num_heads", "bits", "softcap",
-                              "interpret"))
+    jax.jit, static_argnames=("n_steps", "num_heads", "h_full", "bits",
+                              "softcap", "interpret"))
 def fused_page_attention_pallas(
         q: jax.Array, page_idx: jax.Array, table_idx: jax.Array,
         meta: jax.Array, jobmeta: jax.Array,
         tok_k, tok_sk, tok_v, tok_sv, cold_k, cold_v, pscale_k, pscale_v,
         sym_k, ofs_k, stored_k, sym_v, ofs_v, stored_v, vm, ol, cum, *,
-        n_steps: int, num_heads: int, bits: int = 8, softcap: float = 0.0,
-        interpret: bool = True):
+        n_steps: int, num_heads: int, h_full: int | None = None,
+        bits: int = 8, softcap: float = 0.0, interpret: bool = True):
     """Fused paged attention over a job batch.
 
     Args:
@@ -174,11 +183,17 @@ def fused_page_attention_pallas(
                  (``2 * layer``); the V row is ``table_idx + 1``.
       meta:      i32[J, P, 2] per-(job, page): (lifecycle state, absolute
                  position of the page's first token).
-      jobmeta:   i32[J, 2] per job: (qpos, window) — ``window == 0`` means
-                 global (no lower bound).
+      jobmeta:   i32[J, 3] per job: (qpos, window, h0) — ``window == 0``
+                 means global (no lower bound); ``h0`` is the first kv
+                 head of this shard's dense-plane block (0 off-mesh).  A
+                 legacy [J, 2] jobmeta is padded with h0 = 0.
       tok_* / cold_* / pscale_* / sym_* / ofs_* / stored_*: per-kind pool
-                 planes ([P_pool, ...], kind split by the caller).
+                 planes ([P_pool, ...], kind split by the caller; under
+                 head-TP the dense planes carry only the shard's heads
+                 while sym/ofs/stored stay full — see ``h_full``).
       vm/ol/cum: stacked table arrays [T, 17] / [T, 16] / [T, 17].
+      h_full:    total kv heads a PACKED page decodes to (defaults to the
+                 dense planes' head count; differs only under head-TP).
 
     Returns (acc f32[J, Hq, dh], m f32[J, Hq], l f32[J, Hq]) — the
     *unnormalized* online-softmax state; callers merge the current token
@@ -189,13 +204,18 @@ def fused_page_attention_pallas(
     ps = tok_k.shape[1]
     hkv = tok_k.shape[2]
     g = hq // hkv
+    if h_full is None:
+        h_full = hkv
+    if jobmeta.shape[1] == 2:
+        jobmeta = jnp.concatenate(
+            [jobmeta, jnp.zeros((j, 1), jobmeta.dtype)], axis=1)
     ws, s = sym_k.shape[1], sym_k.shape[2]
     wo = ofs_k.shape[1]
     idx_flat = page_idx.reshape(-1).astype(I32)
     tid_flat = table_idx.reshape(-1).astype(I32)
     kernel = functools.partial(
-        _fused_kernel, ps=ps, hkv=hkv, g=g, dh=dh, n_steps=n_steps,
-        bits=bits, softcap=float(softcap))
+        _fused_kernel, ps=ps, hkv=hkv, g=g, dh=dh, h_full=h_full,
+        n_steps=n_steps, bits=bits, softcap=float(softcap))
 
     def page_spec(shape):
         return pl.BlockSpec((1, *shape),
@@ -215,7 +235,7 @@ def fused_page_attention_pallas(
         grid=(j, p_slots),
         in_specs=[
             pl.BlockSpec((1, hq, dh), lambda i, p, idx, tid: (i, 0, 0)),
-            pl.BlockSpec((1, 2), lambda i, p, idx, tid: (i, 0)),
+            pl.BlockSpec((1, 3), lambda i, p, idx, tid: (i, 0)),
             pl.BlockSpec((1, 1, 2), lambda i, p, idx, tid: (i, p, 0)),
             page_spec((ps, hkv, dh)),          # tok_k
             page_spec((ps, hkv)),              # tok_sk
@@ -268,20 +288,27 @@ def fused_page_attention_pallas(
 # apack: allow-jit-cache(softcap is one value per served model config --
 # bounded by the config set, unlike per-request shapes)
 @functools.partial(
-    jax.jit, static_argnames=("n_steps", "num_heads", "bits", "softcap"))
+    jax.jit, static_argnames=("n_steps", "num_heads", "h_full", "bits",
+                              "softcap"))
 def fused_page_attention_ref(
         q, page_idx, table_idx, meta, jobmeta,
         tok_k, tok_sk, tok_v, tok_sv, cold_k, cold_v, pscale_k, pscale_v,
         sym_k, ofs_k, stored_k, sym_v, ofs_v, stored_v, vm, ol, cum, *,
-        n_steps: int, num_heads: int, bits: int = 8, softcap: float = 0.0):
+        n_steps: int, num_heads: int, h_full: int | None = None,
+        bits: int = 8, softcap: float = 0.0):
     """jnp reference for the fused kernel: identical page-by-page
     online-softmax update order (bit-comparable in interpret mode)."""
     j, hq, dh = q.shape
     p_slots = page_idx.shape[1]
     ps, hkv = tok_k.shape[1], tok_k.shape[2]
     g = hq // hkv
+    if h_full is None:
+        h_full = hkv
+    if jobmeta.shape[1] == 2:
+        jobmeta = jnp.concatenate(
+            [jobmeta, jnp.zeros((j, 1), jobmeta.dtype)], axis=1)
 
-    def dequant_page(pid, tid, state):
+    def dequant_page(pid, tid, state, h0):
         hot = tok_k[pid].astype(F32), tok_v[pid].astype(F32)
         hot = (hot[0] * tok_sk[pid].astype(F32)[..., None],
                hot[1] * tok_sv[pid].astype(F32)[..., None])
@@ -296,7 +323,9 @@ def fused_page_attention_ref(
                             _ref.TableArrays(vm[t], ol[t], cum[t]),
                             n_steps, bits)
             sgn = jnp.where(u >= 128, u - 256, u).astype(F32)
-            return sgn.reshape(ps, hkv, dh)
+            # full-head decode, local-head slice — see _page_tile
+            return jax.lax.dynamic_slice_in_dim(
+                sgn.reshape(ps, h_full, dh), h0, hkv, axis=1)
 
         packed = (dec(sym_k, ofs_k, stored_k, tid)
                   * pscale_k[pid].astype(F32)[None, :, None],
@@ -315,7 +344,7 @@ def fused_page_attention_ref(
         l_run = jnp.zeros((hkv, g), F32)
         for p in range(p_slots):
             state, t0 = mj[p, 0], mj[p, 1]
-            kt, vt = dequant_page(pids[p], tids[p], state)
+            kt, vt = dequant_page(pids[p], tids[p], state, jm[2])
             scores = jnp.einsum("kgd,skd->kgs", q3, kt) * (dh ** -0.5)
             pos = t0 + jnp.arange(ps, dtype=I32)
             valid = (pos < jm[0]) & (state != PAGE_FREE)
@@ -337,7 +366,8 @@ def fused_page_attention_ref(
 
 
 def fused_page_attention(q, page_idx, table_idx, meta, jobmeta, planes, *,
-                         n_steps: int, num_heads: int, bits: int = 8,
+                         n_steps: int, num_heads: int,
+                         h_full: int | None = None, bits: int = 8,
                          softcap: float = 0.0, backend: str | None = None):
     """Backend dispatch (mirrors ``paged_decode.gather_decode``): pallas on
     TPU, pallas-interpret on CPU, ``backend="ref"`` for the pure-jnp path.
@@ -355,8 +385,9 @@ def fused_page_attention(q, page_idx, table_idx, meta, jobmeta, planes, *,
             planes["vm"], planes["ol"], planes["cum"])
     if backend == "ref":
         return fused_page_attention_ref(
-            *args, n_steps=n_steps, num_heads=num_heads, bits=bits,
-            softcap=softcap)
+            *args, n_steps=n_steps, num_heads=num_heads, h_full=h_full,
+            bits=bits, softcap=softcap)
     return fused_page_attention_pallas(
-        *args, n_steps=n_steps, num_heads=num_heads, bits=bits,
-        softcap=softcap, interpret=(backend == "pallas_interpret"))
+        *args, n_steps=n_steps, num_heads=num_heads, h_full=h_full,
+        bits=bits, softcap=softcap,
+        interpret=(backend == "pallas_interpret"))

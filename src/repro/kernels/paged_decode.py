@@ -98,6 +98,41 @@ def gather_bucket(n: int) -> int:
     return bucket
 
 
+# Per-job page-count buckets for the fused attention grid: the engine sizes
+# the kernel's pages axis to the next bucket above the *occupied* page count
+# of the busiest active slot instead of the static per-slot maximum, so a
+# batch of mostly-short requests stops paying for the max-pages grid.
+# Powers of two keep the distinct compiled grid set O(log pages); masked
+# (FREE/out-of-range) pages leave the online-softmax accumulator bit-exactly
+# unchanged, so any bucket >= the true count decodes identically.
+PAGE_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024)
+PAGE_BUCKET_WARN_THRESHOLD = 12
+_seen_page_buckets: set[int] = set()
+
+
+def page_bucket(n: int) -> int:
+    n = max(int(n), 1)
+    for b in PAGE_BUCKETS:
+        if n <= b:
+            bucket = b
+            break
+    else:
+        bucket = PAGE_BUCKETS[-1]
+        while bucket < n:
+            bucket *= 2
+    if bucket not in _seen_page_buckets:
+        _seen_page_buckets.add(bucket)
+        if len(_seen_page_buckets) > PAGE_BUCKET_WARN_THRESHOLD:
+            _log.warning(
+                "fused_page_attention has now been asked for %d distinct "
+                "page-grid bucket sizes (latest: %d) — each is a fresh "
+                "kernel compile; a long-running serve hitting this "
+                "repeatedly indicates a recompile storm (consider a larger "
+                "fixed bucket or pre-warming)",
+                len(_seen_page_buckets), bucket)
+    return bucket
+
+
 def _as_table_stack(v_min, ol, cum, page_idx, table_idx):
     """Canonicalize table arrays to stacked [T, ...] form + per-page ids.
 

@@ -133,7 +133,14 @@ def main() -> int:
     ap.add_argument("--arch")
     ap.add_argument("--shape")
     ap.add_argument("--mesh", choices=["single", "pod", "both"],
-                    default="single")
+                    default="single",
+                    help="production mesh topology to compile against: "
+                         "single (16x16, one pod), pod (2x16x16, two "
+                         "pods), or both.  Training/compile-cell meshes "
+                         "only — the *serving* mesh is chosen at engine "
+                         "construction (ServeEngine(mesh=...), DESIGN.md "
+                         "§11) and benchmarked via bench_decode "
+                         "--sharded --mesh DATAxMODEL")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="runs/dryrun")
     ap.add_argument("--no-hlo", action="store_true")

@@ -79,6 +79,13 @@ def main() -> None:
     ap.add_argument("--slo-ms", type=float, default=None,
                     help="per-request end-to-end latency SLO; admission "
                          "orders by earliest deadline instead of FIFO")
+    ap.add_argument("--mesh", default=None, metavar="DATAxMODEL",
+                    help="mesh-sharded serving, e.g. '8x1' (decode jobs "
+                         "data-parallel, kv-heads tensor-parallel): shards "
+                         "the page pool, free lists and fused gather-decode "
+                         "across devices; requires the fused apack-int8 KV "
+                         "and DATA*MODEL visible devices (debug: "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count)")
     args = ap.parse_args()
 
     cfg = (configs.get_smoke_config(args.arch) if args.smoke
@@ -96,8 +103,17 @@ def main() -> None:
               f"({cp.ratio:.2f}x, {time.time()-t0:.1f}s)")
         params = decompress_params(cp)
 
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_debug_mesh
+        n_data, _, n_model = args.mesh.partition("x")
+        mesh = make_debug_mesh(int(n_data), int(n_model or 1))
+        print(f"serving mesh: {dict(mesh.shape)} over "
+              f"{len(mesh.devices.flat)} devices")
+
     engine = ServeEngine(cfg, params, max_batch=args.max_batch,
                          max_len=args.prompt_len + args.max_new + 8,
+                         mesh=mesh,
                          kv_page_size=args.kv_page_size,
                          kv_fused=not args.kv_materialize,
                          kv_refresh=args.kv_refresh,

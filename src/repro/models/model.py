@@ -199,18 +199,22 @@ def block_step(cfg: ModelConfig, kind: str, p: dict, h: jax.Array,
 
 def block_step_paged(cfg: ModelConfig, kind: str, p: dict, h: jax.Array,
                      planes: dict, meta, cache, pos,
-                     backend: str | None = None):
+                     backend: str | None = None,
+                     tp: tuple[str, int] | None = None):
     """Decode block against the device-resident paged KV store.
 
     Attention kinds read pages through the fused gather-decode kernel and
     return the new token's quantized K/V (for the on-device append);
     recurrent-kind blocks are unchanged — their fixed-size state rides in
-    ``cache`` (the device state store) exactly like the dense path."""
+    ``cache`` (the device state store) exactly like the dense path.
+    ``tp=(axis_name, size)`` runs the fused kernel tensor-parallel over
+    kv-head blocks inside a ``shard_map`` body (see
+    ``modules.paged_attention_step``)."""
     if kind not in ATTN_KINDS:
         return block_step(cfg, kind, p, h, cache, pos)
     hn = m.rms_norm(h, p["norm1"], cfg.norm_eps)
     inner, new_kv = m.paged_attention_step(p["inner"], hn, planes, meta,
-                                           pos, cfg, backend=backend)
+                                           pos, cfg, backend=backend, tp=tp)
     return _join_block(cfg, p, h, hn, inner), new_kv
 
 
@@ -398,7 +402,8 @@ def decode_step(cfg: ModelConfig, params: dict, caches: dict,
 # apack: hot-path-root(traced)
 def decode_step_paged(cfg: ModelConfig, params: dict, planes: dict,
                       states: dict, meta: dict, tokens: jax.Array,
-                      pos: jax.Array, backend: str | None = None):
+                      pos: jax.Array, backend: str | None = None,
+                      tp: tuple[str, int] | None = None):
     """One decode step with the KV cache *device-resident in page form*.
 
     The dense-cache pytree of ``decode_step`` is replaced by:
@@ -424,7 +429,7 @@ def decode_step_paged(cfg: ModelConfig, params: dict, planes: dict,
     for kind, p, mt, st in zip(cfg.prefix_pattern, params.get("prefix", []),
                                meta["prefix"], states["prefix"]):
         h, new = block_step_paged(cfg, kind, p, h, planes, mt, st, pos,
-                                  backend)
+                                  backend, tp)
         new_prefix.append(new)
 
     def cycle_fn(h, xs):
@@ -432,7 +437,8 @@ def decode_step_paged(cfg: ModelConfig, params: dict, planes: dict,
         news = []
         for i, kind in enumerate(cfg.cycle):
             h, new = block_step_paged(cfg, kind, p_cycle[i], h, planes,
-                                      m_cycle[i], s_cycle[i], pos, backend)
+                                      m_cycle[i], s_cycle[i], pos, backend,
+                                      tp)
             news.append(new)
         return h, tuple(news)
 
@@ -475,14 +481,20 @@ def states_from_step(cfg: ModelConfig, new_cache: dict) -> dict:
 
 
 def device_append(cfg: ModelConfig, planes: dict, new_cache: dict,
-                  targets: dict) -> dict:
+                  targets: dict,
+                  tp: tuple[str, int] | None = None) -> dict:
     """On-device page append: scatter every attention layer's new-token
     K/V (from ``decode_step_paged``) into the HOT token planes at the
     (page, offset) slots claimed by ``PagedKVCache.claim_append_targets``.
 
     Pure jnp under jit — one dynamic-slice scatter per plane per step, no
     host round-trip.  Inactive slots carry the out-of-range page sentinel
-    and are dropped by ``mode="drop"``."""
+    and are dropped by ``mode="drop"``.
+
+    ``tp=(axis_name, size)`` (inside a ``shard_map`` body): the token
+    planes hold only this model shard's kv-head block, while the model
+    computed the full-head K/V on every model shard — slice the local
+    block at ``axis_index * h_local`` before scattering."""
     rows = {"k": [], "v": [], "k_scale": [], "v_scale": []}
     pids, offs = [], []
 
@@ -506,16 +518,152 @@ def device_append(cfg: ModelConfig, planes: dict, new_cache: dict,
         return planes
     pid = jnp.concatenate(pids).astype(jnp.int32)
     off = jnp.concatenate(offs).astype(jnp.int32)
+    vals = {f: jnp.concatenate(rows[f]) for f in rows}
+    if tp is not None and tp[1] > 1:
+        h_loc = planes["tok_k"].shape[2]
+        h0 = (jax.lax.axis_index(tp[0]) * h_loc).astype(jnp.int32)
+        for f in vals:
+            vals[f] = jax.lax.dynamic_slice_in_dim(vals[f], h0, h_loc,
+                                                   axis=1)
     out = dict(planes)
-    out["tok_k"] = planes["tok_k"].at[pid, off].set(
-        jnp.concatenate(rows["k"]), mode="drop")
-    out["tok_v"] = planes["tok_v"].at[pid, off].set(
-        jnp.concatenate(rows["v"]), mode="drop")
-    out["tok_sk"] = planes["tok_sk"].at[pid, off].set(
-        jnp.concatenate(rows["k_scale"]), mode="drop")
-    out["tok_sv"] = planes["tok_sv"].at[pid, off].set(
-        jnp.concatenate(rows["v_scale"]), mode="drop")
+    out["tok_k"] = planes["tok_k"].at[pid, off].set(vals["k"], mode="drop")
+    out["tok_v"] = planes["tok_v"].at[pid, off].set(vals["v"], mode="drop")
+    out["tok_sk"] = planes["tok_sk"].at[pid, off].set(vals["k_scale"],
+                                                      mode="drop")
+    out["tok_sv"] = planes["tok_sv"].at[pid, off].set(vals["v_scale"],
+                                                      mode="drop")
     return out
+
+
+# ------------------------------------------------ mesh-sharded decode step
+def mesh_axis_sizes(mesh) -> tuple[int, int]:
+    """(n_data, n_model) of a serving mesh; absent axes count as 1."""
+    shape = dict(mesh.shape)
+    return int(shape.get("data", 1)), int(shape.get("model", 1))
+
+
+def _localize_meta(cfg: ModelConfig, meta: dict, p_loc, d0):
+    """Global page ids -> this data shard's local plane indices.
+
+    Shard ``s`` owns the contiguous page range ``[s*p_loc, (s+1)*p_loc)``
+    (matching the pool's per-shard free lists), and the engine binds every
+    request to exactly one shard — so an *active* slot of this shard only
+    references owned pages.  Masked entries (state == FREE, or rows of
+    slots bound to other shards) may carry any global id; ``clip`` keeps
+    them in-range and the state mask makes their value irrelevant."""
+    def one(md):
+        if not md:
+            return md
+        out = dict(md)
+        out["pid"] = jnp.clip(md["pid"] - d0, 0, p_loc - 1)
+        return out
+
+    return {"prefix": [one(md) for md in meta["prefix"]],
+            "blocks": tuple(one(md) for md in meta["blocks"])}
+
+
+def _localize_targets(cfg: ModelConfig, targets: dict, p_loc, d0):
+    """Append targets -> local plane indices; anything this shard does not
+    own (idle-slot sentinels, other shards' pages) maps to the local
+    out-of-range sentinel ``p_loc`` and is dropped by the scatter's
+    ``mode="drop"`` — each shard appends only into its own page range."""
+    def one(tg):
+        if tg is None:
+            return None
+        pid, off = tg
+        lp = pid - d0
+        lp = jnp.where((lp >= 0) & (lp < p_loc), lp, p_loc)
+        return (lp.astype(jnp.int32), off)
+
+    return {"prefix": [one(tg) for tg in targets["prefix"]],
+            "blocks": tuple(one(tg) for tg in targets["blocks"])}
+
+
+def _paged_tree_specs(cfg: ModelConfig, prefix_spec, block_spec,
+                      empty):
+    """Spec pytree matching the state/meta/target tree shapes: attention
+    positions get the batch-sharded spec, recurrent-kind positions the
+    empty node their argument carries (``{}`` for states/meta, ``None``
+    for targets).  Prefix leaves are [B, ...], scanned block leaves
+    [n_stack, B, ...] — hence the two specs."""
+    prefix = [(prefix_spec if kind in ATTN_KINDS else empty)
+              for kind in cfg.prefix_pattern]
+    blocks = tuple((block_spec if kind in ATTN_KINDS else empty)
+                   for kind in cfg.cycle)
+    return {"prefix": prefix, "blocks": blocks}
+
+
+def _state_specs(cfg: ModelConfig, P):
+    """State-store specs: batch-sharded over "data" at every
+    recurrent-kind position, ``{}`` at attention positions (their state
+    lives in the page pool)."""
+    prefix = [({} if kind in ATTN_KINDS else P("data"))
+              for kind in cfg.prefix_pattern]
+    blocks = tuple(({} if kind in ATTN_KINDS else P(None, "data"))
+                   for kind in cfg.cycle)
+    return {"prefix": prefix, "blocks": blocks}
+
+
+def build_sharded_step(cfg: ModelConfig, mesh, *, backend: str | None = None):
+    """The mesh-sharded fused decode step: ONE ``jit(shard_map(...))``
+    combining ``decode_step_paged`` + ``device_append`` +
+    ``states_from_step`` per step.
+
+    Partitioning (DESIGN.md §11): decode jobs data-parallel over "data"
+    (batch rows, state store, step meta, append targets and the page
+    planes all shard with their jobs — each data shard owns a contiguous
+    page range matching its free list), kv-heads tensor-parallel over
+    "model" for the fused gather-decode-attention kernel.  PACKED planes
+    replicate over "model" (the APack stream layout interleaves heads);
+    each model shard decodes the full page and slices its local head
+    block, then an ``all_gather`` over "model" reassembles head-major
+    accumulators before the output projection — greedy tokens stay
+    bit-identical to the single-device engine because per-kv-head
+    attention has no cross-head reduction and the gather restores exact
+    head order.
+
+    Returns ``step(params, planes, states, meta, tokens, pos, targets)
+    -> (logits, toks, planes', states')`` where ``toks`` is the greedy
+    argmax over the final-position logits, computed *inside* the device
+    program: the engine's per-step host pull shrinks from a
+    ``[batch, vocab]`` logits gather (plus an eager cross-shard argmax
+    dispatch) to ``batch`` int32s.  Targets must be claimed *before*
+    the call (host metadata is independent of the decode output), which
+    is what lets the whole step stay a single device program with zero
+    ``device_get`` per shard."""
+    from jax.sharding import PartitionSpec as P
+    n_data, n_model = mesh_axis_sizes(mesh)
+    if n_model > 1 and cfg.num_kv_heads % n_model:
+        raise ValueError(
+            f"num_kv_heads={cfg.num_kv_heads} must divide over the "
+            f"{n_model}-way model axis for tensor-parallel paged decode")
+    tp = ("model", n_model) if n_model > 1 else None
+
+    def _body(params, planes, states, meta, tokens, pos, targets):
+        p_loc = planes["tok_k"].shape[0]
+        d0 = (jax.lax.axis_index("data") * p_loc).astype(jnp.int32)
+        logits, new_cache = decode_step_paged(
+            cfg, params, planes, states,
+            _localize_meta(cfg, meta, p_loc, d0), tokens, pos,
+            backend=backend, tp=tp)
+        planes2 = device_append(
+            cfg, planes, new_cache,
+            _localize_targets(cfg, targets, p_loc, d0), tp=tp)
+        toks = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return logits, toks, planes2, states_from_step(cfg, new_cache)
+
+    plane_specs = shd.plane_pspecs()
+    state_specs = _state_specs(cfg, P)
+    meta_specs = _paged_tree_specs(cfg, P("data"), P(None, "data"), {})
+    target_specs = _paged_tree_specs(cfg, P("data"), P(None, "data"), None)
+    from jax.experimental.shard_map import shard_map
+    stepped = shard_map(
+        _body, mesh=mesh,
+        in_specs=(P(), plane_specs, state_specs, meta_specs,
+                  P("data"), P("data"), target_specs),
+        out_specs=(P("data"), P("data"), plane_specs, state_specs),
+        check_rep=False)
+    return jax.jit(stepped)
 
 
 def extend_caches(cfg: ModelConfig, caches: dict, max_len: int) -> dict:
@@ -576,10 +724,11 @@ class DevicePoolPlanes:
     — that sync is the only payload that ever crosses host<->device in
     steady-state decode."""
 
-    def __init__(self, pool: m.KVPagePool, n_tables: int):
+    def __init__(self, pool: m.KVPagePool, n_tables: int, mesh=None):
         p, ps = pool.num_pages, pool.page_size
         h, dh, s = pool.kv_heads, pool.head_dim, pool.n_streams
         self.n_tables = n_tables
+        self.mesh = mesh
         z = jnp.zeros
         self.planes: dict[str, jax.Array] = {
             "tok_k": z((p, ps, h, dh), jnp.int8),
@@ -600,6 +749,27 @@ class DevicePoolPlanes:
             "ol": z((n_tables, 16), jnp.int32),
             "cum": z((n_tables, 17), jnp.int32),
         }
+        self.repin()
+
+    def repin(self) -> None:
+        """Re-place every plane under the mesh partitioning rules
+        (``sharding.plane_pspecs``): pages shard over "data" (matching the
+        per-shard free lists), dense payload heads over "model", PACKED
+        streams and tables replicated over "model".  Called at
+        construction and after host-sync *events* — eager ``.at[].set``
+        scatters may leave an event-updated plane with a degraded layout,
+        and repinning there keeps the steady-state step free of implicit
+        reshards.  No-op without a mesh."""
+        if self.mesh is None:
+            return
+        sh = shd.plane_shardings(self.mesh, self.planes)
+        # only re-place planes whose layout actually degraded: an event
+        # flush typically touches one state's planes, and device_put on
+        # the 17 untouched ones is pure per-event dispatch overhead
+        self.planes = {
+            k: v if v.sharding.is_equivalent_to(sh[k], v.ndim)
+            else jax.device_put(v, sh[k])
+            for k, v in self.planes.items()}
 
     def ensure_table_capacity(self, n_rows: int) -> bool:
         """Grow the device table planes to hold ``n_rows`` rows (doubling,
@@ -668,7 +838,8 @@ class PagedKVCache:
                  refresh_threshold: float = 0.15,
                  refresh_min_pages: int = 4,
                  verify_on_repack: bool = False,
-                 transfer_retries: int = 2):
+                 transfer_retries: int = 2,
+                 n_shards: int = 1):
         self.cfg = cfg
         self.page_size = page_size
         self.calib_pages = calib_pages
@@ -697,7 +868,15 @@ class PagedKVCache:
                              if k in STATE_KINDS]
         self.window = cfg.window_size
         self.pool = m.KVPagePool(num_pages, page_size, cfg.num_kv_heads,
-                                 cfg.head_dim, elems_per_stream)
+                                 cfg.head_dim, elems_per_stream,
+                                 n_shards=n_shards)
+        # mesh-sharded serving: every request is bound to one page shard
+        # (= one "data" mesh slice) at admission; its pages allocate from
+        # that shard's free list only, so admission and the on-device
+        # append never serialize on a global lock and every page a data
+        # shard's kernel reads lives in its own contiguous page range.
+        self.n_shards = n_shards
+        self.request_shard: dict[int, int] = {}
         # per (layer, kind=K/V): activation-mode table + calibration state
         self.tables: list[list] = [[None, None] for _ in range(self.n_layers)]
         self.hists = np.zeros((self.n_layers, 2, 256), np.int64)
@@ -712,6 +891,13 @@ class PagedKVCache:
         # ``paged_decode.table_row(gen, layer, kind, n_layers)``.
         self.generation = 0
         self._gen_snapshots: list[list[list]] = []   # per past gen: [L][2]
+        # generation -> row-block *slot* in the stacked table pool.  Rows
+        # are addressed through this indirection so ``compact_table_rows``
+        # can reclaim the 2*n_layers block of a generation that no longer
+        # owns any PACKED page (resident or spilled) — the stacked pool
+        # stops growing monotonically with refresh count.  Generation 0 is
+        # always live (HOT/COLD pages carry gen 0 in their meta rows).
+        self.gen_rows: dict[int, int] = {0: 0}
         self.table_gen = np.zeros(self.n_layers, np.int32)
         self.page_gen = np.zeros(num_pages, np.int32)
         # page metadata alongside page_gen: integrity checksum of the
@@ -775,6 +961,8 @@ class PagedKVCache:
         self.dev_states: dict | None = None
         self._dirty: set[int] = set()       # pages needing a device sync
         self._tables_dirty = False
+        self._page_pull = None              # cached jitted seal-pull gather
+        self._plane_push = None             # cached jitted event-sync scatter
 
     # ------------------------------------------------------------ sizing
     def pages_per_seq(self, n_tokens: int) -> int:
@@ -870,11 +1058,15 @@ class PagedKVCache:
         return out
 
     # ----------------------------------------------------------- requests
-    def add_request(self, rid: int) -> None:
+    def add_request(self, rid: int, shard: int = 0) -> None:
         if rid in self.page_tables:
             raise ValueError(f"duplicate request id {rid}")
+        if not 0 <= shard < self.n_shards:
+            raise ValueError(f"shard {shard} out of range "
+                             f"(pool has {self.n_shards})")
         self.page_tables[rid] = [[] for _ in range(self.n_layers)]
         self.page_base[rid] = [0] * self.n_layers
+        self.request_shard[rid] = shard
         self.states[rid] = {}
         self.seq_len[rid] = 0
 
@@ -891,6 +1083,7 @@ class PagedKVCache:
                 self.page_last_read[pid] = 0
                 self.pool.free(pid)
         del self.page_base[rid]
+        self.request_shard.pop(rid, None)
         del self.states[rid]
         del self.seq_len[rid]
 
@@ -906,10 +1099,12 @@ class PagedKVCache:
                     f"page-table desync for rid={rid} layer={layer}: token "
                     f"{t} vs base={self.page_base[rid][layer]} "
                     f"live={len(pids)}")
-            pid = self.pool.alloc()
+            shard = self.request_shard.get(rid, 0)
+            pid = self.pool.alloc(shard)
             if pid is None:
                 raise RuntimeError(
-                    "page pool exhausted mid-flight (admission must reserve)")
+                    f"page shard {shard} exhausted mid-flight "
+                    "(admission must reserve per shard)")
             pids.append(pid)
         if pids[-1] < 0:
             raise m.PageIntegrityError(
@@ -1224,8 +1419,36 @@ class PagedKVCache:
     @property
     def n_table_rows(self) -> int:
         """Rows in the stacked table pool: one ``2 * n_layers`` block per
-        generation (``table_row(gen, layer, kind)`` addressing)."""
-        return 2 * self.n_layers * (self.generation + 1)
+        *live* generation (``gen_rows`` slot addressing — compacted, not
+        one block per historical generation)."""
+        return 2 * self.n_layers * (max(self.gen_rows.values()) + 1)
+
+    def _row(self, gen: int, layer: int, kind: int) -> int:
+        """Stacked-pool row of ``(gen, layer, kind)`` through the
+        compacted ``gen_rows`` slot map — the ONLY way table ids reach
+        the kernels, so a compaction is visible everywhere at the next
+        ``step_meta``/``materialize`` build."""
+        return table_row(self.gen_rows[gen], layer, kind, self.n_layers)
+
+    def _checked_gen(self, pid: int, rid, layer: int) -> int:
+        """A page's table generation, validated against the live
+        ``gen_rows`` map.  Every read-side consumer (``step_meta`` table
+        build, read-traffic accrual) must go through this rather than
+        indexing ``gen_rows`` directly: a poisoned/stale generation is an
+        *integrity failure of one request*, and it has to surface as
+        ``PageIntegrityError`` (so the engine fails the owner and keeps
+        serving) — never as a bare ``KeyError`` out of the compacted
+        slot map."""
+        gen = int(self.page_gen[pid])
+        if gen not in self.gen_rows:
+            self.traffic["kv_integrity_failures"] += 1
+            raise m.PageIntegrityError(
+                f"page {pid} of rid={rid} layer={layer} carries "
+                f"poisoned table generation {gen} (live: "
+                f"{sorted(self.gen_rows)}) — refusing to decode "
+                "with an out-of-pool table row",
+                rid=rid, layer=layer, pid=pid)
+        return gen
 
     def _table_at(self, gen: int, layer: int, kind: int):
         """The table a page packed at generation ``gen`` was coded with."""
@@ -1233,15 +1456,52 @@ class PagedKVCache:
             return self._gen_snapshots[gen][layer][kind]
         return self.tables[layer][kind]
 
+    def _live_generations(self) -> set[int]:
+        """Generations that must keep a row block: the current one (new
+        packs address it), generation 0 (HOT/COLD pages carry gen 0 in
+        their — masked but bounds-checked — meta rows), every generation
+        owning a resident PACKED page, and every generation of a page
+        parked in the host spill tier (it returns at readahead and must
+        still decode with its own table)."""
+        live = {0, self.generation}
+        for packed in self._packed:
+            for pid in packed:
+                live.add(int(self.page_gen[pid]))
+        live |= {int(g) for g in self.spill_tier.live_gens()}
+        return live
+
+    def compact_table_rows(self) -> int:
+        """Reclaim stacked-table row blocks of dead generations: after the
+        budgeted re-pack migrates (or eviction frees) the last PACKED page
+        coded under generation ``g``, nothing can ever reference ``g``'s
+        rows again — drop it from ``gen_rows`` and renumber the surviving
+        generations onto contiguous slots.  Without this the device table
+        planes grow a ``2 * n_layers`` block per refresh *forever* on a
+        long-running server.  Returns the number of rows reclaimed;
+        on any change the stack rebuilds and the device mirror re-uploads
+        at the next flush (an event, never the steady-state step)."""
+        live = self._live_generations()
+        kept = sorted(g for g in self.gen_rows if g in live)
+        new_rows = {g: i for i, g in enumerate(kept)}
+        if new_rows == self.gen_rows:
+            return 0
+        reclaimed = 2 * self.n_layers * (
+            max(self.gen_rows.values()) - max(new_rows.values()))
+        self.gen_rows = new_rows
+        self._table_stack = None
+        self._tables_dirty = True
+        return reclaimed
+
     def _tables_stacked(self):
-        """np table arrays stacked ``[(G+1) * 2 * n_layers, ...]``, row
-        ``table_row(gen, layer, kind)`` — the per-page table-id space of
-        the batched gather-decode and fused-attention calls.  Generation
-        ``G`` (the last block) is the live ``self.tables``; earlier blocks
-        come from the refresh snapshots (copy-forward: a layer that did
-        not refresh at generation g repeats its previous table there, so
-        any (gen, layer) a PACKED page can reference is populated).
-        Rebuilt lazily on calibration/refresh — individual tables are
+        """np table arrays stacked ``[n_live_gens * 2 * n_layers, ...]``,
+        row ``table_row(gen_rows[gen], layer, kind)`` — the per-page
+        table-id space of the batched gather-decode and fused-attention
+        calls.  The current generation's block is the live
+        ``self.tables``; earlier live blocks come from the refresh
+        snapshots (copy-forward: a layer that did not refresh at
+        generation g repeats its previous table there, so any (gen,
+        layer) a PACKED page can reference is populated).  Rebuilt lazily
+        on calibration/refresh/compaction — individual tables are
         immutable.  Uncalibrated rows stay zero and are never referenced
         (PACKED requires a table)."""
         if self._table_stack is None:
@@ -1249,13 +1509,13 @@ class PagedKVCache:
             vm = np.zeros((rows, 17), np.int32)
             ol = np.zeros((rows, 16), np.int32)
             cm = np.zeros((rows, 17), np.int32)
-            for gen in range(self.generation + 1):
+            for gen in self.gen_rows:
                 for layer in range(self.n_layers):
                     for kind in (0, 1):
                         t = self._table_at(gen, layer, kind)
                         if t is not None:
                             a, b, c = t.as_arrays()
-                            row = table_row(gen, layer, kind, self.n_layers)
+                            row = self._row(gen, layer, kind)
                             vm[row], ol[row], cm[row] = a, b, c
             self._table_stack = (vm, ol, cm)
         return self._table_stack
@@ -1324,6 +1584,7 @@ class PagedKVCache:
         from repro.core.tables import TABLE_OVERHEAD_BITS
         self._gen_snapshots.append([list(t) for t in self.tables])
         self.generation += 1
+        self.gen_rows[self.generation] = max(self.gen_rows.values()) + 1
         for layer in layers:
             for kind in (0, 1):
                 self.tables[layer][kind] = ctables.find_table(
@@ -1347,6 +1608,10 @@ class PagedKVCache:
                 self._repack_queue.append((layer, pid))
         self._table_stack = None
         self._tables_dirty = True
+        # a refresh can also *retire* generations (pages of the refreshed
+        # layers may have been the last references) — reclaim before the
+        # new stack builds so the bumped pool doesn't carry dead blocks
+        self.compact_table_rows()
 
     def repack_pending(self, budget: int | None = None, *,
                        force: bool = False) -> int:
@@ -1366,6 +1631,9 @@ class PagedKVCache:
                 continue                      # already current
             self._repack(layer, pid, force=force)
             done += 1
+        if done:
+            # migrations may have drained a generation's last PACKED page
+            self.compact_table_rows()
         return done
 
     def _repack(self, layer: int, pid: int, *, force: bool = False) -> bool:
@@ -1589,7 +1857,8 @@ class PagedKVCache:
                     raise m.PageIntegrityError(
                         f"unspill of rid={rid} layer={layer} page {i}: "
                         f"{e}", rid=rid, layer=layer, handle=handle) from e
-                pid = self.pool.adopt(rec.state, rec.fill, rec.payload)
+                pid = self.pool.adopt(rec.state, rec.fill, rec.payload,
+                                      shard=self.request_shard.get(rid, 0))
                 pids[i] = pid
                 self.page_gen[pid] = rec.gen
                 if rec.state == m.PAGE_PACKED:
@@ -1656,12 +1925,18 @@ class PagedKVCache:
         self.transfers["h2d_bytes"] += int(arr.size) * arr.dtype.itemsize
         return arr
 
-    def enable_device_pool(self, max_batch: int) -> None:
+    def enable_device_pool(self, max_batch: int, mesh=None) -> None:
         """Switch to device-resident decode: mirror the pool planes on
         device (read by the fused kernel, written by the on-device
         append) and allocate the device state store for recurrent-kind
-        layers.  Host numpy remains the seal/pack + invariant mirror."""
-        self.dev = DevicePoolPlanes(self.pool, max(1, self.n_table_rows))
+        layers.  Host numpy remains the seal/pack + invariant mirror.
+
+        With ``mesh``: planes place under ``sharding.plane_pspecs`` (page
+        shards over "data" matching the per-shard free lists).  The state
+        store starts unplaced — the sharded step's out_specs pin it from
+        the first step on."""
+        self.dev = DevicePoolPlanes(self.pool, max(1, self.n_table_rows),
+                                    mesh=mesh)
         self.dev_states = init_state_store(self.cfg, max_batch)
         self._sync_tables_to_device()
 
@@ -1685,58 +1960,75 @@ class PagedKVCache:
     def sync_pages_to_device(self, pids) -> None:
         """Push pages' current-state payloads into the device mirror —
         called at page *events* (seal, pack, prefill ingest), never in
-        the steady-state decode loop.  Batched per lifecycle state: one
-        scatter per plane per group, not per page (a seal step syncs
-        every layer's page at once)."""
-        pool, d = self.pool, self.dev.planes
+        the steady-state decode loop.  Batched per lifecycle state: on a
+        mesh, ONE fused scatter program per group (every plane of the
+        state at once), not one eager dispatch per plane — each eager
+        ``.at[].set`` there is a full SPMD dispatch, so a PACKED seal's
+        8 plane writes would pay 8× the launch overhead; the page-id
+        vector pads to a power-of-two bucket by repeating the last id
+        (rewriting an identical payload row is idempotent), keeping the
+        jit cache log-bounded in group size.  Without a mesh the planes
+        stay on the eager per-plane path: single-device dispatch is
+        ~100x cheaper than the fused program's one-off XLA compile, and
+        that compile landing mid-serve would poison step-time baselines
+        (the engine watchdog's trailing window)."""
+        pool = self.pool
         groups: dict[int, list[int]] = {}
         for pid in pids:
             groups.setdefault(int(pool.state[pid]), []).append(pid)
+        fused = self.dev.mesh is not None
+        if fused and self._plane_push is None:
+            def _push(d, idx, pay):
+                return {k: d[k].at[idx].set(v) for k, v in pay.items()}
+            self._plane_push = jax.jit(_push)
         for st, group in groups.items():
             if st == m.PAGE_FREE:
                 continue
+            if fused:
+                b = 1 << max(len(group) - 1, 0).bit_length()
+                group = group + [group[-1]] * (b - len(group))
             idx = jnp.asarray(np.asarray(group, np.int32))
             if st == m.PAGE_HOT:
-                d["tok_k"] = d["tok_k"].at[idx].set(
-                    self._put(pool.tok_q[0, group]))
-                d["tok_v"] = d["tok_v"].at[idx].set(
-                    self._put(pool.tok_q[1, group]))
-                d["tok_sk"] = d["tok_sk"].at[idx].set(
-                    self._put(pool.tok_scale[0, group]))
-                d["tok_sv"] = d["tok_sv"].at[idx].set(
-                    self._put(pool.tok_scale[1, group]))
+                pay = {"tok_k": pool.tok_q[0, group],
+                       "tok_v": pool.tok_q[1, group],
+                       "tok_sk": pool.tok_scale[0, group],
+                       "tok_sv": pool.tok_scale[1, group]}
             elif st == m.PAGE_COLD:
-                d["cold_k"] = d["cold_k"].at[idx].set(
-                    self._put(pool.cold_q[0, group]))
-                d["cold_v"] = d["cold_v"].at[idx].set(
-                    self._put(pool.cold_q[1, group]))
+                pay = {"cold_k": pool.cold_q[0, group],
+                       "cold_v": pool.cold_q[1, group]}
             elif st == m.PAGE_PACKED:
-                d["sym_k"] = d["sym_k"].at[idx].set(
-                    self._put(pool.sym[0, group]))
-                d["sym_v"] = d["sym_v"].at[idx].set(
-                    self._put(pool.sym[1, group]))
-                d["ofs_k"] = d["ofs_k"].at[idx].set(
-                    self._put(pool.ofs[0, group]))
-                d["ofs_v"] = d["ofs_v"].at[idx].set(
-                    self._put(pool.ofs[1, group]))
-                d["stored_k"] = d["stored_k"].at[idx].set(
-                    self._put(pool.stored[0, group].astype(np.int32)))
-                d["stored_v"] = d["stored_v"].at[idx].set(
-                    self._put(pool.stored[1, group].astype(np.int32)))
+                pay = {"sym_k": pool.sym[0, group],
+                       "sym_v": pool.sym[1, group],
+                       "ofs_k": pool.ofs[0, group],
+                       "ofs_v": pool.ofs[1, group],
+                       "stored_k": pool.stored[0, group].astype(np.int32),
+                       "stored_v": pool.stored[1, group].astype(np.int32)}
             if st in (m.PAGE_COLD, m.PAGE_PACKED):
-                d["pscale_k"] = d["pscale_k"].at[idx].set(
-                    self._put(pool.page_scale[0, group]))
-                d["pscale_v"] = d["pscale_v"].at[idx].set(
-                    self._put(pool.page_scale[1, group]))
+                pay["pscale_k"] = pool.page_scale[0, group]
+                pay["pscale_v"] = pool.page_scale[1, group]
+            d = self.dev.planes
+            if fused:
+                self.dev.planes = dict(d, **self._plane_push(
+                    {k: d[k] for k in pay}, idx,
+                    {k: self._put(v) for k, v in pay.items()}))
+            else:
+                for k, v in pay.items():
+                    d[k] = d[k].at[idx].set(self._put(v))
 
     def _flush_device(self) -> None:
         if self.dev is None:
             return
+        changed = self._tables_dirty or bool(self._dirty)
         if self._tables_dirty:
             self._sync_tables_to_device()
         if self._dirty:
             self.sync_pages_to_device(sorted(self._dirty))
             self._dirty.clear()
+        if changed:
+            # mesh mode: eager event scatters can degrade plane layouts;
+            # repin here (no-op without a mesh) so the next sharded step
+            # sees canonical partitioning instead of an implicit reshard
+            self.dev.repin()
 
     def sync_request_to_device(self, rid: int) -> None:
         """Admission-time push: every page of a freshly-ingested request
@@ -1829,8 +2121,28 @@ class PagedKVCache:
 
     def _seal_from_device(self, layer: int, pid: int) -> None:
         d = self.dev.planes
-        kq, vq, ks, vs = self._fetch((d["tok_k"][pid], d["tok_v"][pid],
-                                      d["tok_sk"][pid], d["tok_sv"][pid]))
+        if self.dev.mesh is None:
+            # plain eager gather: compiles in microseconds per pid and the
+            # single-device executables are trivial, so no jit is worth a
+            # multi-second compile landing mid-serve (it would poison the
+            # straggler watchdog's step-time baseline)
+            kq, vq, ks, vs = self._fetch((d["tok_k"][pid], d["tok_v"][pid],
+                                          d["tok_sk"][pid], d["tok_sv"][pid]))
+        else:
+            # on a sharded plane the page index must be a *traced* operand:
+            # a static python index bakes the pid into the jaxpr, and every
+            # distinct pid would pay a fresh SPMD partitioning compile (a
+            # recompile storm that dwarfs the seal itself); one dynamic-slice
+            # executable serves every page.  Only the four token staging
+            # planes are operands — passing the whole planes dict would
+            # recompile whenever ensure_table_capacity reallocates the
+            # table planes
+            if self._page_pull is None:
+                self._page_pull = jax.jit(lambda tk, tv, sk, sv, i: (
+                    tk[i], tv[i], sk[i], sv[i]))
+            kq, vq, ks, vs = self._fetch(self._page_pull(
+                d["tok_k"], d["tok_v"], d["tok_sk"], d["tok_sv"],
+                jnp.asarray(pid, jnp.int32)))
         self.pool.tok_q[0, pid] = kq
         self.pool.tok_q[1, pid] = vq
         self.pool.tok_scale[0, pid] = ks
@@ -1873,11 +2185,28 @@ class PagedKVCache:
                 self.states[rid] = self.read_state_slot(slot)
 
     # --------------------------------------------------- step metadata
-    def meta_pages(self, max_len: int) -> int:
-        """Static page-slot count of the fused kernel's grid: sized once
-        for the full context so the decode jit compiles exactly once (no
-        per-length recompiles; unused slots mask via state == FREE)."""
-        return max(1, self.pages_per_seq(max_len))
+    def meta_pages(self, max_len: int, slot_rids: list | None = None) -> int:
+        """Page-slot count of the fused kernel's grid.  Without
+        ``slot_rids``: the static worst case for the full context.  With
+        ``slot_rids``: the power-of-two bucket over the busiest active
+        slot's *occupied* page count (``kernels.paged_decode.page_bucket``)
+        capped at the worst case — a batch of mostly-short requests stops
+        paying the max-pages grid.  Bit-exact either way: slots past a
+        request's table mask via state == FREE, and a fully-masked page
+        leaves the online-softmax accumulator unchanged.  Grid sizes
+        bucket to powers of two so the decode jit compiles O(log pages)
+        variants, with the same recompile-storm guard as the gather."""
+        from repro.kernels.paged_decode import page_bucket
+        pmax = max(1, self.pages_per_seq(max_len))
+        if slot_rids is None:
+            return pmax
+        used = 1
+        for rid in slot_rids:
+            if rid is None or rid not in self.page_tables:
+                continue
+            for layer in self.attn_layers:
+                used = max(used, len(self.page_tables[rid][layer]))
+        return min(pmax, page_bucket(used))
 
     def step_meta(self, slot_rids: list, max_len: int) -> dict:
         """Per-step page-table metadata for ``decode_step_paged`` — the
@@ -1886,7 +2215,7 @@ class PagedKVCache:
         materialize path would have charged (same pages are read, just
         decoded at point of use)."""
         b = len(slot_rids)
-        pmax = self.meta_pages(max_len)
+        pmax = self.meta_pages(max_len, slot_rids)
         ps = self.page_size
         per_layer = {}
         for layer in self.attn_layers:
@@ -1910,8 +2239,8 @@ class PagedKVCache:
                     # K-row of the (generation, layer, kind) table id the
                     # page was coded under (V row = +1 in-kernel); pages
                     # from different refresh generations coexist per step
-                    d["tid"][slot, k_] = table_row(
-                        int(self.page_gen[pid]), layer, 0, self.n_layers)
+                    d["tid"][slot, k_] = self._row(
+                        self._checked_gen(pid, rid, layer), layer, 0)
                     d["state"][slot, k_] = int(self.pool.state[pid])
                     d["t0"][slot, k_] = (base + k_) * ps
                 d["qw"][slot] = (qpos, self._ring(max_len)
@@ -1959,15 +2288,7 @@ class PagedKVCache:
                             f"active request {rid} layer {layer} page {k_} "
                             "is SPILLED at read time — readahead must "
                             "restore before decode", rid=rid, layer=layer)
-                    gen = int(self.page_gen[pid])
-                    if not 0 <= gen <= self.generation:
-                        self.traffic["kv_integrity_failures"] += 1
-                        raise m.PageIntegrityError(
-                            f"page {pid} of rid={rid} layer={layer} carries "
-                            f"poisoned table generation {gen} (live "
-                            f"0..{self.generation}) — refusing to decode "
-                            "with an out-of-pool table row",
-                            rid=rid, layer=layer, pid=pid)
+                    self._checked_gen(pid, rid, layer)
                     self.page_last_read[pid] = self._read_clock
                     t0 = (base + k_) * ps
                     state = pool.state[pid]
@@ -2070,8 +2391,8 @@ class PagedKVCache:
             pad = (0, g - len(idx))
             idx_p = self._put(np.pad(idx, pad, mode="edge"))
             for kind01 in (0, 1):
-                tid = np.asarray([table_row(int(self.page_gen[pid]), layer,
-                                            kind01, self.n_layers)
+                tid = np.asarray([self._row(int(self.page_gen[pid]), layer,
+                                            kind01)
                                   for layer, pid, *_ in jobs], np.int32)
                 out = gather_decode(
                     self._put(pool.sym[kind01]),

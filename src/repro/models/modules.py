@@ -246,7 +246,8 @@ def attention_step(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
 # apack: hot-path-root(traced)
 def paged_attention_step(p: dict, x: jax.Array, planes: dict, meta: dict,
                          pos: jax.Array, cfg: ModelConfig, *,
-                         backend: str | None = None
+                         backend: str | None = None,
+                         tp: tuple[str, int] | None = None
                          ) -> tuple[jax.Array, dict]:
     """Single-token decode step against the *paged* APack KV store.
 
@@ -270,6 +271,19 @@ def paged_attention_step(p: dict, x: jax.Array, planes: dict, meta: dict,
     partially-rolled-out pages in-kernel via the absolute-position
     window, so no ring buffer exists either.
 
+    ``tp=(axis_name, size)`` runs the fused kernel tensor-parallel over
+    kv heads inside a ``shard_map`` body: the dense planes arrive with
+    only this shard's head block, the PACKED planes stay replicated
+    (APack stream interleaving mixes heads, so a compressed page cannot
+    be head-split — the kernel decodes the full page and slices its
+    local heads at the ``h0`` jobmeta scalar), and the per-head-block
+    ``(acc, m, l)`` partials are reassembled with a tiled ``all_gather``
+    *before* any cross-head contraction — per-kv-head attention has no
+    cross-head reductions, so the gathered state is bit-identical to the
+    single-device kernel.  The projections run replicated: on the decode
+    hot path the gather-decode kernel, not the matmuls, is the
+    bandwidth-bound stage APack targets.
+
     Returns (y [B, 1, D], new-token cache dict {k, v, k_scale, v_scale}).
     """
     from repro.kernels.fused_page_attention import fused_page_attention
@@ -292,12 +306,32 @@ def paged_attention_step(p: dict, x: jax.Array, planes: dict, meta: dict,
     vd = _kv_dequantize(qv, sv)
     ps_sz = planes["tok_k"].shape[1]
     n_streams = planes["sym_k"].shape[2]
+    # PACKED decode always spans the *full* head dim (streams interleave
+    # heads), even when the dense planes are head-sharded
     n_steps = (ps_sz * hkv * dh) // max(n_streams, 1)
     kmeta = jnp.stack([meta["state"], meta["t0"]], axis=-1)
+    t = tp[1] if tp is not None else 1
+    if t > 1:
+        hkv_loc = hkv // t
+        h0 = (jax.lax.axis_index(tp[0]) * hkv_loc).astype(jnp.int32)
+        q_kern = jax.lax.dynamic_slice_in_dim(
+            q[:, 0].reshape(b, hkv, g, dh), h0, hkv_loc, axis=1
+        ).reshape(b, hkv_loc * g, dh)
+    else:
+        h0 = jnp.int32(0)
+        q_kern = q[:, 0]
+    jm = jnp.concatenate(
+        [meta["qw"], jnp.broadcast_to(h0, (b,))[:, None]], axis=1)
     acc, m_run, l_run = fused_page_attention(
-        q[:, 0].astype(F32), meta["pid"], meta["tid"], kmeta, meta["qw"],
-        planes, n_steps=n_steps, num_heads=h,
+        q_kern.astype(F32), meta["pid"], meta["tid"], kmeta, jm,
+        planes, n_steps=n_steps, num_heads=h, h_full=hkv,
         softcap=float(cfg.logit_softcap), backend=backend)
+    if t > 1:
+        # reassemble the full head axis in axis-index order (= head-block
+        # order, since h0 = axis_index * hkv_loc) before the merge below
+        acc = jax.lax.all_gather(acc, tp[0], axis=1, tiled=True)
+        m_run = jax.lax.all_gather(m_run, tp[0], axis=1, tiled=True)
+        l_run = jax.lax.all_gather(l_run, tp[0], axis=1, tiled=True)
     # merge the current token's self-attention term (position == qpos,
     # always in-window) into the unnormalized online-softmax state, then
     # normalize — the kernel never divides, so fully-masked page sets
@@ -910,6 +944,12 @@ class HostSpillTier:
     def live_count(self) -> int:
         return len(self._records)
 
+    def live_gens(self) -> set[int]:
+        """Table generations referenced by parked records.  Table-row
+        compaction must treat these as live: an unspilled page decodes
+        with the table generation it was packed under."""
+        return {rec.gen for rec in self._records.values()}
+
     def put(self, rec: SpillRecord) -> int:
         rec.crc = payload_crc(rec.payload)
         handle = self._next_handle
@@ -956,11 +996,26 @@ class KVPagePool:
     """Block pool of fixed-size KV token pages (storage + free list only;
     tables/calibration/decode policy live in ``model.PagedKVCache``).
 
-    Kind axis: index 0 = K, 1 = V throughout."""
+    Kind axis: index 0 = K, 1 = V throughout.
+
+    ``n_shards`` partitions the page-id space into contiguous per-shard
+    ranges (shard ``s`` owns ``[s*pages_per_shard, (s+1)*pages_per_shard)``)
+    with one free list per shard, so mesh-sharded admission reserves and
+    allocates without ever serializing on a global free list.  The
+    contiguous layout is what lets the device plane mirror shard its page
+    axis with plain block `PartitionSpec`s — shard ``s``'s rows are
+    exactly its page range."""
 
     def __init__(self, num_pages: int, page_size: int, kv_heads: int,
-                 head_dim: int, elems_per_stream: int = 128):
+                 head_dim: int, elems_per_stream: int = 128,
+                 n_shards: int = 1):
         from repro.kernels.ref import ofs_capacity_words, sym_capacity_words
+        if n_shards < 1 or num_pages % n_shards:
+            raise ValueError(
+                f"num_pages={num_pages} must split evenly over "
+                f"n_shards={n_shards} contiguous page ranges")
+        self.n_shards = n_shards
+        self.pages_per_shard = num_pages // n_shards
         self.num_pages = num_pages
         self.page_size = page_size
         self.kv_heads = kv_heads
@@ -989,7 +1044,12 @@ class KVPagePool:
         self.stored = np.zeros((2, p, s), bool)
         self.fill = np.zeros(p, np.int32)
         self.state = np.full(p, PAGE_FREE, np.uint8)
-        self.free_list: list[int] = list(range(num_pages - 1, -1, -1))
+        # per-shard stacks, each popping its lowest page id first (the
+        # n_shards=1 layout is bit-compatible with the old single list)
+        pps = self.pages_per_shard
+        self.free_lists: list[list[int]] = [
+            list(range((s + 1) * pps - 1, s * pps - 1, -1))
+            for s in range(n_shards)]
         self.alloc_count = 0                    # lifetime allocs (reuse proof)
         self.high_water = 0                     # max pages in use at once
         self.evict_count = 0                    # rolling-window evictions
@@ -1022,12 +1082,20 @@ class KVPagePool:
     # ------------------------------------------------------------ free list
     @property
     def free_count(self) -> int:
-        return len(self.free_list)
+        return sum(len(fl) for fl in self.free_lists)
 
-    def alloc(self) -> int | None:
-        if not self.free_list:
+    def free_count_shard(self, shard: int) -> int:
+        return len(self.free_lists[shard])
+
+    def shard_of(self, pid: int) -> int:
+        """Owning shard of a page id (contiguous range partition)."""
+        return pid // self.pages_per_shard
+
+    def alloc(self, shard: int = 0) -> int | None:
+        fl = self.free_lists[shard]
+        if not fl:
             return None
-        pid = self.free_list.pop()
+        pid = fl.pop()
         # a non-FREE page on the free list is corruption — stay loud
         self._require_transition(pid, "alloc", PAGE_HOT, exc=RuntimeError,
                                  detail="alloc from corrupt free list")
@@ -1035,7 +1103,7 @@ class KVPagePool:
         self.fill[pid] = 0
         self.alloc_count += 1
         self.high_water = max(self.high_water,
-                              self.num_pages - len(self.free_list))
+                              self.num_pages - self.free_count)
         return pid
 
     def free(self, pid: int) -> None:
@@ -1053,7 +1121,7 @@ class KVPagePool:
         self.sym_bits[:, pid] = 0
         self.ofs_bits[:, pid] = 0
         self.stored[:, pid] = False
-        self.free_list.append(pid)
+        self.free_lists[self.shard_of(pid)].append(pid)
 
     def evict(self, pid: int) -> None:
         """Rolling-window eviction hook: return a *sealed* page whose every
@@ -1098,12 +1166,14 @@ class KVPagePool:
         self.spill_count += 1
         return st, fill, payload, comp
 
-    def adopt(self, st: int, fill: int, payload: dict) -> int:
-        """Inverse of ``spill``: allocate a fresh slot and restore a spilled
-        payload into it (FREE -> HOT/COLD/PACKED).  The pid is generally
-        *different* from the one the page was spilled out of — owners must
-        rewrite their page-table entry."""
-        pid = self.alloc()
+    def adopt(self, st: int, fill: int, payload: dict,
+              shard: int = 0) -> int:
+        """Inverse of ``spill``: allocate a fresh slot (from ``shard``'s
+        free list) and restore a spilled payload into it (FREE ->
+        HOT/COLD/PACKED).  The pid is generally *different* from the one
+        the page was spilled out of — owners must rewrite their page-table
+        entry."""
+        pid = self.alloc(shard)
         if pid is None:
             raise RuntimeError(
                 "no free page to unspill into — admission must re-reserve "

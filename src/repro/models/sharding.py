@@ -195,6 +195,65 @@ def logits_sharding(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P(dp_axes(mesh), None, "model"))
 
 
+# --------------------------------------------- paged pool plane partitioning
+# Rules for the ``DevicePoolPlanes`` dict under a serving mesh
+# (axes ("data", "model")).  Pages shard over "data" — each data shard owns
+# a contiguous page range matching its per-shard free list, so append and
+# gather stay shard-local.  Dense HOT/COLD payloads additionally shard
+# their kv-head dim over "model" (tensor-parallel heads in the fused
+# kernel).  PACKED planes (sym/ofs/stored) CANNOT head-shard: the APack
+# stream layout interleaves heads across lanes, so every model shard keeps
+# the full compressed words for its pages and the kernel decodes the full
+# page then slices its local head block.  Table planes (vm/ol/cum) are
+# small and fully replicated.
+_PLANE_RULES: dict[str, tuple] = {
+    "tok_k": ("data", None, "model", None),
+    "tok_v": ("data", None, "model", None),
+    "cold_k": ("data", None, "model", None),
+    "cold_v": ("data", None, "model", None),
+    "tok_sk": ("data", None, "model"),
+    "tok_sv": ("data", None, "model"),
+    "pscale_k": ("data", "model"),
+    "pscale_v": ("data", "model"),
+    "sym_k": ("data", None, None),
+    "sym_v": ("data", None, None),
+    "ofs_k": ("data", None, None),
+    "ofs_v": ("data", None, None),
+    "stored_k": ("data", None),
+    "stored_v": ("data", None),
+    "vm": (None, None),
+    "ol": (None, None),
+    "cum": (None, None),
+}
+
+
+def plane_pspec(name: str) -> P:
+    """``shard_map`` in/out PartitionSpec for one pool plane by name."""
+    try:
+        return P(*_PLANE_RULES[name])
+    except KeyError:
+        raise KeyError(f"no plane partition rule for {name!r}") from None
+
+
+def plane_pspecs(planes: dict | None = None) -> dict:
+    """PartitionSpec dict matching a ``DevicePoolPlanes.planes`` dict
+    (or the full rule set when called without one — the planes dict key
+    set is fixed per pool layout, so spec builders that run before any
+    pool exists can use the rules directly)."""
+    return {k: plane_pspec(k) for k in (_PLANE_RULES if planes is None
+                                        else planes)}
+
+
+def plane_shardings(mesh: Mesh, planes: dict) -> dict:
+    """NamedSharding dict for placing the pool planes on a serving mesh.
+
+    ``fit_spec`` drops any axis that doesn't divide (e.g. kv-heads on an
+    oversized model axis -> replicated heads; the kernel TP path is gated
+    on divisibility separately)."""
+    return {k: NamedSharding(mesh, fit_spec(plane_pspec(k), v.shape, mesh))
+            for k, v in planes.items()}
+
+
 # ------------------------------------------------------- model-code context
 # GSPMD propagation alone loses the batch sharding through scan carries
 # (measured: full-global-batch fp32 logits per device).  Model code calls

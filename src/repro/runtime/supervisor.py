@@ -52,9 +52,15 @@ class WatchdogEvent:
 class StragglerWatchdog:
     """Step-time watchdog shared by ``Supervisor`` and
     ``serve.ServeEngine``: a step slower than ``ratio`` × the trailing
-    ``window``-step mean is flagged; ``patience`` consecutive flags
-    escalate to a ``hung`` event.  Policy (raise / preempt / re-mesh)
-    stays with the caller — this class only observes and emits."""
+    ``window``-step *median* is flagged; ``patience`` consecutive flags
+    escalate to a ``hung`` event.  The baseline is a median, not a
+    mean: jit-bucket growth (prefill buckets, per-job page-count
+    buckets) legitimately drops a multi-second compile into an
+    otherwise-millisecond step stream, and one such spike in a mean
+    window would inflate the threshold enough to mask a genuinely hung
+    step for the next ``window`` steps.  Policy (raise / preempt /
+    re-mesh) stays with the caller — this class only observes and
+    emits."""
 
     def __init__(self, ratio: float = 5.0, patience: int = 3,
                  window: int = 8, on_event=None):
@@ -70,7 +76,7 @@ class StragglerWatchdog:
                 phases: dict | None = None) -> WatchdogEvent | None:
         ev = None
         if len(self.step_times) >= self.window:
-            ema = float(np.mean(self.step_times[-self.window:]))
+            ema = float(np.median(self.step_times[-self.window:]))
             if dt > self.ratio * max(ema, 1e-6):
                 self.events += 1
                 kind = "hung" if self.events >= self.patience \

@@ -217,6 +217,7 @@ class ServeEngine:
                  kv_verify_on_repack: bool = False,
                  scheduler: str = "sync",
                  prefill_chunk_tokens: int | None = None,
+                 mesh=None,
                  faults=None):
         self.cfg = cfg
         self.params = params
@@ -273,6 +274,35 @@ class ServeEngine:
         # every step) as the parity oracle.
         self.paged = cfg.kv_cache_dtype == "apack-int8"
         self.fused = bool(kv_fused) if kv_fused is not None else self.paged
+        # mesh-sharded serving (DESIGN.md §11): decode jobs data-parallel
+        # over the mesh's "data" axis (slots, state store, page planes and
+        # per-shard free lists all partition with their jobs), kv-heads
+        # tensor-parallel over "model" inside the fused kernel.  Greedy
+        # tokens stay bit-identical to the single-device engine.
+        self.mesh = mesh
+        self._n_data = 1
+        self._n_model = 1
+        self._step_mesh = None
+        if mesh is not None:
+            if not (self.paged and self.fused):
+                raise ValueError(
+                    "mesh= requires the fused paged apack-int8 KV (the "
+                    "sharded step is the combined decode+append program)")
+            if scheduler != "sync":
+                raise ValueError(
+                    "mesh= requires scheduler='sync' (the async overlap "
+                    "window is not shard-aware yet)")
+            if "data" not in dict(mesh.shape):
+                raise ValueError("serving mesh must name a 'data' axis")
+            self._n_data, self._n_model = M.mesh_axis_sizes(mesh)
+            if max_batch % self._n_data:
+                raise ValueError(
+                    f"max_batch={max_batch} must divide over the "
+                    f"{self._n_data}-way data axis (whole slots per shard)")
+            if self._n_model > 1 and cfg.num_kv_heads % self._n_model:
+                raise ValueError(
+                    f"num_kv_heads={cfg.num_kv_heads} must divide over "
+                    f"the {self._n_model}-way model axis")
         if self.paged:
             if kv_pages is None:
                 # enough for every slot at full context (slot-equivalent),
@@ -280,22 +310,36 @@ class ServeEngine:
                 # recurrent-kind layers take none
                 kv_pages = max_batch * M.PagedKVCache.pages_for_config(
                     cfg, max_len, kv_page_size)
+            if kv_pages % self._n_data:
+                # whole pages per shard: round the pool up so every data
+                # shard owns an equal contiguous range
+                kv_pages += self._n_data - kv_pages % self._n_data
             self.kv = M.PagedKVCache(
                 cfg, kv_pages, page_size=kv_page_size,
                 calib_pages=kv_calib_pages, backend=kv_backend,
                 refresh_every_pages=kv_refresh_every_pages,
                 refresh_threshold=kv_refresh_threshold,
                 refresh_min_pages=kv_refresh_min_pages,
-                verify_on_repack=kv_verify_on_repack)
+                verify_on_repack=kv_verify_on_repack,
+                n_shards=self._n_data)
             self.kv.faults = faults
             self._reserved: dict[int, int] = {}
-            self._reserved_total = 0
+            # per-shard reservation accounting — THE admission mechanism
+            # (a single shard reduces it to the old global check, so the
+            # single-device engine is the n_data=1 special case, not a
+            # separate code path).  No global lock: each shard's admission
+            # reserves against its own free-list-backed counter.
+            self._rshard: dict[int, int] = {}
+            self._shard_reserved: list[int] = [0] * self._n_data
             # rid -> (compressed state snapshot, position, last token):
             # preempted requests resume without re-prefill
             self._preempted: dict[int, tuple] = {}
             self.cache = None
             if self.fused:
-                self.kv.enable_device_pool(max_batch)
+                self.kv.enable_device_pool(max_batch, mesh=mesh)
+                if mesh is not None:
+                    self._step_mesh = M.build_sharded_step(
+                        cfg, mesh, backend=kv_backend)
                 self._decode_paged = jax.jit(
                     lambda p, pl, st, mt, t, pos: M.decode_step_paged(
                         cfg, p, pl, st, mt, t, pos, backend=kv_backend))
@@ -331,12 +375,14 @@ class ServeEngine:
     def submit(self, req: Request) -> None:
         if self.paged:
             need = self._pages_for(req)
-            if need > self.kv.pool.num_pages:
+            if need > self._shard_pages():
                 # would head-of-line-block the queue forever otherwise
+                # (a request lives entirely within one data shard's
+                # page range, so the per-shard capacity is the limit)
                 raise ValueError(
                     f"request {req.rid} needs {need} pages worst-case but "
-                    f"the pool only has {self.kv.pool.num_pages}; shorten "
-                    "the request or grow kv_pages")
+                    f"each pool shard only has {self._shard_pages()}; "
+                    "shorten the request or grow kv_pages")
         req.t_submit = time.perf_counter()
         self.queue.append(req)
 
@@ -362,41 +408,80 @@ class ServeEngine:
 
         return [r for _, r in sorted(enumerate(self.queue), key=key)]
 
-    def _try_reserve(self, req: Request, *,
+    # ------------------------------------------ per-shard reservations
+    # Admission accounting is per data shard: shard ``s`` owns pool pages
+    # ``[s*pps, (s+1)*pps)`` (matching ``KVPagePool``'s free lists) and
+    # the contiguous slot block ``[s*spb, (s+1)*spb)``.  There is no
+    # global reservation lock — each shard's admission checks only its
+    # own counter, so shards admit independently; the single-device
+    # engine is the n_data=1 special case of the same mechanism.
+    @property
+    def _reserved_total(self) -> int:
+        return sum(self._shard_reserved)
+
+    @_reserved_total.setter
+    def _reserved_total(self, v: int) -> None:
+        # compatibility hook (tests poke this to simulate a full pool):
+        # route the whole total to shard 0 — exact on a single shard
+        self._shard_reserved = [int(v)] + [0] * (self._n_data - 1)
+
+    def _slot_shard(self, slot: int) -> int:
+        return slot // (self.max_batch // self._n_data)
+
+    def _shard_pages(self) -> int:
+        """Page capacity of ONE data shard (the whole pool at n_data=1)."""
+        return self.kv.pool.num_pages // self._n_data
+
+    def _reserve(self, rid: int, need: int, shard: int) -> None:
+        self._reserved[rid] = need
+        self._rshard[rid] = shard
+        self._shard_reserved[shard] += need
+
+    def _unreserve(self, rid: int) -> int:
+        need = self._reserved.pop(rid)
+        self._shard_reserved[self._rshard.pop(rid, 0)] -= need
+        return need
+
+    def _try_reserve(self, req: Request, shard: int = 0, *,
                      allow_relief: bool) -> int | None:
-        """Reservation headroom check for one admission candidate.
-        Returns the page count to reserve (0 when the request still holds
-        its reservation), or None while it stays blocked.  Only the
-        priority head may trigger pressure relief (``allow_relief``) —
-        other candidates admit into existing headroom only, so continuous
-        batching never spills victims on behalf of a request that jumped
-        the queue."""
+        """Reservation headroom check for one admission candidate against
+        ONE data shard's page budget.  Returns the page count to reserve
+        (0 when the request still holds its reservation), or None while
+        it stays blocked.  Only the priority head may trigger pressure
+        relief (``allow_relief``) — other candidates admit into existing
+        headroom only, so continuous batching never spills victims on
+        behalf of a request that jumped the queue."""
         need = 0 if req.rid in self._reserved else self._pages_for(req)
-        if self._reserved_total + need <= self.kv.pool.num_pages:
+        if self._shard_reserved[shard] + need <= self._shard_pages():
             if allow_relief:
                 self._pressure_backoff = 1    # clean head admission
             return need
         if not allow_relief:
             return None
         self.stats["kv_admission_blocked"] += 1
-        if not self._relieve_pressure(req, need):
+        if not self._relieve_pressure(req, need, shard):
             return None                       # request waits
         # Recompute after relief: the victim scan can change this very
         # request's standing (an L2 preemption requeues an active
         # request's pages).  Trusting the stale pre-relief ``need`` was
         # the pool over-commit bug — a head whose own reservation was
         # released by relief would resume with need=0 and under-count
-        # ``_reserved_total`` forever after.
+        # the shard counter forever after.
         need = 0 if req.rid in self._reserved else self._pages_for(req)
-        if self._reserved_total + need > self.kv.pool.num_pages:
+        if self._shard_reserved[shard] + need > self._shard_pages():
             return None                       # partial relief; retry later
         self.stats["admission_retries"] += 1
         return need
 
-    def _resume_request(self, slot: int, req: Request, need: int) -> None:
+    def _resume_request(self, slot: int, req: Request, need: int,
+                        shard: int = 0) -> None:
         if need:
-            self._reserved[req.rid] = need
-            self._reserved_total += need
+            self._reserve(req.rid, need, shard)
+        # spilled requests re-adopt into fresh pages and are shard-free
+        # until here; resident preempted requests only reach this with
+        # their own shard (the _admit candidate scan guarantees it), so
+        # the rebind is a no-op for them
+        self.kv.request_shard[req.rid] = shard
         try:
             self._resume_into_slot(slot, req)
         except m.PageIntegrityError as e:
@@ -411,36 +496,56 @@ class ServeEngine:
                 self._prefill_into_slot(slot, self.queue.popleft())
                 continue
             self._admit_clock += 1
-            head = self._admission_order()[0]
-            need = self._try_reserve(head, allow_relief=True)
+            shard = self._slot_shard(slot)
+            head = None
+            for r in self._admission_order():
+                # a preempted-but-resident request's pages are pinned to
+                # the shard range they were allocated from: it can only
+                # resume into that shard's slots.  Spilled requests
+                # re-adopt into fresh pages, so they bind to any shard.
+                if (r.rid in self._preempted
+                        and r.rid not in self._spilled
+                        and self.kv.request_shard.get(r.rid, shard)
+                        != shard):
+                    continue
+                head = r
+                break
+            if head is None:
+                continue                   # nothing eligible for this shard
+            need = self._try_reserve(head, shard, allow_relief=True)
             if need is None:
+                if self._n_data > 1:
+                    continue               # other shards admit independently
                 break                      # head waits (FIFO)
             self.queue.remove(head)
             if head.rid in self._preempted:
-                self._resume_request(slot, head, need)
+                self._resume_request(slot, head, need, shard)
                 continue
             self._prefill_into_slot(slot, head)
 
-    def _relieve_pressure(self, head: Request, need: int) -> bool:
+    def _relieve_pressure(self, head: Request, need: int,
+                          shard: int = 0) -> bool:
         """Bounded spill -> retry -> preempt escalation under pool
-        exhaustion.  Returns True when reservation headroom was freed
-        (the caller re-checks and admits); False means wait.
+        exhaustion of ONE data shard.  Returns True when reservation
+        headroom was freed on that shard (the caller re-checks and
+        admits); False means wait.
 
         Level 1 (always on): spill the *coldest* preempted request still
-        holding a reservation — its pages sit idle in the pool, so
-        parking them compressed in the host tier frees a whole
+        holding a reservation on this shard — its pages sit idle in the
+        pool, so parking them compressed in the host tier frees a whole
         reservation without touching any active slot.  Level 2
         (``kv_pressure`` opt-in): preempt-with-spill the longest-running
-        active slot, gated by exponential backoff so a pool that is
-        simply too small degrades to FIFO instead of livelocking on
-        preempt/resume churn."""
+        active slot of this shard, gated by exponential backoff so a pool
+        that is simply too small degrades to FIFO instead of livelocking
+        on preempt/resume churn."""
         # The head itself can be parked (preempted, reservation held) —
         # it must never be its own victim: spilling it would release the
         # reservation the caller's ``need`` math was computed against
         # (the other half of the over-commit bug `_try_reserve` guards).
         parked = [rid for rid in self._preempted
                   if rid in self._reserved and rid not in self._spilled
-                  and rid != head.rid]
+                  and rid != head.rid
+                  and self._rshard.get(rid, 0) == shard]
         if parked:
             rid = min(parked, key=self.kv.request_last_read)
             self._spill_reserved(rid)
@@ -449,16 +554,22 @@ class ServeEngine:
             return False
         if self._admit_clock < self._next_pressure_admit:
             return False                  # backing off
-        victims = [s for s, r in enumerate(self.active) if r is not None]
+        victims = [s for s, r in enumerate(self.active)
+                   if r is not None and self._slot_shard(s) == shard]
         if not victims:
             if self._pump:
                 # pumped prefills hold reservations and will bind, serve
                 # and retire — admission is delayed, not impossible
                 return False
+            if self._n_data > 1 and any(r is not None for r in self.active):
+                # other shards still serve; this shard just waits (a
+                # retire elsewhere can't help it, but a spill-free wait
+                # is not impossibility — the caller keeps FIFO order)
+                return False
             # nothing active and nothing left to spill: no future retire
             # or spill can ever free pages for this reservation
             raise AdmissionImpossible(
-                head, need, self.kv.pool.num_pages,
+                head, need, self._shard_pages(),
                 "no active slots to retire and no spillable reservations")
         slot = max(victims, key=lambda s: int(self._slot_steps[s]))
         self.preempt(slot, spill=True, requeue="tail")
@@ -473,7 +584,7 @@ class ServeEngine:
         tier and release its pool reservation (resume re-reserves and
         runs the checksum-verified readahead)."""
         self.kv.spill_request(rid)
-        self._reserved_total -= self._reserved.pop(rid)
+        self._unreserve(rid)
         self._spilled.add(rid)
         self.stats["spilled_requests"] += 1
 
@@ -505,7 +616,7 @@ class ServeEngine:
                 # snapshotted at dispatch and cannot reference this rid)
                 self.kv.release(rid)
             if rid in self._reserved:
-                self._reserved_total -= self._reserved.pop(rid)
+                self._unreserve(rid)
         self._preempted.pop(rid, None)
         self._spilled.discard(rid)
 
@@ -548,10 +659,12 @@ class ServeEngine:
         req.t_admit = time.perf_counter()
         logits, caches = self._prefill_forward(req.prompt)
         if self.paged:
-            # chop the prefill cache into pages instead of a batch write
-            self.kv.add_request(req.rid)
-            self._reserved[req.rid] = self._pages_for(req)
-            self._reserved_total += self._reserved[req.rid]
+            # chop the prefill cache into pages instead of a batch write;
+            # the request binds to its slot's data shard — page claims
+            # come from that shard's free list from here on
+            shard = self._slot_shard(slot)
+            self.kv.add_request(req.rid, shard=shard)
+            self._reserve(req.rid, self._pages_for(req), shard)
             self.kv.ingest_prefill(req.rid, caches, s)
             if self.fused:
                 # admission-time device sync: pages (HOT partials
@@ -677,7 +790,7 @@ class ServeEngine:
                 self.active[slot] = None
                 if self.paged:
                     self.kv.release(req.rid)
-                    self._reserved_total -= self._reserved.pop(req.rid)
+                    self._unreserve(req.rid)
 
     def _log_latency(self, req: Request) -> None:
         if req.t_submit <= 0.0:
@@ -790,7 +903,29 @@ class ServeEngine:
         return n_active
 
     def _step_decode(self, slot_rids: list, n_active: int) -> int:
-        if self.fused:
+        if self.fused and self._step_mesh is not None:
+            # mesh-sharded hot path: decode + append + state re-bind run
+            # as ONE jit(shard_map) program, each data shard reading and
+            # scattering only its own page range.  Targets are claimed
+            # BEFORE step_meta — the claim is host metadata only, and a
+            # freshly claimed HOT page has fill 0, so every key slot it
+            # could cover is masked and the online-softmax accumulator is
+            # bit-exactly unchanged: same tokens as the single-device
+            # meta->decode->claim->append order.
+            targets = self.kv.claim_append_targets(slot_rids)
+            meta = self.kv.step_meta(slot_rids, self.max_len)
+            logits, toks_dev, self.kv.dev.planes, self.kv.dev_states = \
+                self._step_mesh(
+                    self.params, self.kv.dev.planes, self.kv.dev_states,
+                    meta, jnp.asarray(self.last_tokens),
+                    jnp.asarray(self.positions), targets)
+            self.kv.note_appended(slot_rids)
+            # apack: allow-transfer(the step's one sanctioned sync: token ids
+            # must reach the host for EOS/retire — the greedy argmax runs
+            # inside the sharded program, so this pulls batch int32s, not
+            # the [batch, vocab] logits)
+            toks = np.asarray(toks_dev, np.int32)
+        elif self.fused:
             # device-resident hot path: pages stay on device, attention
             # gather-decodes them in the fused kernel, and the new token's
             # K/V scatters into the pool planes on-device — the only
@@ -967,10 +1102,10 @@ class ServeEngine:
             rid = req.rid
             if rid in self._preempted and rid in self._spilled:
                 need = self._pages_for(req)
-                if self._reserved_total + need > self.kv.pool.num_pages:
+                # async scheduler is single-shard (mesh rejects it)
+                if self._shard_reserved[0] + need > self._shard_pages():
                     return                 # no headroom this step
-                self._reserved[rid] = need
-                self._reserved_total += need
+                self._reserve(rid, need, 0)
                 try:
                     # apack: allow-phase(restores a parked spilled request into
                     # fresh pool slots; the in-flight step was dispatched
@@ -993,8 +1128,7 @@ class ServeEngine:
         req.t_admit = time.perf_counter()
         logits, caches = self._prefill_forward(req.prompt)
         self.kv.add_request(req.rid)
-        self._reserved[req.rid] = need
-        self._reserved_total += need
+        self._reserve(req.rid, need, 0)     # async is single-shard
         self._pump[req.rid] = _PendingPrefill(
             req=req, s=len(req.prompt), logits=logits, caches=caches)
 
@@ -1142,7 +1276,7 @@ class ServeEngine:
             if stalled > 2 * self.pressure_backoff_max:
                 head = self.queue[0]
                 need = self._pages_for(head) if self.paged else 0
-                pool = self.kv.pool.num_pages if self.paged else 0
+                pool = self._shard_pages() if self.paged else 0
                 raise AdmissionImpossible(
                     head, need, pool,
                     f"{stalled} consecutive no-progress steps with zero "
@@ -1167,6 +1301,12 @@ class ServeEngine:
         out["kv_pages_evicted"] = self.kv.pool.evict_count
         out["kv_fused"] = self.fused
         out["transfers"] = dict(self.kv.transfers)
+        if self._n_data > 1:
+            # per-shard accounting (mesh mode): free-list depth and live
+            # reservations per data shard — the invariants tests gate on
+            out["kv_shard_free"] = [self.kv.pool.free_count_shard(s)
+                                    for s in range(self._n_data)]
+            out["kv_shard_reserved"] = list(self._shard_reserved)
         # spill tier: own stream (never folded into read ratios) + the
         # per-request accounting of what is parked on host right now
         out["kv_spill"] = out["kv_streams"]["spill"]

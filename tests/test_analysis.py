@@ -115,6 +115,32 @@ class TestBoundaryPass:
         """})
         assert codes(run_pass(root, "boundary")) == ["host-materialize"]
 
+    def test_shard_map_body_seeded_as_traced_root(self, tmp_path):
+        # nothing annotates the body — the pass must seed it from the
+        # shard_map(...) call site (params are per-shard device operands)
+        root = make_tree(tmp_path, {"m.py": """
+            import numpy as np
+            from jax.experimental.shard_map import shard_map
+
+            def build(mesh):
+                def _body(planes, tokens):
+                    return np.asarray(planes)     # host-materialize
+                return shard_map(_body, mesh=mesh, in_specs=(),
+                                 out_specs=())
+        """})
+        assert codes(run_pass(root, "boundary")) == ["host-materialize"]
+
+    def test_shard_map_lambda_body_ignored(self, tmp_path):
+        # non-Name bodies can't resolve; the pass must skip, not crash
+        root = make_tree(tmp_path, {"m.py": """
+            from jax.experimental.shard_map import shard_map
+
+            def build(mesh):
+                return shard_map(lambda x: x, mesh=mesh, in_specs=(),
+                                 out_specs=())
+        """})
+        assert run_pass(root, "boundary") == []
+
     def test_suppression_without_reason_is_a_finding(self, tmp_path):
         root = make_tree(tmp_path, {"m.py": """
             import jax
@@ -350,6 +376,28 @@ class TestPallasPass:
                                   "(8, 8)")
         root = make_tree(tmp_path, {"k.py": bad})
         assert "scratch-shape" in codes(run_pass(root, "pallas"))
+
+    def test_mesh_op_in_kernel(self, tmp_path):
+        # mesh collectives/axis queries inside a kernel body break under
+        # shard_map (the kernel runs per shard with no mesh axes bound)
+        bad = PALLAS_GOOD.replace(
+            "import functools", "import functools\n    import jax")
+        bad = bad.replace(
+            "o_ref[...] = a_ref[...]",
+            'o_ref[...] = a_ref[...] * jax.lax.axis_index("data")')
+        root = make_tree(tmp_path, {"k.py": bad})
+        assert codes(run_pass(root, "pallas")) == ["mesh-op-in-kernel"]
+
+    def test_mesh_op_outside_kernel_clean(self, tmp_path):
+        # axis_index in the *wrapper* (host-side shard_map body) is fine
+        good = PALLAS_GOOD.replace(
+            "import functools", "import functools\n    import jax")
+        good = good.replace(
+            "        return pl.pallas_call(_kernel",
+            '        d0 = jax.lax.axis_index("data")\n'
+            "        return pl.pallas_call(_kernel")
+        root = make_tree(tmp_path, {"k.py": good})
+        assert run_pass(root, "pallas") == []
 
 
 # --------------------------------------------------------------- jit-cache

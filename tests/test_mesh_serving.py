@@ -1,0 +1,398 @@
+"""Mesh-sharded paged serving (DESIGN.md §11).
+
+Two tiers:
+
+* host-only unit tests — per-shard page pool semantics, `mesh=`
+  admission validation (FakeMesh: every case raises before any device
+  work), fused-grid page bucketing, table-row compaction and step-meta
+  width — all run on the normal 1-device session;
+* subprocess integration tests (``@pytest.mark.slow``) — forced
+  8-device host platform via ``XLA_FLAGS`` in a child process (the flag
+  must never leak into the main session), asserting sharded greedy
+  tokens are bit-identical to the single-device engine, per-shard page
+  ranges, per-shard free-list accounting and the steady-state
+  zero-``device_get`` invariant.
+"""
+import dataclasses
+import logging
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.kernels import paged_decode
+from repro.models import model as M
+from repro.models import modules as mm
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def run_py(code: str, devices: int = 8, timeout: int = 900) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = str(REPO / "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def apack_cfg(arch="qwen3-1.7b"):
+    return dataclasses.replace(configs.get_smoke_config(arch),
+                               kv_cache_dtype="apack-int8")
+
+
+# ------------------------------------------------- per-shard page pool
+class TestShardedPool:
+    def _pool(self, num_pages=16, n_shards=4):
+        return mm.KVPagePool(num_pages, page_size=4, kv_heads=2,
+                             head_dim=8, n_shards=n_shards)
+
+    def test_alloc_stays_in_shard_range(self):
+        pool = self._pool()
+        for shard in range(4):
+            lo, hi = shard * 4, (shard + 1) * 4
+            for _ in range(4):
+                pid = pool.alloc(shard)
+                assert pid is not None and lo <= pid < hi
+                assert pool.shard_of(pid) == shard
+
+    def test_exhausted_shard_returns_none_not_steal(self):
+        pool = self._pool()
+        for _ in range(4):
+            assert pool.alloc(1) is not None
+        # shard 1 dry: its alloc fails while every other shard still serves
+        assert pool.alloc(1) is None
+        assert pool.free_count_shard(1) == 0
+        for shard in (0, 2, 3):
+            assert pool.alloc(shard) is not None
+
+    def test_free_routes_back_to_owning_shard(self):
+        pool = self._pool()
+        pids = [pool.alloc(2) for _ in range(4)]
+        assert pool.free_count_shard(2) == 0
+        for pid in pids:
+            pool.free(pid)
+        assert pool.free_count_shard(2) == 4
+        # and the freed pages come back out of shard 2, nowhere else
+        assert pool.shard_of(pool.alloc(2)) == 2
+
+    def test_free_count_is_sum_of_shards(self):
+        pool = self._pool()
+        pool.alloc(0), pool.alloc(3)
+        assert pool.free_count == sum(pool.free_count_shard(s)
+                                      for s in range(4))
+        assert pool.free_count == 14
+
+    def test_indivisible_pool_rejected(self):
+        with pytest.raises(ValueError, match="split evenly"):
+            self._pool(num_pages=14, n_shards=4)
+
+    def test_single_shard_is_legacy_pool(self):
+        # n_shards=1 must be the old global free list bit-for-bit:
+        # lowest page id first
+        pool = self._pool(n_shards=1)
+        assert [pool.alloc() for _ in range(4)] == [0, 1, 2, 3]
+
+
+# ------------------------------------------------- mesh= admission gate
+class FakeMesh:
+    """Axis sizes only — what the constructor validation consumes.
+    Every test below must raise *before* the engine touches the mesh as
+    a real device mesh."""
+    def __init__(self, **shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+class TestMeshValidation:
+    def _engine(self, cfg, mesh, **kw):
+        from repro.serve import ServeEngine
+        params = M.init_params(cfg, __import__("jax").random.PRNGKey(0))
+        return ServeEngine(cfg, params, max_batch=8, max_len=32,
+                           mesh=mesh, **kw)
+
+    def test_requires_fused_paged_kv(self):
+        cfg = dataclasses.replace(configs.get_smoke_config("qwen3-1.7b"),
+                                  kv_cache_dtype="bfloat16")
+        with pytest.raises(ValueError, match="fused paged apack-int8"):
+            self._engine(cfg, FakeMesh(data=2, model=1))
+
+    def test_requires_fused_not_materialize(self):
+        with pytest.raises(ValueError, match="fused paged apack-int8"):
+            self._engine(apack_cfg(), FakeMesh(data=2, model=1),
+                         kv_fused=False)
+
+    def test_requires_sync_scheduler(self):
+        with pytest.raises(ValueError, match="scheduler='sync'"):
+            self._engine(apack_cfg(), FakeMesh(data=2, model=1),
+                         scheduler="async")
+
+    def test_requires_data_axis(self):
+        with pytest.raises(ValueError, match="'data' axis"):
+            self._engine(apack_cfg(), FakeMesh(model=2))
+
+    def test_max_batch_must_divide_over_data(self):
+        with pytest.raises(ValueError, match="max_batch"):
+            self._engine(apack_cfg(), FakeMesh(data=3, model=1))
+
+    def test_kv_heads_must_divide_over_model(self):
+        # qwen3 smoke has 2 kv heads; a 3-way model axis cannot split them
+        with pytest.raises(ValueError, match="num_kv_heads"):
+            self._engine(apack_cfg(), FakeMesh(data=1, model=3))
+
+
+# ------------------------------------------------- fused-grid bucketing
+class TestPageBucket:
+    def test_powers_of_two(self):
+        assert paged_decode.page_bucket(1) == 1
+        assert paged_decode.page_bucket(3) == 4
+        assert paged_decode.page_bucket(9) == 16
+        assert paged_decode.page_bucket(129) == 256
+
+    def test_beyond_table_grows_power_of_two(self):
+        assert paged_decode.page_bucket(1025) == 2048
+        assert paged_decode.page_bucket(5000) == 8192
+
+    def test_recompile_storm_warns(self, monkeypatch, caplog):
+        monkeypatch.setattr(paged_decode, "_seen_page_buckets", set())
+        monkeypatch.setattr(paged_decode, "PAGE_BUCKET_WARN_THRESHOLD", 3)
+        with caplog.at_level(logging.WARNING,
+                             logger="repro.kernels.paged_decode"):
+            for n in (1, 2, 4):
+                paged_decode.page_bucket(n)
+            assert not caplog.records          # at threshold: quiet
+            paged_decode.page_bucket(8)        # 4th distinct size: warn
+            assert len(caplog.records) == 1
+            assert "recompile storm" in caplog.records[0].message
+            paged_decode.page_bucket(8)        # repeat size: no new warn
+            assert len(caplog.records) == 1
+
+
+class TestMetaPagesBucketing:
+    def _kv(self, tokens_per_rid):
+        cfg = apack_cfg()
+        kv = M.PagedKVCache(
+            cfg, num_pages=4 * M.PagedKVCache.pages_for_config(cfg, 64, 4),
+            page_size=4, calib_pages=2)
+        rng = np.random.default_rng(3)
+        h, dh, n = kv.pool.kv_heads, kv.pool.head_dim, kv.n_layers
+        for rid, toks in tokens_per_rid.items():
+            kv.add_request(rid)
+            for _ in range(toks):
+                kv.append_token(
+                    rid,
+                    rng.integers(-127, 128, (n, h, dh)).astype(np.int8),
+                    rng.integers(-127, 128, (n, h, dh)).astype(np.int8),
+                    rng.uniform(0.01, 0.02, (n, h)).astype(np.float32),
+                    rng.uniform(0.01, 0.02, (n, h)).astype(np.float32))
+        return kv
+
+    @staticmethod
+    def _pid_width(meta):
+        for md in list(meta["prefix"]) + list(meta["blocks"]):
+            if md:
+                return np.asarray(md["pid"]).shape[-1]
+        raise AssertionError("no attention metadata")
+
+    def test_static_worst_case_without_slots(self):
+        kv = self._kv({})
+        assert kv.meta_pages(64, None) == kv.pages_per_seq(64)
+
+    def test_short_requests_get_small_bucket(self):
+        kv = self._kv({0: 5, 1: 3})          # 2 and 1 occupied pages
+        pmax = kv.pages_per_seq(64)
+        assert kv.meta_pages(64, [0, 1, None]) == 2 < pmax
+        meta = kv.step_meta([0, 1, None], 64)
+        assert self._pid_width(meta) == 2
+
+    def test_bucket_caps_at_worst_case(self):
+        kv = self._kv({0: 5})
+        assert kv.meta_pages(8, [0]) <= kv.pages_per_seq(8)
+
+
+# ------------------------------------------------- table-row compaction
+class TestTableRowCompaction:
+    def _kv(self):
+        cfg = apack_cfg()
+        kv = M.PagedKVCache(
+            cfg, num_pages=4 * M.PagedKVCache.pages_for_config(cfg, 64, 4),
+            page_size=4, calib_pages=2,
+            refresh_every_pages=4, refresh_min_pages=1)
+        rng = np.random.default_rng(7)
+        h, dh, n = kv.pool.kv_heads, kv.pool.head_dim, kv.n_layers
+
+        def extend(rid, toks):
+            for _ in range(toks):
+                kv.append_token(
+                    rid,
+                    rng.integers(-127, 128, (n, h, dh)).astype(np.int8),
+                    rng.integers(-127, 128, (n, h, dh)).astype(np.int8),
+                    rng.uniform(0.01, 0.02, (n, h)).astype(np.float32),
+                    rng.uniform(0.01, 0.02, (n, h)).astype(np.float32))
+        for rid, toks in ((0, 19), (1, 10)):
+            kv.add_request(rid)
+            extend(rid, toks)
+        return kv, extend
+
+    def test_dead_generation_rows_are_reclaimed(self):
+        kv, extend = self._kv()
+        assert kv.maybe_refresh()
+        assert kv.repack_pending(force=True) > 0
+        assert set(kv.gen_rows) == {0, 1}
+        before = kv.materialize([0, 1], 64)
+        rows_before = kv.n_table_rows
+        # second refresh re-packs every gen-1 page under gen 2 -> gen 1
+        # owns no PACKED page and its stacked-table row is reclaimed
+        extend(0, 17), extend(1, 17)
+        assert kv.maybe_refresh()
+        assert kv.repack_pending(force=True) > 0
+        assert 1 not in kv.gen_rows, kv.gen_rows
+        assert set(kv.gen_rows) == {0, kv.generation}
+        # the freed row slot was reused, not appended after
+        assert kv.n_table_rows == rows_before
+        gens = {int(kv.page_gen[p]) for s in kv._packed for p in s}
+        assert gens == {kv.generation}
+        # decode of the pre-compaction tokens is unchanged over pages
+        # already sealed at the 'before' shot (time axis 2; both requests
+        # had sealed tokens 0..7 — later tokens sat in a HOT page whose
+        # sealing legitimately requantizes per-token to per-page scales)
+        after = kv.materialize([0, 1], 64)
+        for a, b in zip(before["blocks"], after["blocks"]):
+            if "k" not in a:
+                continue
+            for f in ("k", "v", "k_scale", "v_scale"):
+                np.testing.assert_array_equal(
+                    np.asarray(a[f])[:, :, :8], np.asarray(b[f])[:, :, :8])
+
+
+# ------------------------------------------ multi-device (subprocess)
+_SERVE_COMMON = r"""
+import dataclasses
+import numpy as np
+import jax
+from repro import configs
+from repro.models import model as M
+from repro.serve import ServeEngine, Request
+
+def apack_cfg(arch):
+    return dataclasses.replace(configs.get_smoke_config(arch),
+                               kv_cache_dtype="apack-int8")
+
+def make(cfg, params, mesh, **kw):
+    eng = ServeEngine(cfg, params, max_batch=8, max_len=32, mesh=mesh, **kw)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, 9).astype(np.int32),
+                    max_new_tokens=8)
+            for i in range(8)]
+    for r in reqs:
+        eng.submit(r)
+    return eng, reqs
+
+def drain(eng, reqs):
+    eng.run_until_drained()
+    assert all(r.done and r.error is None for r in reqs), \
+        [(r.rid, r.error) for r in reqs]
+    return [list(r.tokens) for r in reqs]
+"""
+
+
+@pytest.mark.slow
+def test_mesh_8x1_tokens_bit_identical_and_invariants():
+    """8-way data-parallel serving: greedy tokens bit-identical to the
+    single-device engine; mid-serve every request's pages live inside
+    its slot-shard's contiguous page range; a steady-state step makes
+    zero ``jax.device_get`` calls and moves zero accounted d2h bytes;
+    drained free lists restore per shard."""
+    print(run_py(_SERVE_COMMON + r"""
+cfg = apack_cfg("qwen3-1.7b")
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+eng1, reqs1 = make(cfg, params, None)
+single = drain(eng1, reqs1)
+
+mesh = jax.make_mesh((8, 1), ("data", "model"))
+eng, reqs = make(cfg, params, mesh)
+for _ in range(3):
+    eng.step()
+# per-shard page-range invariant: slot s's request allocates only from
+# shard (s // slots_per_shard)'s contiguous range
+pps = eng.kv.pool.pages_per_shard
+for slot, r in enumerate(eng.active):
+    if r is None:
+        continue
+    shard = slot // (eng.max_batch // 8)
+    for pids in eng.kv.page_tables[r.rid]:
+        assert all(p // pps == shard for p in pids), (slot, shard, pids)
+st = eng.kv_stats()
+assert len(st["kv_shard_free"]) == 8 and len(st["kv_shard_reserved"]) == 8
+assert sum(st["kv_shard_reserved"]) == eng._reserved_total
+# steady state (positions 12 -> mid-page everywhere at page_size=16):
+# zero device_get, zero accounted d2h traffic
+d2h0 = st["transfers"]["d2h_bytes"], st["transfers"]["d2h_calls"]
+calls = []
+orig = jax.device_get
+jax.device_get = lambda *a, **k: (calls.append(a), orig(*a, **k))[1]
+try:
+    eng.step()
+finally:
+    jax.device_get = orig
+assert not calls, f"device_get on the steady-state sharded step: {calls}"
+tr = eng.kv_stats()["transfers"]
+assert (tr["d2h_bytes"], tr["d2h_calls"]) == d2h0
+sharded = drain(eng, reqs)
+assert sharded == single, (sharded, single)
+# drained: every page back on its own free list
+assert [eng.kv.pool.free_count_shard(s) for s in range(8)] == [pps] * 8
+print("MESH 8x1 TOKENS IDENTICAL OK")
+"""))
+
+
+@pytest.mark.slow
+def test_mesh_4x2_tensor_parallel_parity():
+    """data×model = 4×2: kv-heads split over the model axis inside the
+    fused gather-decode kernel, tokens still bit-identical — on the
+    uniform-attention arch and the hybrid global/local/recurrent one."""
+    print(run_py(_SERVE_COMMON + r"""
+for arch in ("qwen3-1.7b", "hetero-serve-smoke"):
+    cfg = apack_cfg(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng1, reqs1 = make(cfg, params, None)
+    single = drain(eng1, reqs1)
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    eng, reqs = make(cfg, params, mesh)
+    assert eng._n_model == 2
+    sharded = drain(eng, reqs)
+    assert sharded == single, (arch, sharded, single)
+    print("MESH 4x2 TP OK", arch)
+"""))
+
+
+@pytest.mark.slow
+def test_mesh_preempt_spill_resume_parity():
+    """Preempt-with-spill and resume on the sharded engine: same slot
+    preempted at the same step on both engines, final tokens still
+    bit-identical (spilled requests may re-adopt a different shard —
+    byte-identical continuation is shard-independent)."""
+    print(run_py(_SERVE_COMMON + r"""
+cfg = apack_cfg("hetero-serve-smoke")
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+def serve(mesh):
+    eng, reqs = make(cfg, params, mesh)
+    for _ in range(3):
+        eng.step()
+    eng.preempt(2, spill=True)
+    eng.preempt(5, spill=False)
+    return drain(eng, reqs)
+
+single = serve(None)
+sharded = serve(jax.make_mesh((8, 1), ("data", "model")))
+assert sharded == single, (sharded, single)
+print("MESH PREEMPT/SPILL/RESUME OK")
+"""))

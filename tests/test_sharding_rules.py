@@ -10,8 +10,7 @@ from repro.models import sharding as sh
 @pytest.fixture(scope="module")
 def mesh():
     # 1 device is enough: fit_spec only reads axis sizes from the mesh shape
-    return jax.sharding.Mesh(
-        jax.numpy.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    return jax.make_mesh((1, 1), ("data", "model"))
 
 
 class FakeMesh:
@@ -65,3 +64,48 @@ def test_moe_ep_variant_switches_expert_axis():
 def test_constrain_noop_without_mesh():
     x = jnp.ones((4, 4, 4))
     assert sh.constrain(x, "residual") is x
+
+
+# ------------------------------------------------- serving plane rules
+def test_plane_pspec_rules():
+    # page planes shard their page axis over "data" (contiguous per-shard
+    # page ranges) and, where a head axis exists, heads over "model"
+    assert sh.plane_pspec("tok_k") == P("data", None, "model", None)
+    assert sh.plane_pspec("cold_v") == P("data", None, "model", None)
+    assert sh.plane_pspec("tok_sk") == P("data", None, "model")
+    assert sh.plane_pspec("pscale_v") == P("data", "model")
+    # APack streams interleave heads inside the coded words — no head
+    # axis to split, so the compressed planes shard pages only
+    assert sh.plane_pspec("sym_k") == P("data", None, None)
+    assert sh.plane_pspec("ofs_v") == P("data", None, None)
+    assert sh.plane_pspec("stored_k") == P("data", None)
+    # stacked decode tables replicate (every shard decodes any page)
+    assert sh.plane_pspec("vm") == P(None, None)
+    assert sh.plane_pspec("ol") == P(None, None)
+    assert sh.plane_pspec("cum") == P(None, None)
+
+
+def test_plane_pspec_unknown_name_raises():
+    with pytest.raises(KeyError, match="no plane partition rule"):
+        sh.plane_pspec("nope")
+
+
+def test_plane_pspecs_full_rule_set():
+    specs = sh.plane_pspecs()
+    assert set(specs) == set(sh._PLANE_RULES)
+    fake = {"tok_k": None, "vm": None}
+    assert set(sh.plane_pspecs(fake)) == {"tok_k", "vm"}
+
+
+def test_plane_shardings_drop_indivisible(mesh):
+    # the 1x1 fixture mesh divides everything; a fat fake model axis
+    # must drop the head axis (replicated heads), never raise
+    planes = {"tok_k": jnp.zeros((8, 4, 2, 16), jnp.int8),
+              "sym_k": jnp.zeros((8, 2, 32), jnp.uint32),
+              "vm": jnp.zeros((4, 256), jnp.uint32)}
+    named = sh.plane_shardings(mesh, planes)
+    assert set(named) == set(planes)
+    assert named["tok_k"].spec == P("data", None, "model", None)
+    m = FakeMesh(data=1, model=16)           # 2 heads % 16 != 0
+    assert sh.fit_spec(sh.plane_pspec("tok_k"), (8, 4, 2, 16), m) == \
+        P("data", None, None, None)
