@@ -28,6 +28,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import format as fmt
+from repro.core import quant
 from repro.core.tables import ApackTable, find_table, histogram
 from .apack_decode import decode_block
 from . import ref as _ref
@@ -36,6 +37,10 @@ I32 = jnp.int32
 U32 = jnp.uint32
 TILE_N = 128      # streams per tile == lane count
 DEFAULT_TILE_K = 512
+# Smallest element count for which the serving layer compresses a weight
+# tensor.  Shared by ``serve.compress_params``, ``model.pack_weights`` and
+# the ``--weight-min-size`` CLI flag — one default, no silent divergence.
+DEFAULT_WEIGHT_MIN_SIZE = 16384
 
 
 @jax.tree_util.register_pytree_node_class
@@ -73,15 +78,21 @@ class CompressedLinear:
         return -(-self.n // TILE_N) * TILE_N
 
 
-def compress_linear(w: np.ndarray, tile_k: int = DEFAULT_TILE_K,
-                    table: ApackTable | None = None) -> CompressedLinear:
-    """Quantize (symmetric int8 per-channel) + APack-compress a weight matrix."""
-    w = np.asarray(w, np.float32)
-    k, n = w.shape
-    amax = np.maximum(np.abs(w).max(axis=0), 1e-12)      # per column
-    scale = amax / 127.0
-    q = np.clip(np.round(w / scale[None, :]), -127, 127).astype(np.int64)
-    u = (q & 0xFF).astype(np.uint8)                      # two's complement view
+def compress_quantized(q: np.ndarray, scale: np.ndarray,
+                       tile_k: int = DEFAULT_TILE_K,
+                       table: ApackTable | None = None) -> CompressedLinear:
+    """APack-compress an already-quantized int8 weight matrix.
+
+    ``q``: int8-valued [K, N]; ``scale``: f32 [N] per-output-column dequant
+    scale.  This is the shared encode tail of ``compress_linear`` and the
+    serving layer's ``pack_weights`` — both quantize through
+    ``quant.quantize_symmetric`` first, so a tensor compressed by either
+    path dequantizes bit-identically through the other."""
+    q = np.asarray(q)
+    k, n = q.shape
+    scale = np.asarray(scale, np.float32).reshape(-1)
+    assert scale.shape == (n,), (scale.shape, n)
+    u = (q.astype(np.int64) & 0xFF).astype(np.uint8)     # two's complement view
     k_pad = -(-k // tile_k) * tile_k
     n_pad = -(-n // TILE_N) * TILE_N
     up = np.zeros((k_pad, n_pad), np.uint8)              # pad with 0 == q 0
@@ -106,10 +117,62 @@ def compress_linear(w: np.ndarray, tile_k: int = DEFAULT_TILE_K,
                             tile_k=tile_k, payload_bits=payload)
 
 
+def compress_linear(w: np.ndarray, tile_k: int = DEFAULT_TILE_K,
+                    table: ApackTable | None = None) -> CompressedLinear:
+    """Quantize (symmetric int8 per output column) + APack-compress a
+    weight matrix.
+
+    Quantization goes through ``quant.quantize_symmetric(..., axis=-1)``
+    — the same call ``serve.compress_params`` makes — so the two weight
+    codecs share one convention (per-channel over the LAST axis, reduced
+    over all leading axes) and cross-path dequantization is bit-exact.
+    The previous private ``np.abs(w).max(axis=0)`` formula was the
+    quantization-axis mismatch bug for >2-D tensors."""
+    w = np.asarray(w, np.float32)
+    q, qp = quant.quantize_symmetric(jnp.asarray(w), axis=-1)
+    return compress_quantized(np.asarray(q),
+                              np.asarray(qp.scale, np.float32).reshape(-1),
+                              tile_k, table)
+
+
+def stack_compressed(cws: list[CompressedLinear]) -> CompressedLinear:
+    """Stack per-layer ``CompressedLinear``s into one whose array leaves
+    carry a leading layer axis — the shape ``jax.lax.scan`` consumes for
+    the scanned block stack (scan slices pytree leaves per iteration and
+    rebuilds a per-layer ``CompressedLinear`` with the shared static aux).
+
+    Per-layer sym/ofs planes are zero-padded to the stack's max word
+    count (``decode_block`` reads exactly ``tile_k`` values per stream,
+    so trailing pad words are never touched).  Static aux (k, n, tile_k)
+    must match across layers; ``payload_bits`` becomes the stack total
+    (it only feeds traffic accounting)."""
+    assert cws, "empty stack"
+    k, n, tile_k = cws[0].k, cws[0].n, cws[0].tile_k
+    assert all((c.k, c.n, c.tile_k) == (k, n, tile_k) for c in cws)
+    ws = max(c.sym_plane.shape[0] for c in cws)
+    wo = max(c.ofs_plane.shape[0] for c in cws)
+
+    def pad_rows(p, rows):
+        return jnp.pad(p, ((0, rows - p.shape[0]), (0, 0)))
+
+    return CompressedLinear(
+        sym_plane=jnp.stack([pad_rows(c.sym_plane, ws) for c in cws]),
+        ofs_plane=jnp.stack([pad_rows(c.ofs_plane, wo) for c in cws]),
+        stored=jnp.stack([c.stored for c in cws]),
+        v_min=jnp.stack([c.v_min for c in cws]),
+        ol=jnp.stack([c.ol for c in cws]),
+        cum=jnp.stack([c.cum for c in cws]),
+        scale=jnp.stack([c.scale for c in cws]),
+        k=k, n=n, tile_k=tile_k,
+        payload_bits=sum(c.payload_bits for c in cws))
+
+
 def _fused_kernel(x_ref, sym_ref, ofs_ref, stored_ref, vmin_ref, ol_ref,
-                  cum_ref, scale_ref, out_ref, w_tile_ref, *, tile_k: int):
+                  cum_ref, scale_ref, out_ref, w_tile_ref, acc_ref, *,
+                  tile_k: int, nk: int):
     kt = pl.program_id(1)
     i = pl.program_id(2)
+    block_m = x_ref.shape[0]
 
     # The grid iterates M innermost, so each compressed weight tile (j, kt)
     # is decoded exactly once — at its first row-block visit — and the
@@ -124,16 +187,29 @@ def _fused_kernel(x_ref, sym_ref, ofs_ref, stored_ref, vmin_ref, ol_ref,
         signed = jnp.where(vals >= 128, vals - 256, vals).astype(jnp.float32)
         w_tile_ref[...] = signed.T * scale_ref[...][None, :]   # [E, NS] f32
 
-    acc = jnp.dot(x_ref[...].astype(jnp.float32), w_tile_ref[...],
-                  preferred_element_type=jnp.float32)
+    part = jnp.dot(x_ref[...].astype(jnp.float32), w_tile_ref[...],
+                   preferred_element_type=jnp.float32)
+
+    # Accumulate in a VMEM scratch strip, not in out_ref: the out-block
+    # revisits across kt are non-consecutive (other M-blocks run in
+    # between), and Mosaic only guarantees a revisited output block's
+    # prior contents for *consecutive* grid steps.  Scratch persists for
+    # the whole kernel, so the strip holds each row-block's running sum
+    # across the interleaved visits; out_ref is written exactly once, at
+    # the final K-tile.
+    rows = pl.ds(i * block_m, block_m)
 
     @pl.when(kt == 0)
     def _init():
-        out_ref[...] = acc
+        acc_ref[rows, :] = part
 
     @pl.when(kt > 0)
     def _accum():
-        out_ref[...] += acc
+        acc_ref[rows, :] += part
+
+    @pl.when(kt == nk - 1)
+    def _flush():
+        out_ref[...] = acc_ref[rows, :]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_m"))
@@ -146,11 +222,11 @@ def compressed_matmul(x: jax.Array, cw: CompressedLinear,
     of revisiting output blocks once per K-tile — the decode is orders of
     magnitude more expensive than the extra out-block traffic.
 
-    NOTE: the out-block revisits across kt are non-consecutive (other
-    M-blocks run in between).  Interpret mode — the validated contract on
-    CPU — handles this exactly; before enabling compiled TPU mode, confirm
-    Mosaic re-fetches revisited output blocks, or switch the accumulation
-    to a dedicated VMEM scratch accumulator flushed at kt == nk - 1."""
+    Partial products accumulate in a VMEM scratch strip [m_pad, TILE_N]
+    and flush to the output block exactly once, at kt == nk - 1, so the
+    kernel never relies on Mosaic preserving a revisited output block
+    across non-consecutive grid steps — safe for compiled TPU mode, and
+    bit-identical to interpret mode (same kt-major summation order)."""
     m, k = x.shape
     assert k == cw.k, f"K mismatch: {k} vs {cw.k}"
     k_pad, n_pad = cw.k_pad, cw.n_pad
@@ -160,7 +236,7 @@ def compressed_matmul(x: jax.Array, cw: CompressedLinear,
     ws, wo = cw.sym_plane.shape[0], cw.ofs_plane.shape[0]
     grid = (nn, nk, m_pad // block_m)
     out = pl.pallas_call(
-        functools.partial(_fused_kernel, tile_k=cw.tile_k),
+        functools.partial(_fused_kernel, tile_k=cw.tile_k, nk=nk),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_m, cw.tile_k), lambda j, kt, i: (i, kt)),
@@ -174,7 +250,8 @@ def compressed_matmul(x: jax.Array, cw: CompressedLinear,
         ],
         out_specs=pl.BlockSpec((block_m, TILE_N), lambda j, kt, i: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m_pad, n_pad), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((cw.tile_k, TILE_N), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((cw.tile_k, TILE_N), jnp.float32),
+                        pltpu.VMEM((m_pad, TILE_N), jnp.float32)],
         interpret=interpret,
     )(xp, cw.sym_plane, cw.ofs_plane, cw.stored, cw.v_min, cw.ol, cw.cum,
       cw.scale)

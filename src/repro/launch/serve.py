@@ -15,7 +15,8 @@ import numpy as np
 
 from repro import configs
 from repro.models import model as M
-from repro.serve import ServeEngine, Request, compress_params, decompress_params
+from repro.serve import (DEFAULT_WEIGHT_MIN_SIZE, Request, ServeEngine,
+                         compress_params, decompress_params)
 
 
 def main() -> None:
@@ -27,6 +28,17 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--no-compress", action="store_true")
+    ap.add_argument("--weights", default=None, choices=["apack-int8"],
+                    help="serve directly from APack-packed weights: large "
+                         "projection/FFN matrices live in HBM as compressed "
+                         "planes and decode/prefill matmuls run through the "
+                         "fused decompress kernel (supersedes the "
+                         "checkpoint-style compress/decompress round-trip)")
+    ap.add_argument("--weight-min-size", type=int,
+                    default=DEFAULT_WEIGHT_MIN_SIZE,
+                    help="smallest element count compressed by either "
+                         "weight path (--weights and the checkpoint "
+                         "round-trip share this one default)")
     ap.add_argument("--kv", default=None,
                     choices=["bfloat16", "int8", "apack-int8"],
                     help="KV-cache mode (apack-int8 = paged + compressed)")
@@ -95,9 +107,12 @@ def main() -> None:
     if args.window_size is not None:
         cfg = dataclasses.replace(cfg, window_size=args.window_size)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
-    if not args.no_compress:
+    if not args.no_compress and not args.weights:
+        # checkpoint-style round-trip (legacy): compress, report, decompress
+        # back to dense.  --weights apack-int8 supersedes it — the packed
+        # planes ARE the weight store, no decompressed copy exists.
         t0 = time.time()
-        cp = compress_params(params, min_size=4096)
+        cp = compress_params(params, min_size=args.weight_min_size)
         print(f"APack weight compression: {cp.original_bytes/1e6:.1f} MB -> "
               f"{cp.compressed_bytes/1e6:.1f} MB "
               f"({cp.ratio:.2f}x, {time.time()-t0:.1f}s)")
@@ -114,6 +129,8 @@ def main() -> None:
     engine = ServeEngine(cfg, params, max_batch=args.max_batch,
                          max_len=args.prompt_len + args.max_new + 8,
                          mesh=mesh,
+                         weights=args.weights,
+                         weight_min_size=args.weight_min_size,
                          kv_page_size=args.kv_page_size,
                          kv_fused=not args.kv_materialize,
                          kv_refresh=args.kv_refresh,
@@ -140,6 +157,15 @@ def main() -> None:
     assert all(r.done for r in reqs)
     print(f"{engine.stats} in {dt:.1f}s "
           f"({engine.stats['generated']/max(dt,1e-9):.1f} tok/s)")
+    if args.weights:
+        ws = engine.weight_stats()
+        print(f"packed weight store: {ws['packed_tensors']} tensors, "
+              f"{ws['native_bytes']/1e6:.1f} MB native -> "
+              f"{(ws['payload_bytes'] + ws['scale_bytes'])/1e6:.1f} MB "
+              f"compressed (payload {ws['payload_bytes']/1e6:.1f} MB + "
+              f"scale {ws['scale_bytes']/1e6:.2f} MB); "
+              f"per-step weight reads x{ws['weight_ratio']:.3f} vs int8 "
+              f"dense, x{ws['native_ratio']:.3f} vs native")
     lat = engine.latency_stats()
     if lat["n"]:
         print(f"latency ({args.scheduler} scheduler, n={lat['n']}): "

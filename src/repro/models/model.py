@@ -120,10 +120,11 @@ def exact_param_count(cfg: ModelConfig) -> int:
 
 
 # ------------------------------------------------------------------ block
-def _ffn(cfg: ModelConfig, p: dict, h: jax.Array):
+def _ffn(cfg: ModelConfig, p: dict, h: jax.Array,
+         tp: tuple[str, int] | None = None):
     if cfg.num_experts > 0 and "router" in p["ffn"]:
         return m.moe(p["ffn"], h, cfg)
-    return m.mlp(p["ffn"], h, cfg), {}
+    return m.mlp(p["ffn"], h, cfg, tp=tp), {}
 
 
 def block_full(cfg: ModelConfig, kind: str, p: dict, h: jax.Array,
@@ -167,14 +168,15 @@ def block_full(cfg: ModelConfig, kind: str, p: dict, h: jax.Array,
 
 
 def _join_block(cfg: ModelConfig, p: dict, h: jax.Array, hn: jax.Array,
-                inner: jax.Array) -> jax.Array:
+                inner: jax.Array,
+                tp: tuple[str, int] | None = None) -> jax.Array:
     """Residual + FFN tail shared by the dense and paged decode blocks."""
     if "ffn" in p:
         if cfg.parallel_block:
-            f, _ = _ffn(cfg, p, hn)
+            f, _ = _ffn(cfg, p, hn, tp=tp)
             return h + inner + f
         h = h + inner
-        f, _ = _ffn(cfg, p, m.rms_norm(h, p["norm2"], cfg.norm_eps))
+        f, _ = _ffn(cfg, p, m.rms_norm(h, p["norm2"], cfg.norm_eps), tp=tp)
         return h + f
     return h + inner
 
@@ -215,7 +217,7 @@ def block_step_paged(cfg: ModelConfig, kind: str, p: dict, h: jax.Array,
     hn = m.rms_norm(h, p["norm1"], cfg.norm_eps)
     inner, new_kv = m.paged_attention_step(p["inner"], hn, planes, meta,
                                            pos, cfg, backend=backend, tp=tp)
-    return _join_block(cfg, p, h, hn, inner), new_kv
+    return _join_block(cfg, p, h, hn, inner, tp=tp), new_kv
 
 
 # ---------------------------------------------------------------- forward
@@ -305,12 +307,15 @@ def forward(cfg: ModelConfig, params: dict, batch: dict, *,
     return logits, {"prefix": prefix_caches, "blocks": caches}, aux
 
 
-def _head(cfg: ModelConfig, params: dict, h: jax.Array) -> jax.Array:
+def _head(cfg: ModelConfig, params: dict, h: jax.Array,
+          tp: tuple[str, int] | None = None) -> jax.Array:
     if cfg.tie_embeddings:
+        # tied embeddings stay dense (the same tensor serves the token
+        # lookup in ``embed_inputs``), so the head einsum is always dense
         logits = jnp.einsum("bsd,vd->bsv", h,
                             params["embed"].astype(h.dtype))
     else:
-        logits = h @ params["unembed"].astype(h.dtype)
+        logits = m.proj(h, params["unembed"], "bsd,dv->bsv", tp=tp)
     return shd.constrain(logits.astype(F32), "logits")
 
 
@@ -445,7 +450,7 @@ def decode_step_paged(cfg: ModelConfig, params: dict, planes: dict,
     h, new_blocks = jax.lax.scan(
         cycle_fn, h, (params["blocks"], meta["blocks"], states["blocks"]))
     h = m.rms_norm(h, params["final_norm"], cfg.norm_eps)
-    logits = _head(cfg, params, h)
+    logits = _head(cfg, params, h, tp=tp)
     return logits, {"prefix": new_prefix, "blocks": new_blocks}
 
 
@@ -535,6 +540,144 @@ def device_append(cfg: ModelConfig, planes: dict, new_cache: dict,
     return out
 
 
+# --------------------------------------------------------- packed weights
+def _pack_quantize(arr: np.ndarray, n_contract: int):
+    """Quantize a dense >=2-D tensor with the shared serving convention
+    (``quant.quantize_symmetric(..., axis=-1)`` on the ORIGINAL shape —
+    identical to ``serve.compress_params``), then fold to the 2-D
+    [K, N_flat] matmul view.  The per-last-axis scale is constant along
+    every contracted (leading) axis, so tiling it across the flattened
+    output axes is exact for the matmul dequantization."""
+    from repro.core import quant
+    shape = arr.shape
+    q, qp = quant.quantize_symmetric(jnp.asarray(arr, jnp.float32), axis=-1)
+    k = int(np.prod(shape[:n_contract]))
+    nf = int(np.prod(shape[n_contract:]))
+    q2 = np.asarray(q).reshape(k, nf)
+    sc = np.broadcast_to(np.asarray(qp.scale, np.float32),
+                         shape).reshape(k, nf)[0]
+    return q2, np.ascontiguousarray(sc)
+
+
+def pack_weights(cfg: ModelConfig, params: dict, *,
+                 min_size: int | None = None,
+                 tile_k: int | None = None) -> tuple[dict, dict]:
+    """Convert the param tree's large projection/FFN matrices to
+    device-resident APack planes (``modules.PackedWeight``), making the
+    compressed form the *live* weight store for serving.
+
+    Packed sites: attention wq/wk/wv (contract d) and wo (contract
+    h, dh), non-MoE FFN w_up/w_gate/w_down, and the untied lm head.
+    Dense by design: the embedding (it serves the token *lookup*), MoE
+    expert stacks and recurrent/mLSTM/sLSTM internals (their einsum
+    structure doesn't reduce to the [K, N] projection the fused kernel
+    serves), and anything under ``min_size`` elements (table + scale
+    overhead would beat the savings).
+
+    Scanned stacks are packed per layer (per-layer weight-mode tables
+    track per-layer statistics) and re-stacked with a leading layer axis
+    (``stack_compressed``) so ``lax.scan`` drives them unchanged.
+
+    Returns ``(packed_params, stats)`` — stats carries the byte
+    accounting the engine's ``weight_stats`` reports (dense/native,
+    int8, payload, slotted, scale streams)."""
+    from repro.kernels import decompress_matmul as dm
+    if min_size is None:
+        min_size = dm.DEFAULT_WEIGHT_MIN_SIZE
+
+    stats = {"packed_tensors": 0, "native_bytes": 0, "int8_bytes": 0,
+             "payload_bytes": 0, "slotted_bytes": 0, "scale_bytes": 0}
+
+    def _account(cws, arr):
+        stats["packed_tensors"] += 1
+        stats["native_bytes"] += arr.size * arr.dtype.itemsize
+        stats["int8_bytes"] += arr.size
+        for cw in cws:
+            stats["payload_bytes"] += -(-cw.payload_bits // 8)
+            stats["slotted_bytes"] += (cw.sym_plane.size * 4
+                                       + cw.ofs_plane.size * 4
+                                       + cw.stored.size * 4)
+            stats["scale_bytes"] += cw.scale.size * 4
+
+    def _tile_k(k: int) -> int:
+        return tile_k or min(dm.DEFAULT_TILE_K, k)
+
+    def _pack_tensor(w, n_contract):
+        arr = np.asarray(jax.device_get(w))
+        q2, sc = _pack_quantize(arr, n_contract)
+        cw = dm.compress_quantized(q2, sc, _tile_k(q2.shape[0]))
+        _account([cw], arr)
+        return m.PackedWeight(cw, tuple(arr.shape), n_contract,
+                              str(arr.dtype))
+
+    def _pack_stacked(w, n_contract):
+        arr = np.asarray(jax.device_get(w))           # [L, ...]
+        cws = []
+        for l in range(arr.shape[0]):
+            q2, sc = _pack_quantize(arr[l], n_contract)
+            cws.append(dm.compress_quantized(q2, sc, _tile_k(q2.shape[0])))
+        _account(cws, arr)
+        return m.PackedWeight(dm.stack_compressed(cws), tuple(arr.shape[1:]),
+                              n_contract, str(arr.dtype))
+
+    def _elig(w, stacked):
+        per_layer = int(np.prod(w.shape[1:] if stacked else w.shape))
+        return per_layer >= min_size
+
+    def _pack_block(blk, kind, stacked):
+        pack = _pack_stacked if stacked else _pack_tensor
+        out = dict(blk)
+        if kind in ATTN_KINDS:
+            inner = dict(blk["inner"])
+            for name, nc in (("wq", 1), ("wk", 1), ("wv", 1), ("wo", 2)):
+                if _elig(inner[name], stacked):
+                    inner[name] = pack(inner[name], nc)
+            out["inner"] = inner
+        if "ffn" in blk and "router" not in blk["ffn"]:
+            ffn = dict(blk["ffn"])
+            for name in ("w_up", "w_gate", "w_down"):
+                if name in ffn and _elig(ffn[name], stacked):
+                    ffn[name] = pack(ffn[name], 1)
+            out["ffn"] = ffn
+        return out
+
+    out = dict(params)
+    if "unembed" in params and _elig(params["unembed"], False):
+        out["unembed"] = _pack_tensor(params["unembed"], 1)
+    if "prefix" in params:
+        out["prefix"] = [_pack_block(b, kind, False)
+                         for kind, b in zip(cfg.prefix_pattern,
+                                            params["prefix"])]
+    out["blocks"] = tuple(_pack_block(b, kind, True)
+                          for kind, b in zip(cfg.cycle, params["blocks"]))
+    return out, stats
+
+
+def packed_param_specs(params: dict, n_model: int):
+    """Param-tree PartitionSpecs for the mesh step: dense leaves
+    replicate (``P()``, the pre-packing behavior), PACKED plane leaves
+    K-split over "model" when the layout divides (``sharding.
+    packed_leaf_pspecs``) — the stream axis is kt-major, so a contiguous
+    stream shard is a contiguous K-tile range and ``modules.packed_proj``
+    reassembles the row-parallel partials with a ``psum``."""
+    from jax.sharding import PartitionSpec as P
+
+    def one(x):
+        if not isinstance(x, m.PackedWeight):
+            return P()
+        cw = x.cw
+        nk = cw.k_pad // cw.tile_k
+        splittable = (n_model > 1 and cw.k == cw.k_pad
+                      and nk % n_model == 0)
+        leaves, treedef = jax.tree_util.tree_flatten(x)
+        return jax.tree_util.tree_unflatten(
+            treedef, shd.packed_leaf_pspecs(leaves, splittable=splittable))
+
+    flat, treedef = jax.tree_util.tree_flatten(
+        params, is_leaf=lambda x: isinstance(x, m.PackedWeight))
+    return jax.tree_util.tree_unflatten(treedef, [one(x) for x in flat])
+
+
 # ------------------------------------------------ mesh-sharded decode step
 def mesh_axis_sizes(mesh) -> tuple[int, int]:
     """(n_data, n_model) of a serving mesh; absent axes count as 1."""
@@ -604,7 +747,8 @@ def _state_specs(cfg: ModelConfig, P):
     return {"prefix": prefix, "blocks": blocks}
 
 
-def build_sharded_step(cfg: ModelConfig, mesh, *, backend: str | None = None):
+def build_sharded_step(cfg: ModelConfig, mesh, *, backend: str | None = None,
+                       params: dict | None = None):
     """The mesh-sharded fused decode step: ONE ``jit(shard_map(...))``
     combining ``decode_step_paged`` + ``device_append`` +
     ``states_from_step`` per step.
@@ -630,7 +774,12 @@ def build_sharded_step(cfg: ModelConfig, mesh, *, backend: str | None = None):
     dispatch) to ``batch`` int32s.  Targets must be claimed *before*
     the call (host metadata is independent of the decode output), which
     is what lets the whole step stay a single device program with zero
-    ``device_get`` per shard."""
+    ``device_get`` per shard.
+
+    ``params``: pass the (possibly APack-packed) param tree to derive
+    per-leaf weight specs — packed plane leaves K-split over "model"
+    where the layout divides (see ``packed_param_specs``); ``None``
+    keeps the legacy fully-replicated ``P()``."""
     from jax.sharding import PartitionSpec as P
     n_data, n_model = mesh_axis_sizes(mesh)
     if n_model > 1 and cfg.num_kv_heads % n_model:
@@ -656,10 +805,12 @@ def build_sharded_step(cfg: ModelConfig, mesh, *, backend: str | None = None):
     state_specs = _state_specs(cfg, P)
     meta_specs = _paged_tree_specs(cfg, P("data"), P(None, "data"), {})
     target_specs = _paged_tree_specs(cfg, P("data"), P(None, "data"), None)
+    param_specs = (P() if params is None
+                   else packed_param_specs(params, n_model))
     from jax.experimental.shard_map import shard_map
     stepped = shard_map(
         _body, mesh=mesh,
-        in_specs=(P(), plane_specs, state_specs, meta_specs,
+        in_specs=(param_specs, plane_specs, state_specs, meta_specs,
                   P("data"), P("data"), target_specs),
         out_specs=(P("data"), P("data"), plane_specs, state_specs),
         check_rep=False)

@@ -63,6 +63,88 @@ def _chunk_of(s: int) -> int:
     return c
 
 
+# -------------------------------------------------------- packed weights
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedWeight:
+    """An APack-compressed projection weight living in the param tree.
+
+    Wraps a ``kernels.decompress_matmul.CompressedLinear`` (the 2-D
+    [K, N] compressed view) plus the metadata needed to stand in for the
+    original dense tensor at its einsum site: the original ``shape``,
+    how many *leading* axes contract (``n_contract`` — projection
+    weights in this codebase always contract their leading axes: wq
+    [d, h, dh] contracts d, wo [h, dh, d] contracts h and dh), and the
+    dense ``dtype`` string the activation path expects back.
+
+    Registered as a pytree whose single child is the CompressedLinear,
+    so ``jax.lax.scan`` over a stacked block tree slices the plane
+    leaves per layer and rebuilds a per-layer ``PackedWeight`` with the
+    shared static aux — dense and packed params flow through the same
+    model code."""
+
+    cw: object               # CompressedLinear (child pytree)
+    shape: tuple             # original dense weight shape
+    n_contract: int          # leading axes folded into K
+    dtype: str               # original dense dtype
+
+    def tree_flatten(self):
+        return ((self.cw,), (self.shape, self.n_contract, self.dtype))
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(leaves[0], *aux)
+
+
+# apack: hot-path-root(traced)
+def packed_proj(x: jax.Array, pw: PackedWeight,
+                tp: tuple[str, int] | None = None) -> jax.Array:
+    """Apply a packed projection: flatten ``x``'s trailing contraction
+    axes into K, run the fused decompress-matmul, restore output axes.
+
+    ``tp=(axis_name, size)``: inside a ``shard_map`` body whose packed
+    planes were K-split over the mesh axis (stream layout is kt-major,
+    so a contiguous stream-axis shard == a contiguous K-tile range),
+    each shard multiplies its local K rows and the partial products are
+    reassembled with a ``psum`` — row-parallel tensor parallelism.  The
+    local view is detected by comparing the plane's stream count to the
+    global layout; replicated planes (indivisible nk) take the plain
+    path on every shard identically."""
+    from repro.kernels import decompress_matmul as dm
+    cw = pw.cw
+    nc = pw.n_contract
+    lead = x.shape[:-nc]
+    kdim = 1
+    for s in x.shape[-nc:]:
+        kdim *= s
+    x2 = x.reshape(-1, kdim).astype(F32)
+    m = x2.shape[0]
+    block_m = max(8, min(256, -(-m // 8) * 8))
+    nn = cw.n_pad // dm.TILE_N
+    s_global = (cw.k_pad // cw.tile_k) * nn * dm.TILE_N
+    s_local = cw.sym_plane.shape[-1]
+    if tp is not None and s_local != s_global:
+        t = s_global // s_local
+        k_loc = cw.k // t
+        cw_loc = dataclasses.replace(cw, k=k_loc)
+        r0 = jax.lax.axis_index(tp[0]) * k_loc
+        x_loc = jax.lax.dynamic_slice_in_dim(x2, r0, k_loc, axis=1)
+        y = dm.compressed_matmul(x_loc, cw_loc, block_m=block_m)
+        y = jax.lax.psum(y, tp[0])
+    else:
+        y = dm.compressed_matmul(x2, cw, block_m=block_m)
+    return y.reshape(*lead, *pw.shape[nc:]).astype(x.dtype)
+
+
+def proj(x: jax.Array, w, eq: str,
+         tp: tuple[str, int] | None = None) -> jax.Array:
+    """Projection dispatch: dense einsum, or the fused APack path when
+    the param tree holds a ``PackedWeight`` at this site."""
+    if isinstance(w, PackedWeight):
+        return packed_proj(x, w, tp=tp)
+    return jnp.einsum(eq, x, w.astype(x.dtype))
+
+
 # --------------------------------------------------------------- attention
 def init_attention(cfg: ModelConfig, key) -> dict:
     d, h, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -108,12 +190,9 @@ def attention_full(p: dict, x: jax.Array, cfg: ModelConfig, *,
     b, s, d = x.shape
     h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     g = h // hkv
-    q = shd.constrain(jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype)),
-                      "heads")
-    k = shd.constrain(jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype)),
-                      "heads")
-    v = shd.constrain(jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype)),
-                      "heads")
+    q = shd.constrain(proj(x, p["wq"], "bsd,dhk->bshk"), "heads")
+    k = shd.constrain(proj(x, p["wk"], "bsd,dhk->bshk"), "heads")
+    v = shd.constrain(proj(x, p["wv"], "bsd,dhk->bshk"), "heads")
     if cfg.qk_norm:
         q = rms_norm(q, p["q_norm"], cfg.norm_eps)
         k = rms_norm(k, p["k_norm"], cfg.norm_eps)
@@ -148,7 +227,7 @@ def attention_full(p: dict, x: jax.Array, cfg: ModelConfig, *,
     _, oc = jax.lax.scan(body, (), (qc, starts))
     out = shd.constrain(
         oc.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, dh), "heads")
-    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    y = proj(out, p["wo"], "bshk,hkd->bsd")
     if local:
         w_sz = cfg.window_size
         if true_len is not None:
@@ -196,9 +275,9 @@ def attention_step(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
     h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     g = h // hkv
     pos = jnp.broadcast_to(jnp.asarray(pos), (b,))
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
-    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
-    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    q = proj(x, p["wq"], "bsd,dhk->bshk")
+    k = proj(x, p["wk"], "bsd,dhk->bshk")
+    v = proj(x, p["wv"], "bsd,dhk->bshk")
     if cfg.qk_norm:
         q = rms_norm(q, p["q_norm"], cfg.norm_eps)
         k = rms_norm(k, p["k_norm"], cfg.norm_eps)
@@ -236,8 +315,8 @@ def attention_step(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
         scores = cfg.logit_softcap * jnp.tanh(scores / cfg.logit_softcap)
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", w, vc.astype(F32))
-    y = jnp.einsum("bhk,hkd->bd", out.reshape(b, h, dh).astype(x.dtype),
-                   p["wo"].astype(x.dtype))[:, None, :]
+    y = proj(out.reshape(b, h, dh).astype(x.dtype), p["wo"],
+             "bhk,hkd->bd")[:, None, :]
     if int8_kv:
         return y, cache
     return y, {"k": kc, "v": vc}
@@ -291,9 +370,9 @@ def paged_attention_step(p: dict, x: jax.Array, planes: dict, meta: dict,
     h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     g = h // hkv
     pos = jnp.broadcast_to(jnp.asarray(pos), (b,))
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
-    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
-    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    q = proj(x, p["wq"], "bsd,dhk->bshk", tp=tp)
+    k = proj(x, p["wk"], "bsd,dhk->bshk", tp=tp)
+    v = proj(x, p["wv"], "bsd,dhk->bshk", tp=tp)
     if cfg.qk_norm:
         q = rms_norm(q, p["q_norm"], cfg.norm_eps)
         k = rms_norm(k, p["k_norm"], cfg.norm_eps)
@@ -349,8 +428,8 @@ def paged_attention_step(p: dict, x: jax.Array, planes: dict, meta: dict,
     l_tot = lr * alpha + w_self
     out = (accr * alpha[..., None] + w_self[..., None] * vd[:, :, None, :]) \
         / l_tot[..., None]
-    y = jnp.einsum("bhk,hkd->bd", out.reshape(b, h, dh).astype(x.dtype),
-                   p["wo"].astype(x.dtype))[:, None, :]
+    y = proj(out.reshape(b, h, dh).astype(x.dtype), p["wo"],
+             "bhk,hkd->bd", tp=tp)[:, None, :]
     return y, {"k": qk, "v": qv, "k_scale": sk, "v_scale": sv}
 
 
@@ -379,19 +458,22 @@ def init_mlp(cfg: ModelConfig, key, d_ff: int | None = None) -> dict:
     return p
 
 
-def mlp(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
-    up = shd.constrain(x @ p["w_up"].astype(x.dtype), "ffn_hidden")
+def mlp(p: dict, x: jax.Array, cfg: ModelConfig,
+        tp: tuple[str, int] | None = None) -> jax.Array:
+    up = shd.constrain(proj(x, p["w_up"], "...k,kn->...n", tp=tp),
+                       "ffn_hidden")
     if cfg.mlp_variant == "swiglu":
-        h = jax.nn.silu(x @ p["w_gate"].astype(x.dtype)) * up
+        h = jax.nn.silu(proj(x, p["w_gate"], "...k,kn->...n", tp=tp)) * up
     elif cfg.mlp_variant == "geglu":
-        h = jax.nn.gelu(x @ p["w_gate"].astype(x.dtype)) * up
+        h = jax.nn.gelu(proj(x, p["w_gate"], "...k,kn->...n", tp=tp)) * up
     elif cfg.mlp_variant == "gelu":
         h = jax.nn.gelu(up)
     elif cfg.mlp_variant == "relu2":
         h = jnp.square(jax.nn.relu(up))
     else:
         raise ValueError(cfg.mlp_variant)
-    return shd.constrain(h, "ffn_hidden") @ p["w_down"].astype(x.dtype)
+    return proj(shd.constrain(h, "ffn_hidden"), p["w_down"], "...k,kn->...n",
+                tp=tp)
 
 
 # --------------------------------------------------------------------- moe

@@ -244,6 +244,34 @@ def plane_pspecs(planes: dict | None = None) -> dict:
                                         else planes)}
 
 
+# Packed-WEIGHT plane rules (modules.PackedWeight / CompressedLinear leaf
+# order).  The weight stream layout is kt-major — stream index
+# (kt*nn + j)*TILE_N + c — so a contiguous shard of the stream (last)
+# axis is a contiguous K-tile range: sharding sym/ofs/stored over
+# "model" K-splits the matmul and ``modules.packed_proj`` reassembles
+# the row-parallel partials with a psum.  Dequant scale is per OUTPUT
+# column and the matmul is linear in it, so it replicates exactly;
+# table planes (v_min/ol/cum) are tiny and replicate.  Weight planes
+# never shard over "data": every decode job reads every weight.
+PACKED_LEAF_KINDS = ("sym", "ofs", "stored", "v_min", "ol", "cum", "scale")
+_PACKED_SPLIT_KINDS = frozenset({"sym", "ofs", "stored"})
+
+
+def packed_leaf_pspecs(leaves, *, splittable: bool) -> list[P]:
+    """PartitionSpecs for one ``CompressedLinear``'s leaves, in flatten
+    order (``PACKED_LEAF_KINDS``; a stacked layer axis, if present, just
+    adds a leading replicated dim).  ``splittable=False`` (an
+    indivisible K-tile count, or no model axis) degrades every leaf to
+    replicated — same fall-back policy as ``fit_spec``."""
+    specs = []
+    for kind, leaf in zip(PACKED_LEAF_KINDS, leaves):
+        if splittable and kind in _PACKED_SPLIT_KINDS:
+            specs.append(P(*([None] * (leaf.ndim - 1)), "model"))
+        else:
+            specs.append(P())
+    return specs
+
+
 def plane_shardings(mesh: Mesh, planes: dict) -> dict:
     """NamedSharding dict for placing the pool planes on a serving mesh.
 

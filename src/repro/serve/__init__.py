@@ -1,3 +1,3 @@
-from .engine import (AdmissionImpossible, Request, ServeEngine,
-                     compress_params, decompress_params)
+from .engine import (DEFAULT_WEIGHT_MIN_SIZE, AdmissionImpossible, Request,
+                     ServeEngine, compress_params, decompress_params)
 from .faults import FaultInjector, PageIntegrityError, TransferDropped

@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.core import quant, tables
 from repro.kernels import fastpath, ops
+from repro.kernels.decompress_matmul import DEFAULT_WEIGHT_MIN_SIZE
 from repro.models import model as M
 from repro.models import modules as m
 from repro.models.config import ModelConfig
@@ -157,7 +158,9 @@ class CompressedParams:
         return self.original_bytes / max(self.compressed_bytes, 1)
 
 
-def compress_params(params: Any, min_size: int = 16384) -> CompressedParams:
+def compress_params(params: Any,
+                    min_size: int = DEFAULT_WEIGHT_MIN_SIZE
+                    ) -> CompressedParams:
     """int8-quantize + APack-compress every large matrix in a param tree."""
     leaves, treedef = jax.tree.flatten(params)
     containers: dict = {}
@@ -177,8 +180,12 @@ def compress_params(params: Any, min_size: int = 16384) -> CompressedParams:
             # (tests/test_serve.py pins table.mode == "weight".)
             table = tables.table_for(u.reshape(-1), is_activation=False)
             ct = fastpath.compress_np(u, table)
-            containers[i] = (ct, np.asarray(qp.scale), str(arr.dtype))
-            comp += ct.total_bits // 8
+            scale = np.asarray(qp.scale)
+            containers[i] = (ct, scale, str(arr.dtype))
+            # ceil-bytes, and the per-channel dequant scale ships with the
+            # payload — flooring the bits and dropping the scale stream
+            # (the old accounting) overstated the ratio
+            comp += -(-ct.total_bits // 8) + scale.nbytes
         else:
             passthrough[i] = arr
             comp += arr.nbytes
@@ -218,9 +225,25 @@ class ServeEngine:
                  scheduler: str = "sync",
                  prefill_chunk_tokens: int | None = None,
                  mesh=None,
-                 faults=None):
+                 faults=None,
+                 weights: str | None = None,
+                 weight_min_size: int | None = None,
+                 weight_tile_k: int | None = None):
         self.cfg = cfg
         self.params = params
+        # packed weight store: ``weights="apack-int8"`` converts every
+        # large projection/FFN matrix to CompressedLinear planes resident
+        # in HBM (model.pack_weights) and the forward routes those sites
+        # through the fused decompress-matmul — the weight-read stream at
+        # decode becomes the compressed footprint, not the dense one.
+        self.weights_mode = weights
+        self._weight_stats: dict | None = None
+        if weights is not None:
+            if weights != "apack-int8":
+                raise ValueError(f"unknown weights mode {weights!r}; "
+                                 "expected 'apack-int8' or None")
+            self.params, self._weight_stats = M.pack_weights(
+                cfg, params, min_size=weight_min_size, tile_k=weight_tile_k)
         self.max_batch = max_batch
         self.max_len = max_len
         self.eos_id = eos_id
@@ -339,7 +362,7 @@ class ServeEngine:
                 self.kv.enable_device_pool(max_batch, mesh=mesh)
                 if mesh is not None:
                     self._step_mesh = M.build_sharded_step(
-                        cfg, mesh, backend=kv_backend)
+                        cfg, mesh, backend=kv_backend, params=self.params)
                 self._decode_paged = jax.jit(
                     lambda p, pl, st, mt, t, pos: M.decode_step_paged(
                         cfg, p, pl, st, mt, t, pos, backend=kv_backend))
@@ -1281,6 +1304,31 @@ class ServeEngine:
                     head, need, pool,
                     f"{stalled} consecutive no-progress steps with zero "
                     "active slots")
+
+    def weight_stats(self) -> dict:
+        """Weight-store accounting for the packed serving path.
+
+        With ``weights="apack-int8"`` every decode step streams the
+        compressed planes (APack payload + the per-channel dequant scale)
+        where the dense engine streams the full weight matrices —
+        ``weight_ratio`` is that per-step read ratio against the int8
+        dense baseline (the quantization is shared by both stores;
+        ``native_ratio`` additionally credits the fp32->int8 narrowing).
+        Cumulative totals scale with ``stats["steps"]``: weights are read
+        once per step regardless of batch size."""
+        if self._weight_stats is None:
+            return {"weights": "dense"}
+        s = dict(self._weight_stats)
+        comp = s["payload_bytes"] + s["scale_bytes"]
+        s["weights"] = "apack-int8"
+        s["compressed_read_bytes_per_step"] = comp
+        s["dense_read_bytes_per_step"] = s["int8_bytes"]
+        s["weight_ratio"] = comp / max(s["int8_bytes"], 1)
+        s["native_ratio"] = comp / max(s["native_bytes"], 1)
+        steps = self.stats["steps"]
+        s["compressed_read_bytes_total"] = comp * steps
+        s["dense_read_bytes_total"] = s["int8_bytes"] * steps
+        return s
 
     def kv_stats(self) -> dict:
         """Raw-vs-compressed KV traffic + pool occupancy (paged mode).

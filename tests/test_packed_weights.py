@@ -1,0 +1,366 @@
+"""Packed-weight serving tests: the APack planes as the live weight
+store (``ServeEngine(weights="apack-int8")``), the fused
+decompress-matmul routing in ``models.modules.proj``, and the four
+weight-codec regressions this PR fixes:
+
+1. kernel accumulation — ``out_ref`` accumulation across non-consecutive
+   grid revisits (Mosaic only guarantees consecutive revisits); partial
+   products must accumulate in VMEM scratch and flush once,
+2. quantization-axis mismatch — ``compress_linear``'s private
+   ``abs(w).max(axis=0)`` vs the serving layer's
+   ``quantize_symmetric(..., axis=-1)`` diverged on >2-D tensors,
+3. ratio accounting — ``compress_params`` floored payload bits to bytes
+   and dropped the dequant scale stream, overstating the ratio,
+4. min_size inconsistency — the CLI hardcoded 4096 while the engine
+   defaulted 16384; both now share ``DEFAULT_WEIGHT_MIN_SIZE``.
+"""
+import dataclasses
+import inspect
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro import configs
+from repro.core import quant
+from repro.kernels import decompress_matmul as dm
+from repro.models import model as M
+from repro.models import modules as mm
+from repro.serve import (DEFAULT_WEIGHT_MIN_SIZE, Request, ServeEngine,
+                         compress_params)
+
+KEY = jax.random.PRNGKey(0)
+SRC = Path(list(repro.__path__)[0]).resolve()
+
+
+def heavy_tail(rs, shape, sigma=0.015, outlier=0.64):
+    """Compressible weights: narrow normal bulk + one planted outlier
+    every 32 rows of each output channel, so every per-channel int8
+    range is outlier-set and the bulk quantizes to a few codes."""
+    flat = rs.normal(0.0, sigma, shape).reshape(-1, shape[-1])
+    for c in range(flat.shape[1]):
+        rows = rs.randint(0, 32) + 32 * np.arange(max(flat.shape[0] // 32, 1))
+        rows = rows[rows < flat.shape[0]]
+        flat[rows, c] = rs.choice([-1.0, 1.0], rows.size) * outlier
+    return flat.reshape(shape).astype(np.float32)
+
+
+def redraw_params(params, rs, min_size=1024):
+    def one(w):
+        arr = np.asarray(jax.device_get(w))
+        if arr.ndim < 2 or arr.dtype.kind != "f" or arr.size < min_size:
+            return w
+        return jnp.asarray(heavy_tail(rs, arr.shape).astype(arr.dtype))
+    return jax.tree.map(one, params)
+
+
+# ------------------------------------------- kernel accumulation regression
+class TestKernelAccumulation:
+    def test_no_output_block_accumulation(self):
+        """Structural pin: the kernel must never read-modify-write
+        ``out_ref`` across grid steps (the accumulation bug — Mosaic
+        does not preserve a revisited output block across the
+        non-consecutive revisits this grid produces).  The running sum
+        lives in scratch and ``out_ref`` is written exactly once, under
+        the final-K-tile guard."""
+        src = inspect.getsource(dm._fused_kernel)
+        assert "out_ref[...] +=" not in src.replace("  ", " ")
+        flush = src[src.index("kt == nk - 1"):]
+        assert "out_ref[...] = acc_ref" in flush
+
+    def test_multi_ktile_multi_mblock_matches_reference(self):
+        """The failing-before shape: nk > 1 AND multiple M blocks, so
+        every output block is revisited with other M blocks in between.
+        With the bug, later K-tiles overwrite (or misread) the partial
+        sums; fixed, the kernel matches the decode-then-dense oracle."""
+        rs = np.random.RandomState(0)
+        w = heavy_tail(rs, (96, 40))
+        x = rs.normal(0, 1, (20, 96)).astype(np.float32)
+        cw = dm.compress_linear(w, tile_k=32)          # nk = 3
+        y = dm.compressed_matmul(jnp.asarray(x), cw, block_m=8)  # 3 M blocks
+        ref = dm.reference_matmul(jnp.asarray(x), cw)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_block_m_invariance(self):
+        """The result cannot depend on the M-block partitioning — a
+        direct consequence of the scratch strip holding per-row-block
+        sums correctly across interleaved visits."""
+        rs = np.random.RandomState(1)
+        w = heavy_tail(rs, (64, 24))
+        x = rs.normal(0, 1, (17, 64)).astype(np.float32)
+        cw = dm.compress_linear(w, tile_k=32)
+        ys = [np.asarray(dm.compressed_matmul(jnp.asarray(x), cw,
+                                              block_m=bm))
+              for bm in (8, 16, 32)]
+        for y in ys[1:]:
+            np.testing.assert_array_equal(ys[0], y)
+
+
+# -------------------------------------------- quantization-axis regression
+class TestCrossPathQuantization:
+    def test_3d_tensor_bit_parity_with_serving_path(self):
+        """The mismatch bug: for a wq-like [d, h, dh] tensor the kernel
+        path used ``abs(w).max(axis=0)`` over the folded 2-D view (one
+        scale per flattened (h, dh) column) while the serving layer
+        quantizes the ORIGINAL shape with axis=-1 (one scale per dh,
+        reduced over d AND h).  Both paths must produce bit-identical
+        int8 codes and dequantized values."""
+        rs = np.random.RandomState(2)
+        w = heavy_tail(rs, (64, 4, 16))
+        # serving-layer convention, on the original shape
+        q_ref, qp = quant.quantize_symmetric(jnp.asarray(w), axis=-1)
+        q_ref = np.asarray(q_ref).reshape(64, 64)
+        sc_ref = np.broadcast_to(np.asarray(qp.scale, np.float32),
+                                 w.shape).reshape(64, 64)[0]
+        # pack_weights' folded view
+        q2, sc = M._pack_quantize(w, 1)
+        np.testing.assert_array_equal(q2, q_ref)
+        np.testing.assert_array_equal(sc, sc_ref)
+
+    def test_compress_linear_roundtrip_matches_dequant(self):
+        """compress_linear -> reference decode dequantizes bit-identically
+        to quantize_symmetric's own roundtrip (same codes, same scale)."""
+        rs = np.random.RandomState(3)
+        w = heavy_tail(rs, (64, 32))
+        cw = dm.compress_linear(w, tile_k=32)
+        got = np.asarray(dm.reference_matmul(jnp.eye(64, dtype=jnp.float32),
+                                             cw))
+        q, qp = quant.quantize_symmetric(jnp.asarray(w), axis=-1)
+        want = np.asarray(q, np.float32) * np.asarray(qp.scale, np.float32)
+        np.testing.assert_array_equal(got, want)
+
+
+# -------------------------------------------- ratio accounting regression
+class TestRatioAccounting:
+    def test_compressed_bytes_include_ceil_and_scale(self):
+        """The accounting bug floored ``total_bits // 8`` and dropped
+        the per-channel scale stream.  The corrected compressed_bytes
+        must equal ceil-bytes(payload) + scale bytes + passthrough."""
+        rs = np.random.RandomState(4)
+        tree = {"w": jnp.asarray(heavy_tail(rs, (64, 64))),
+                "b": jnp.zeros((7,), jnp.float32)}
+        cp = compress_params(tree, min_size=1024)
+        assert len(cp.containers) == 1
+        (ct, scale, _dtype), = cp.containers.values()
+        expect = -(-ct.total_bits // 8) + scale.nbytes + 7 * 4
+        assert cp.compressed_bytes == expect
+        assert scale.nbytes == 64 * 4          # per-channel f32, not dropped
+
+
+# --------------------------------------------- min_size shared default
+class TestMinSizeConsistency:
+    def test_one_shared_default(self):
+        assert dm.DEFAULT_WEIGHT_MIN_SIZE == DEFAULT_WEIGHT_MIN_SIZE
+        sig = inspect.signature(compress_params)
+        assert sig.parameters["min_size"].default == DEFAULT_WEIGHT_MIN_SIZE
+
+    def test_pack_weights_default_matches(self):
+        """pack_weights(min_size=None) must use the shared default: the
+        smoke model's largest packable tensor is under 16384 elements,
+        so the default packs nothing — while min_size=1024 packs the
+        projection/FFN sites."""
+        cfg = configs.get_smoke_config("qwen3-1.7b")
+        params = M.init_params(cfg, KEY)
+        _, st_default = M.pack_weights(cfg, params)
+        _, st_small = M.pack_weights(cfg, params, min_size=1024)
+        assert st_default["packed_tensors"] == 0
+        assert st_small["packed_tensors"] == 7
+
+    def test_cli_uses_shared_default(self):
+        """The CLI regression: launch/serve.py hardcoded min_size=4096
+        while the engine defaulted 16384.  The flag must default to the
+        shared constant and the hardcode must be gone."""
+        src = (SRC / "launch" / "serve.py").read_text()
+        assert "default=DEFAULT_WEIGHT_MIN_SIZE" in src
+        assert "4096" not in src
+        assert "min_size=args.weight_min_size" in src
+
+
+# ------------------------------------------------- pack_weights structure
+class TestPackWeights:
+    def test_packed_sites_and_dense_exclusions(self):
+        cfg = configs.get_smoke_config("qwen3-1.7b")
+        params = M.init_params(cfg, KEY)
+        packed, stats = M.pack_weights(cfg, params, min_size=1024)
+        blk = packed["blocks"][0]
+        for name in ("wq", "wk", "wv", "wo"):
+            assert isinstance(blk["inner"][name], mm.PackedWeight), name
+        for name in ("w_up", "w_gate", "w_down"):
+            assert isinstance(blk["ffn"][name], mm.PackedWeight), name
+        # the embedding serves the token lookup: stays dense
+        assert isinstance(packed["embed"], jax.Array)
+        assert stats["packed_tensors"] == 7
+        assert 0 < stats["payload_bytes"] < stats["int8_bytes"] * 2
+        assert stats["scale_bytes"] > 0
+
+    def test_stacked_planes_carry_layer_axis(self):
+        cfg = configs.get_smoke_config("qwen3-1.7b")
+        params = M.init_params(cfg, KEY)
+        packed, _ = M.pack_weights(cfg, params, min_size=1024)
+        pw = packed["blocks"][0]["ffn"]["w_up"]
+        L = cfg.num_layers // len(cfg.cycle)
+        assert pw.cw.sym_plane.shape[0] == L
+        assert pw.cw.stored.shape[0] == L
+        assert pw.shape == (cfg.d_model, cfg.d_ff)
+
+    def test_packed_param_specs_split_rules(self):
+        """K-split over "model" only when the stream layout divides:
+        stream axis sharded for sym/ofs/stored, tables and scale
+        replicated, dense leaves P()."""
+        from jax.sharding import PartitionSpec as P
+        cfg = configs.get_smoke_config("qwen3-1.7b")
+        params = M.init_params(cfg, KEY)
+        packed, _ = M.pack_weights(cfg, params, min_size=1024, tile_k=32)
+        # d_model=64, tile_k=32 -> nk=2, divisible by n_model=2
+        specs = M.packed_param_specs(packed, n_model=2)
+        sp = specs["blocks"][0]["ffn"]["w_up"]
+        leaves = jax.tree_util.tree_leaves(
+            sp, is_leaf=lambda x: isinstance(x, P))
+        split = [s for s in leaves if s and s[-1] == "model"]
+        assert len(split) == 3                  # sym, ofs, stored
+        assert specs["embed"] == P()
+        # indivisible nk -> replicate everywhere
+        specs1 = M.packed_param_specs(packed, n_model=3)
+        sp1 = specs1["blocks"][0]["ffn"]["w_up"]
+        assert all(s == P() for s in jax.tree_util.tree_leaves(
+            sp1, is_leaf=lambda x: isinstance(x, P)))
+
+
+# ------------------------------------------------- packed serving parity
+def _decode_wave(cfg, params, prompts, max_new, **engine_kw):
+    eng = ServeEngine(cfg, params, max_batch=len(prompts),
+                      max_len=max(len(p) for p in prompts) + max_new + 8,
+                      **engine_kw)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained(max_steps=600)
+    assert all(r.done and r.error is None for r in reqs)
+    return reqs, eng
+
+
+def _parity(cfg, packed_params, dense_params, reqs, prompt_len):
+    """Teacher-forced parity: re-score the packed engine's sequences
+    under both weight stores with one full forward each.  Free-running
+    greedy decode compounds a single near-tie argmax flip, so the
+    lockstep comparison is the per-position bound."""
+    seqs = [np.concatenate([r.prompt, np.asarray(r.tokens, np.int32)])
+            for r in reqs]
+    batch = {"tokens": jnp.asarray(np.stack(seqs), jnp.int32)}
+    lp, _, _ = M.forward(cfg, packed_params, batch, remat=False)
+    ld, _, _ = M.forward(cfg, dense_params, batch, remat=False)
+    pred = slice(prompt_len - 1, -1)
+    lp = lp[:, pred].astype(jnp.float32)
+    ld = ld[:, pred].astype(jnp.float32)
+    agree = float((jnp.argmax(lp, -1) == jnp.argmax(ld, -1)).mean())
+    return agree, float(jnp.max(jnp.abs(lp - ld)))
+
+
+def _packed_and_dense(cfg, seed=7):
+    params = redraw_params(M.init_params(cfg, KEY),
+                           np.random.RandomState(seed))
+    packed, _ = M.pack_weights(cfg, params, min_size=1024)
+
+    def deq(pw, w):
+        if not isinstance(pw, mm.PackedWeight):
+            return w
+        q, qp = quant.quantize_symmetric(jnp.asarray(w, jnp.float32),
+                                         axis=-1)
+        return (q.astype(jnp.float32) * qp.scale).astype(w.dtype)
+
+    dense_q = jax.tree.map(deq, packed, params,
+                           is_leaf=lambda x: isinstance(x, mm.PackedWeight))
+    return params, dense_q
+
+
+class TestPackedServing:
+    def _run(self, cfg, requests=3, prompt_len=8, max_new=5):
+        params, dense_q = _packed_and_dense(cfg)
+        rng = np.random.default_rng(5)
+        prompts = [rng.integers(0, cfg.vocab_size, prompt_len)
+                   .astype(np.int32) for _ in range(requests)]
+        kw = dict(kv_page_size=4, kv_calib_pages=2)
+        reqs_p, eng_p = _decode_wave(cfg, params, prompts, max_new,
+                                     weights="apack-int8",
+                                     weight_min_size=1024, **kw)
+        _decode_wave(cfg, dense_q, prompts, max_new, **kw)
+        agree, logit_diff = _parity(cfg, eng_p.params, dense_q, reqs_p,
+                                    prompt_len)
+        assert agree >= 0.95, (agree, logit_diff)
+        # both stores hold the SAME int8 codes; the gap is bf16 weight
+        # rounding on the dense einsum + f32 accumulation order
+        assert logit_diff < 0.5, logit_diff
+        ws = eng_p.weight_stats()
+        assert ws["weights"] == "apack-int8"
+        assert ws["weight_ratio"] < 1.0
+        assert ws["compressed_read_bytes_per_step"] < \
+            ws["dense_read_bytes_per_step"]
+        return eng_p
+
+    def test_qwen3_lockstep_parity(self):
+        cfg = dataclasses.replace(configs.get_smoke_config("qwen3-1.7b"),
+                                  kv_cache_dtype="apack-int8")
+        self._run(cfg)
+
+    def test_hetero_lockstep_parity(self):
+        cfg = dataclasses.replace(configs.get_hetero_smoke_config(),
+                                  kv_cache_dtype="apack-int8")
+        self._run(cfg)
+
+    def test_dense_default_unchanged(self):
+        """weights=None keeps the dense store: no PackedWeight leaves,
+        weight_stats reports the dense sentinel."""
+        cfg = configs.get_smoke_config("qwen3-1.7b")
+        params = M.init_params(cfg, KEY)
+        eng = ServeEngine(cfg, params, max_batch=1, max_len=16)
+        assert eng.weight_stats() == {"weights": "dense"}
+        assert not any(isinstance(x, mm.PackedWeight)
+                       for x in jax.tree_util.tree_leaves(
+                           eng.params,
+                           is_leaf=lambda x: isinstance(x, mm.PackedWeight)))
+
+    def test_unknown_weights_mode_rejected(self):
+        cfg = configs.get_smoke_config("qwen3-1.7b")
+        params = M.init_params(cfg, KEY)
+        with pytest.raises(ValueError, match="apack-int8"):
+            ServeEngine(cfg, params, max_batch=1, max_len=16,
+                        weights="int4")
+
+    def test_packed_survives_preempt_spill_resume(self):
+        """kv_pressure rotation with an undersized pool: the packed
+        engine's greedy tokens must be bit-identical to the uncontended
+        packed run — preempt/spill/resume replays through the fused
+        weight path deterministically."""
+        cfg = dataclasses.replace(configs.get_smoke_config("qwen3-1.7b"),
+                                  kv_cache_dtype="apack-int8")
+        params = redraw_params(M.init_params(cfg, KEY),
+                               np.random.RandomState(7))
+        per_req = M.PagedKVCache.pages_for_config(cfg, 12, 4)
+
+        def run(pages, pressure):
+            eng = ServeEngine(cfg, params, max_batch=3, max_len=16,
+                              weights="apack-int8", weight_min_size=1024,
+                              kv_page_size=4, kv_calib_pages=2,
+                              kv_pages=pages, kv_pressure=pressure,
+                              slot_deadline_steps=4 if pressure else None)
+            rng = np.random.default_rng(11)
+            reqs = [Request(rid=i, prompt=rng.integers(
+                        0, cfg.vocab_size, 8).astype(np.int32),
+                        max_new_tokens=4) for i in range(3)]
+            for r in reqs:
+                eng.submit(r)
+            eng.run_until_drained(max_steps=400)
+            return reqs, eng
+
+        ctrl, _ = run(None, False)
+        reqs, eng = run(max(per_req, (3 * per_req) // 2), True)
+        assert all(r.done and r.error is None for r in reqs)
+        for r, c in zip(reqs, ctrl):
+            assert r.tokens == c.tokens
+        assert eng.kv_stats()["kv_spill"]["pages"] > 0
+        assert eng.weight_stats()["weight_ratio"] < 1.0

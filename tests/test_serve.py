@@ -40,6 +40,18 @@ class TestCompressedParams:
         params = M.init_params(cfg, KEY)
         cp = compress_params(params, min_size=1024)
         assert cp.ratio > 2.0     # fp32 -> int8+APack is at least ~4x/1.x
+        # regression: the old accounting floored total_bits // 8 and
+        # dropped the per-channel dequant scale stream — the reported
+        # ratio must reconstruct exactly from ceil-bytes + scale bytes
+        # + passthrough bytes
+        expect = sum(-(-ct.total_bits // 8) + scale.nbytes
+                     for ct, scale, _ in cp.containers.values())
+        expect += sum(arr.nbytes for arr in cp.passthrough.values())
+        assert cp.compressed_bytes == expect
+        floored = sum(ct.total_bits // 8
+                      for ct, _, _ in cp.containers.values())
+        floored += sum(arr.nbytes for arr in cp.passthrough.values())
+        assert cp.compressed_bytes > floored   # the bug overstated ratio
 
     def test_weight_tables_use_weight_mode(self):
         # regression: weight matrices must use the weight-mode partitioning
